@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline):
+per (arch x shape x mesh) the three terms, the bottleneck, and the
+useful-FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).parent.parent / "artifacts" / "dryrun"
+
+
+def run() -> list[tuple]:
+    rows = []
+    if not ART.exists():
+        return [("roofline/missing", "", "run repro.launch.dryrun --all")]
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        tag = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skip":
+            rows.append((tag, "", "skip_long_context_full_attention"))
+            continue
+        if rec["status"] != "ok":
+            rows.append((tag, "", f"ERROR:{rec.get('error', '')[:60]}"))
+            continue
+        r = rec.get("roofline")
+        if not r:
+            rows.append((tag, "", "no-roofline(multi-pod records memory/"
+                         "collectives only)"))
+            continue
+        step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append((tag, round(step * 1e6, 1),
+                     f"bneck={r['bottleneck']};"
+                     f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
+                     f"tx={r['t_collective_s']:.3f};"
+                     f"useful={r['useful_flops_ratio']:.2f};"
+                     f"roofline_frac={r['roofline_fraction']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,46 @@
+"""Paper Fig. 5 (experiment C): strong scaling 24 -> 1512 workers on
+merge (scheduler-adversarial), groupby (shuffle-heavy) and merge_slow
+(10/100/1000 ms tasks)."""
+from __future__ import annotations
+
+from repro.core import benchgraphs
+from benchmarks.common import run_avg
+
+WORKERS = (24, 168, 360, 744, 1512)
+
+
+def run(quick: bool = True) -> list[tuple]:
+    graphs = [
+        ("merge-20K", benchgraphs.merge(20000)),
+        ("groupby", benchgraphs.shuffle(64, dur_ms=11.9, size_kib=1005,
+                                        name="groupby")),
+        ("merge_slow-2K-0.01", benchgraphs.merge_slow(2000, 0.01)),
+        ("merge_slow-2K-0.1", benchgraphs.merge_slow(2000, 0.1)),
+    ]
+    if not quick:
+        graphs.append(("merge_slow-2K-1.0",
+                       benchgraphs.merge_slow(2000, 1.0)))
+    rows = []
+    for name, g in graphs:
+        for server in ("dask", "rsds"):
+            best = None
+            for w in WORKERS:
+                ms, _ = run_avg(g, reps=1, server=server, scheduler="ws",
+                                n_workers=w)
+                if ms is None:
+                    rows.append((f"fig5/{name}/{server}/w{w}", "",
+                                 "timeout"))
+                    continue
+                best = min(best, ms) if best is not None else ms
+                rows.append((f"fig5/{name}/{server}/w{w}",
+                             round(ms * 1e6 / g.n_tasks, 3),
+                             f"makespan_s={ms:.4f}"))
+            if best is not None:
+                rows.append((f"fig5/{name}/{server}/best", "",
+                             f"best_makespan_s={best:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,33 @@
+"""Paper Fig. 2 + Table II (experiment A): random vs work-stealing on the
+Dask-style server, small (24) and medium (168) clusters."""
+from __future__ import annotations
+
+from benchmarks.common import bench_suite, geomean, run_avg
+
+
+def run(scale=None) -> list[tuple]:
+    rows = []
+    gms = {}
+    for workers in (24, 168):
+        speedups = []
+        for g in bench_suite(scale or 0.12):
+            ws, _ = run_avg(g, server="dask", scheduler="ws",
+                            n_workers=workers)
+            rnd, _ = run_avg(g, server="dask", scheduler="random",
+                             n_workers=workers)
+            if ws is None or rnd is None:
+                continue
+            sp = ws / rnd  # >1: random FASTER than ws (paper's speedup)
+            speedups.append(sp)
+            rows.append((f"fig2/random_vs_ws/{g.name}/w{workers}",
+                         round(rnd * 1e6 / g.n_tasks, 3),
+                         f"speedup={sp:.3f}"))
+        gms[workers] = geomean(speedups)
+        rows.append((f"table2/dask_random_geomean/w{workers}", "",
+                     f"geomean_speedup={gms[workers]:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

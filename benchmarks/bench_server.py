@@ -1,0 +1,40 @@
+"""Paper Fig. 3 + Fig. 4 + Table II (experiment B): RSDS-style server vs
+Dask-style server, with work-stealing and with the random scheduler."""
+from __future__ import annotations
+
+from benchmarks.common import bench_suite, geomean, run_avg
+
+
+def run(scale=None) -> list[tuple]:
+    rows = []
+    for workers in (24, 168):
+        sp_ws, sp_rnd = [], []
+        for g in bench_suite(scale or 0.12):
+            base, _ = run_avg(g, server="dask", scheduler="ws",
+                              n_workers=workers)
+            rws, _ = run_avg(g, server="rsds", scheduler="ws",
+                             n_workers=workers)
+            rrnd, _ = run_avg(g, server="rsds", scheduler="random",
+                              n_workers=workers)
+            if base is None:
+                continue
+            if rws is not None:
+                sp_ws.append(base / rws)
+                rows.append((f"fig3/rsds_ws/{g.name}/w{workers}",
+                             round(rws * 1e6 / g.n_tasks, 3),
+                             f"speedup={base / rws:.3f}"))
+            if rrnd is not None:
+                sp_rnd.append(base / rrnd)
+                rows.append((f"fig4/rsds_random/{g.name}/w{workers}",
+                             round(rrnd * 1e6 / g.n_tasks, 3),
+                             f"speedup={base / rrnd:.3f}"))
+        rows.append((f"table2/rsds_ws_geomean/w{workers}", "",
+                     f"geomean_speedup={geomean(sp_ws):.3f}"))
+        rows.append((f"table2/rsds_random_geomean/w{workers}", "",
+                     f"geomean_speedup={geomean(sp_rnd):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,22 @@
+"""Paper Table I: structural properties of the generated benchmark suite
+(task counts, dependency counts, avg duration/size, longest path)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_suite
+
+
+def run() -> list[tuple]:
+    rows = []
+    for g in bench_suite(1.0 / 5):
+        s = g.summary()
+        rows.append((f"table1/{g.name}", "",
+                     f"T={s['n_tasks']};I={s['n_deps']};"
+                     f"AD_ms={s['avg_duration_ms']};"
+                     f"S_kib={s['avg_output_kib']};"
+                     f"LP={s['longest_path']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

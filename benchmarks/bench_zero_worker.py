@@ -1,0 +1,63 @@
+"""Paper Fig. 6/7/8 (experiment D): zero-worker server-overhead isolation.
+Fig 6: RSDS-vs-Dask speedup with the zero worker; Fig 7: AOT per
+benchmark/cluster size; Fig 8: AOT vs task count (top) and worker count
+(bottom) on merge."""
+from __future__ import annotations
+
+from repro.core import benchgraphs
+from benchmarks.common import bench_suite, run_avg
+
+
+def run() -> list[tuple]:
+    rows = []
+    # Fig 6: speedup with zero worker on a structural subset
+    for g in bench_suite(0.08):
+        if g.name.startswith(("wordbag", "vectorizer")):
+            continue  # paper: content-dependent benchmarks excluded
+        d, _ = run_avg(g, server="dask", scheduler="ws", n_workers=168,
+                       zero_worker=True)
+        r, _ = run_avg(g, server="rsds", scheduler="ws", n_workers=168,
+                       zero_worker=True)
+        if d and r:
+            rows.append((f"fig6/zero/{g.name}",
+                         round(r * 1e6 / g.n_tasks, 3),
+                         f"speedup={d / r:.2f}"))
+    # Fig 7: AOT for two cluster sizes
+    for w in (24, 168):
+        for g in [benchgraphs.merge(5000), benchgraphs.tree(12),
+                  benchgraphs.shuffle(32, name="groupby")]:
+            for server in ("dask", "rsds"):
+                ms, _ = run_avg(g, server=server, scheduler="ws",
+                                n_workers=w, zero_worker=True)
+                if ms:
+                    rows.append((f"fig7/aot/{g.name}/{server}/w{w}",
+                                 round(ms * 1e6 / g.n_tasks, 3),
+                                 f"aot_us={ms * 1e6 / g.n_tasks:.2f}"))
+    # Fig 8 top: AOT vs task count
+    for n in (5000, 10000, 20000, 40000):
+        for server in ("dask", "rsds"):
+            for sched in ("ws", "random"):
+                ms, _ = run_avg(benchgraphs.merge(n), reps=1, server=server,
+                                scheduler=sched, n_workers=24,
+                                zero_worker=True)
+                if ms:
+                    rows.append((f"fig8/tasks/{server}-{sched}/n{n}",
+                                 round(ms * 1e6 / (n + 1), 3),
+                                 f"aot_us={ms * 1e6 / (n + 1):.2f}"))
+    # Fig 8 bottom: AOT vs worker count
+    g = benchgraphs.merge(10000)
+    for w in (24, 96, 384, 1512):
+        for server in ("dask", "rsds"):
+            for sched in ("ws", "random"):
+                ms, _ = run_avg(g, reps=1, server=server, scheduler=sched,
+                                n_workers=w, zero_worker=True)
+                if ms:
+                    rows.append((f"fig8/workers/{server}-{sched}/w{w}",
+                                 round(ms * 1e6 / g.n_tasks, 3),
+                                 f"aot_us={ms * 1e6 / g.n_tasks:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver: compile one cell with config/rule overrides and
+print the corrected roofline terms — the measure step of the
+hypothesis->change->measure loop (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch llama3.2-1b \
+      --shape train_4k [--set remat=dots] [--set fuse_qkv=1] ...
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro import configs
+from repro.launch import dryrun, roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import SHAPE_CASES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg field overrides, e.g. remat=dots")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical rule overrides, e.g. seq=model")
+    ap.add_argument("--tag", default="variant")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+
+    def coerce(obj, k, v):
+        field = {f.name: f for f in dataclasses.fields(obj)}[k]
+        if field.type in ("bool", bool):
+            return v in ("1", "true", "True")
+        if field.type in ("int", int):
+            return int(v)
+        if field.type in ("float", float):
+            return float(v)
+        return v
+
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if "." in k:  # nested, e.g. moe.group_size=512
+            sub, leaf = k.split(".", 1)
+            subcfg = getattr(cfg, sub)
+            subcfg = dataclasses.replace(subcfg,
+                                         **{leaf: coerce(subcfg, leaf, v)})
+            cfg = dataclasses.replace(cfg, **{sub: subcfg})
+        else:
+            cfg = dataclasses.replace(cfg, **{k: coerce(cfg, k, v)})
+
+    rule_over = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        rule_over[k] = (None if v in ("none", "None") else
+                        tuple(v.split("+")) if "+" in v else v)
+    if rule_over:
+        import repro.parallel.annotate as ann
+        orig = ann.make_rules
+
+        def patched(cfg_, mesh_, batch_):
+            r = orig(cfg_, mesh_, batch_)
+            r.update(rule_over)
+            return r
+        ann.make_rules = patched
+        dryrun.make_rules = patched
+
+    case = SHAPE_CASES[args.shape]
+    mesh = make_production_mesh()
+    t0 = time.time()
+    full = dryrun.compile_cell(cfg, case, mesh, want_memory=True)
+    corr = dryrun.corrected_costs(cfg, case, mesh)
+    tokens = case.global_batch * (case.seq_len
+                                  if case.kind != "decode" else 1)
+    mf = rl.model_flops(cfg.active_param_count(), tokens, case.kind) \
+        + rl.attn_model_flops(cfg, case)
+    roof = rl.Roofline(flops=corr["flops"], bytes_accessed=corr["bytes"],
+                       wire_bytes=corr["wire_bytes"],
+                       model_flops=mf / mesh.size)
+    out = {"tag": args.tag, "arch": args.arch, "shape": args.shape,
+           "overrides": args.set, "rules": args.rule,
+           "peak_gb": full["memory"]["peak_bytes_per_dev"] / 1e9,
+           "collectives": corr["collective_counts"],
+           **{k: round(v, 4) for k, v in roof.to_dict().items()
+              if isinstance(v, float)},
+           "bottleneck": roof.bottleneck,
+           "wall_s": round(time.time() - t0, 1)}
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

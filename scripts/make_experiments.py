@@ -1,0 +1,80 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from artifacts.
+Run after the dry-run matrix: PYTHONPATH=src python scripts/make_experiments.py
+Emits markdown to stdout (the handwritten sections live in EXPERIMENTS.md
+and include these tables)."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs                              # noqa: E402
+from repro.launch import roofline as rl                # noqa: E402
+from repro.models.common import SHAPE_CASES            # noqa: E402
+
+ART = pathlib.Path("artifacts/dryrun")
+
+
+def recompute_roofline(rec):
+    """Roofline terms from stored corrected costs + fresh model-flops
+    (includes the attention-aware useful-FLOPs model)."""
+    cfg = configs.get_config(rec["arch"])
+    case = SHAPE_CASES[rec["shape"]]
+    corr = rec["corrected"]
+    tokens = case.global_batch * (case.seq_len
+                                  if case.kind != "decode" else 1)
+    mf = rl.model_flops(cfg.active_param_count(), tokens, case.kind) \
+        + rl.attn_model_flops(cfg, case)
+    return rl.Roofline(flops=corr["flops"], bytes_accessed=corr["bytes"],
+                       wire_bytes=corr["wire_bytes"],
+                       model_flops=mf / rec["n_devices"])
+
+
+def main():
+    recs = {}
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        mesh = rec["mesh"] + ("+OPT" if f.stem.endswith("_opt") else "")
+        recs[(rec["arch"], rec["shape"], mesh)] = rec
+
+    print("### Dry-run matrix (single-pod 16x16=256 chips; "
+          "multi-pod 2x16x16=512 chips)\n")
+    print("| arch | shape | mesh | status | compile s | peak GB/dev | "
+          "collectives (corrected counts) |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s, m), rec in sorted(recs.items()):
+        if rec["status"] == "skip":
+            print(f"| {a} | {s} | {m} | SKIP (full-attn long-ctx) | | | |")
+            continue
+        if rec["status"] != "ok":
+            print(f"| {a} | {s} | {m} | **ERROR** | | | "
+                  f"{rec.get('error', '')[:60]} |")
+            continue
+        full = rec["full"]
+        peak = full["memory"]["peak_bytes_per_dev"] / 1e9
+        colls = rec.get("corrected", {}).get("collective_counts",
+                                             full["collective_counts"])
+        cstr = " ".join(f"{k.replace('all-', 'a')}:{int(v)}"
+                        for k, v in sorted(colls.items()))
+        print(f"| {a} | {s} | {m} | ok | "
+              f"{full['lower_s'] + full['compile_s']:.0f} | {peak:.1f} | "
+              f"{cstr} |")
+
+    print("\n### Roofline (single-pod, per-device, corrected costs; "
+          "TPU v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | t_comp s | t_mem s | t_coll s | bottleneck | "
+          "useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), rec in sorted(recs.items()):
+        if not m.startswith("single") or rec["status"] != "ok" \
+                or "corrected" not in rec:
+            continue
+        a = a + (" (OPTIMIZED)" if m.endswith("OPT") else "")
+        r = recompute_roofline(rec)
+        print(f"| {a} | {s} | {r.t_compute:.3f} | {r.t_memory:.3f} | "
+              f"{r.t_collective:.3f} | {r.bottleneck} | "
+              f"{r.useful_ratio:.2f} | {r.roofline_fraction:.4f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Sharded checkpointing with manifest + async save.
+
+Layout:  <dir>/step_<n>/manifest.json + one .npy per leaf (keyed by the
+flattened tree path).  The manifest records shapes/dtypes/paths, the step
+and the config name, so restores validate structure before loading.  In a
+multi-host deployment each process writes its own leaf shards (process id
+would join the filename); this container is single-process.
+
+``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+writes to disk on a background thread — training continues during the
+write, and ``wait()`` barriers before the next save (the standard
+async-checkpoint discipline).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str | pathlib.Path, step: int, tree: Any,
+         meta: dict | None = None) -> pathlib.Path:
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    tmp = d.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "meta": meta or {}, "leaves": {}}
+    for i, (key, arr) in enumerate(sorted(flat.items())):
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if d.exists():
+        shutil.rmtree(d)
+    tmp.rename(d)  # atomic-ish publish: partial writes never look valid
+    return d
+
+
+def restore(directory: str | pathlib.Path, tree: Any,
+            step: int | None = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``tree`` (shapes validated)."""
+    d = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(d)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {d}")
+    cdir = d / f"step_{step:08d}"
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    flat_paths = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat_paths[0]:
+        key = jax.tree_util.keystr(path)
+        ent = manifest["leaves"].get(key)
+        if ent is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(cdir / ent["file"])
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    restored = jax.tree_util.tree_unflatten(flat_paths[1], leaves)
+    return restored, manifest["step"], manifest["meta"]
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None
+
+
+class AsyncCheckpointer:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.saved: list[int] = []
+
+    def save(self, step: int, tree: Any, meta: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+
+        def _write():
+            save(self.directory, step, host_tree, meta)
+            self.saved.append(step)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(int(m.group(1)) for p in self.directory.iterdir()
+                       if (m := re.fullmatch(r"step_(\d+)", p.name)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,50 @@
+"""Beyond-paper OPTIMIZED configurations (EXPERIMENTS.md §Perf).
+
+The per-arch configs in this package are the paper-faithful baselines;
+``optimized_config(name)`` layers on the sharding/fusion choices that the
+hypothesis->change->measure loop validated (each entry lists its measured
+single-pod effect on the dominant roofline term for the hillclimbed cell;
+non-hillclimbed archs inherit the generic winners: fusions + sequence
+parallelism, whose wins replicated on every dense arch tried).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro import configs
+
+# validated per-arch overrides (see EXPERIMENTS.md §Perf iteration log)
+_OVERRIDES: dict[str, dict] = {
+    # llama3.2-1b train_4k: frac 0.048 -> 0.076 (+60%), peak 19.5 -> 12.6G
+    "llama3_2_1b": dict(fuse_qkv=True, fuse_glu=True, seq_parallel=True),
+    # musicgen train_4k: frac 0.027 -> 0.041, peak 129 -> 8.6G
+    "musicgen_medium": dict(remat="full", fuse_qkv=True, fuse_glu=True,
+                            seq_parallel=True),
+    # deepseek-v3 train_4k: t_coll 267.6 -> 47.7s via EP(model)+FSDP(data)
+    # expert sharding; dispatch groups 2048 -> 512 trims dispatch FLOPs
+    # (+15% fraction); seq_parallel REFUTED for MoE (dispatch reshard)
+    "deepseek_v3_671b": dict(moe_sharding="ep_fsdp", _moe_group_size=512,
+                             fuse_glu=True),
+    # generic winners for the remaining dense archs
+    "gemma_7b": dict(fuse_qkv=True, fuse_glu=True, seq_parallel=True),
+    "gemma2_27b": dict(fuse_qkv=True, fuse_glu=True, seq_parallel=True),
+    "deepseek_coder_33b": dict(fuse_qkv=True, fuse_glu=True,
+                               seq_parallel=True),
+    "llama3_2_vision_90b": dict(fuse_qkv=True, fuse_glu=True,
+                                seq_parallel=True),
+    "grok_1_314b": dict(fuse_qkv=True, fuse_glu=True),
+    "zamba2_2_7b": dict(fuse_glu=True),
+    "xlstm_350m": dict(),
+}
+
+
+def optimized_config(name: str):
+    cfg = configs.get_config(name)
+    over = dict(_OVERRIDES.get(configs.canonical(name), {}))
+    if not over:
+        return cfg
+    gsize = over.pop("_moe_group_size", None)
+    if gsize is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=gsize))
+    return dataclasses.replace(cfg, **over)

@@ -1,0 +1,119 @@
+"""Task graph representation (paper §III-A).
+
+A :class:`TaskGraph` is a DAG whose vertices carry a duration model (for the
+simulator / zero-worker studies) and an output size (for transfer-cost
+modelling), and optionally a real Python callable (for the wall-clock
+runtime).  Both reactor implementations consume the same graph; the
+RSDS-style :class:`repro.core.array_reactor.ArrayReactor` uses the CSR
+arrays built here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Task:
+    tid: int
+    inputs: tuple[int, ...] = ()
+    duration: float = 0.0          # seconds (simulated / expected)
+    output_size: float = 1024.0    # bytes
+    fn: Callable | None = None     # real callable for the wall-clock runtime
+    args: tuple = ()
+    name: str = ""
+
+
+class TaskGraph:
+    def __init__(self, tasks: Sequence[Task], name: str = "graph"):
+        self.name = name
+        self.tasks = list(tasks)
+        n = len(self.tasks)
+        for i, t in enumerate(self.tasks):
+            if t.tid != i:
+                raise ValueError(f"task ids must be dense, got {t.tid}!={i}")
+            for d in t.inputs:
+                if not (0 <= d < n):
+                    raise ValueError(f"bad dep {d} for task {i}")
+                if d >= i:
+                    raise ValueError(
+                        f"graph must be topologically ordered ({d}>={i})")
+        self._build_arrays()
+
+    def _build_arrays(self) -> None:
+        n = len(self.tasks)
+        self.n_tasks = n
+        self.durations = np.array([t.duration for t in self.tasks],
+                                  dtype=np.float64)
+        self.sizes = np.array([t.output_size for t in self.tasks],
+                              dtype=np.float64)
+        self.in_degree = np.array([len(t.inputs) for t in self.tasks],
+                                  dtype=np.int32)
+        self.n_deps = int(self.in_degree.sum())
+        # consumers CSR: task -> tasks depending on it
+        counts = np.zeros(n, dtype=np.int32)
+        for t in self.tasks:
+            for d in t.inputs:
+                counts[d] += 1
+        self.consumers_indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=self.consumers_indptr[1:])
+        self.consumers = np.zeros(self.n_deps, dtype=np.int32)
+        fill = self.consumers_indptr[:-1].copy()
+        for t in self.tasks:
+            for d in t.inputs:
+                self.consumers[fill[d]] = t.tid
+                fill[d] += 1
+        # inputs CSR
+        self.inputs_indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(self.in_degree, out=self.inputs_indptr[1:])
+        self.inputs_flat = np.concatenate(
+            [np.asarray(t.inputs, dtype=np.int32) for t in self.tasks]
+        ) if self.n_deps else np.zeros(0, dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    # Properties matching the paper's Table I columns
+    # ------------------------------------------------------------------
+
+    @property
+    def avg_duration_ms(self) -> float:
+        return float(self.durations.mean() * 1e3)
+
+    @property
+    def avg_output_kib(self) -> float:
+        return float(self.sizes.mean() / 1024.0)
+
+    def longest_path(self) -> int:
+        """LP column: number of arcs on the longest oriented path."""
+        depth = np.zeros(self.n_tasks, dtype=np.int32)
+        for t in self.tasks:
+            if t.inputs:
+                depth[t.tid] = 1 + max(depth[d] for d in t.inputs)
+        return int(depth.max()) if self.n_tasks else 0
+
+    def critical_path_time(self) -> float:
+        """Lower bound on makespan with infinite workers, zero overhead."""
+        finish = np.zeros(self.n_tasks, dtype=np.float64)
+        for t in self.tasks:
+            start = max((finish[d] for d in t.inputs), default=0.0)
+            finish[t.tid] = start + t.duration
+        return float(finish.max()) if self.n_tasks else 0.0
+
+    def total_work(self) -> float:
+        return float(self.durations.sum())
+
+    def consumers_of(self, tid: int) -> np.ndarray:
+        return self.consumers[self.consumers_indptr[tid]:
+                              self.consumers_indptr[tid + 1]]
+
+    def inputs_of(self, tid: int) -> np.ndarray:
+        return self.inputs_flat[self.inputs_indptr[tid]:
+                                self.inputs_indptr[tid + 1]]
+
+    def summary(self) -> dict:
+        return {"name": self.name, "n_tasks": self.n_tasks,
+                "n_deps": self.n_deps,
+                "avg_duration_ms": round(self.avg_duration_ms, 4),
+                "avg_output_kib": round(self.avg_output_kib, 3),
+                "longest_path": self.longest_path()}

@@ -1,0 +1,185 @@
+"""Reactors: the runtime half of the server (paper Fig. 1).
+
+The reactor owns connections/bookkeeping/protocol and translates scheduler
+assignments into worker messages; the scheduler never sees any of it.
+
+:class:`ObjectReactor` is the Dask-style implementation: one Python object
+per task with set-based dependency bookkeeping, per-message msgpack
+encode/decode at the server boundary, and message-at-a-time processing —
+the per-task constant cost profile the paper attributes to Dask's server.
+
+:class:`repro.core.array_reactor.ArrayReactor` is the RSDS-style runtime.
+Engines (simulator / thread runtime) time every reactor call; that measured
+wall time *is* the server overhead in both the virtual-time scaling studies
+and the real-time experiments.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from repro.core import messages as msg
+from repro.core.graph import TaskGraph
+from repro.core.schedulers import SchedulerBase
+
+# task states
+WAITING, READY, RUNNING, MEMORY, RELEASED = range(5)
+
+
+class ReactorStats:
+    def __init__(self):
+        self.msgs_in = 0
+        self.msgs_out = 0
+        self.bytes_coded = 0
+        self.releases = 0
+
+    def as_dict(self):
+        return {"msgs_in": self.msgs_in, "msgs_out": self.msgs_out,
+                "bytes_coded": self.bytes_coded, "releases": self.releases}
+
+
+class ObjectReactor:
+    """Dask-style object-per-task server runtime."""
+    name = "dask"
+
+    def __init__(self, graph: TaskGraph, scheduler: SchedulerBase,
+                 n_workers: int, workers_per_node: int = 24, seed: int = 0):
+        self.graph = graph
+        self.scheduler = scheduler
+        self.n_workers = n_workers
+        self.stats = ReactorStats()
+        scheduler.attach(graph, n_workers, workers_per_node, seed)
+        # per-task dict objects keyed by Dask-style STRING keys — Dask
+        # addresses every task by a string key throughout its server; the
+        # hashing/allocation cost of that choice is part of what RSDS's
+        # integer ids eliminate (paper §IV).
+        self.key = [f"{graph.name}-task-{i}" for i in range(graph.n_tasks)]
+        self.tasks = {}
+        for t in graph.tasks:
+            self.tasks[self.key[t.tid]] = {
+                "state": WAITING,
+                "tid": t.tid,
+                "waiting_on": set(self.key[int(d)] for d in t.inputs),
+                "waiters": set(self.key[int(c)]
+                               for c in graph.consumers_of(t.tid)),
+                "who_has": set(),
+                "nbytes": float(t.output_size),
+                "worker": -1,
+            }
+        self.n_done = 0
+
+    # ------------------------------------------------------------------
+    def _assign(self, ready: list[int]) -> list[tuple[int, int]]:
+        if not ready:
+            return []
+        wids = self.scheduler.assign(np.asarray(ready, dtype=np.int64))
+        out = []
+        for tid, wid in zip(ready, wids):
+            ts = self.tasks[self.key[tid]]
+            ts["state"] = READY
+            ts["worker"] = int(wid)
+            who_has = {int(d): list(self.tasks[self.key[int(d)]]["who_has"])
+                       for d in self.graph.inputs_of(tid)}
+            m = msg.compute_task(tid, int(wid),
+                                 self.graph.inputs_of(tid), who_has)
+            self.stats.bytes_coded += len(msg.pack(m))
+            self.stats.msgs_out += 1
+            self.scheduler.on_assigned(tid, int(wid))
+            out.append((int(tid), int(wid)))
+        return out
+
+    def start(self) -> list[tuple[int, int]]:
+        ready = [t.tid for t in self.graph.tasks if not t.inputs]
+        return self._assign(ready)
+
+    def handle_finished(self, events: Iterable[tuple[int, int]]
+                        ) -> list[tuple[int, int]]:
+        """events: (tid, wid) completions.  Dask-style: process one message
+        at a time, each round-tripped through msgpack."""
+        assignments: list[tuple[int, int]] = []
+        for tid, wid in events:
+            raw = msg.pack(msg.task_finished(tid, wid,
+                                             self.graph.sizes[tid]))
+            m = msg.unpack(raw)
+            self.stats.bytes_coded += len(raw)
+            self.stats.msgs_in += 1
+            tid = int(m["key"])
+            wid = int(m["worker"])
+            key = self.key[tid]
+            ts = self.tasks[key]
+            if ts["state"] in (MEMORY, RELEASED):
+                continue  # duplicate completion (failed steal retraction)
+            ts["state"] = MEMORY
+            ts["who_has"].add(wid)
+            self.n_done += 1
+            self.scheduler.on_finished(tid, wid)
+            # refcount GC: inputs of tid lose a waiter
+            ready = []
+            for d in self.graph.inputs_of(tid):
+                dts = self.tasks[self.key[int(d)]]
+                dts["waiters"].discard(key)
+                if not dts["waiters"] and dts["state"] == MEMORY:
+                    dts["state"] = RELEASED
+                    self.stats.releases += 1
+                    self.stats.msgs_out += len(dts["who_has"])
+            for c in self.graph.consumers_of(tid):
+                cts = self.tasks[self.key[int(c)]]
+                cts["waiting_on"].discard(key)
+                if not cts["waiting_on"] and cts["state"] == WAITING:
+                    ready.append(int(c))
+            assignments.extend(self._assign(ready))
+        return assignments
+
+    def handle_placed(self, tid: int, wid: int) -> None:
+        self.tasks[self.key[tid]]["who_has"].add(wid)
+        self.scheduler.on_placed(tid, wid)
+
+    def rebalance(self, queued_by_worker) -> list[tuple[int, int]]:
+        moves = self.scheduler.balance(queued_by_worker)
+        for tid, wid in moves:
+            self.tasks[self.key[tid]]["worker"] = wid
+            self.stats.msgs_out += 2  # steal request + new compute-task
+        return moves
+
+    # failure handling -------------------------------------------------
+    def handle_worker_lost(self, wid: int, running: Iterable[int]
+                           ) -> list[tuple[int, int]]:
+        """Resubmit tasks that were running on a lost worker and recompute
+        lost-but-needed outputs (lineage re-execution)."""
+        self.scheduler.on_worker_removed(wid)
+        to_rerun: set[int] = set(int(t) for t in running)
+        for key, ts in self.tasks.items():
+            ts["who_has"].discard(wid)
+            if ts["state"] == MEMORY and not ts["who_has"] and ts["waiters"]:
+                to_rerun.add(ts["tid"])
+        # closure: re-run any RELEASED input of a re-run task (lineage)
+        frontier = list(to_rerun)
+        while frontier:
+            tid = frontier.pop()
+            for d in self.graph.inputs_of(tid):
+                d = int(d)
+                if d not in to_rerun \
+                        and self.tasks[self.key[d]]["state"] == RELEASED:
+                    to_rerun.add(d)
+                    frontier.append(d)
+        was_done = [t for t in to_rerun
+                    if self.tasks[self.key[t]]["state"]
+                    in (MEMORY, RELEASED)]
+        ready = []
+        for tid in sorted(to_rerun):
+            ts = self.tasks[self.key[tid]]
+            ts["state"] = WAITING
+            ts["waiting_on"] = {
+                self.key[int(d)] for d in self.graph.inputs_of(tid)
+                if self.tasks[self.key[int(d)]]["state"] != MEMORY
+                or int(d) in to_rerun}
+            for d in self.graph.inputs_of(tid):
+                self.tasks[self.key[int(d)]]["waiters"].add(self.key[tid])
+            if not ts["waiting_on"]:
+                ready.append(tid)
+        self.n_done -= len(was_done)
+        return self._assign(ready)
+
+    def done(self) -> bool:
+        return self.n_done >= self.graph.n_tasks

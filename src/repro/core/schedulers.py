@@ -1,0 +1,279 @@
+"""Schedulers (paper §III-D, §III-E, §IV-C).
+
+All schedulers are strictly isolated from the reactor (RSDS architecture,
+Fig. 1): they see only the task graph and the event stream, and return
+worker assignments.  This makes them swappable across both reactor
+implementations.
+
+* :class:`RandomScheduler`   — paper §III-E: uniform random, stateless.
+* :class:`DaskWorkStealing`  — Dask-style: minimise estimated start time
+  (occupancy + transfer estimate), steal from overloaded workers.
+* :class:`RsdsWorkStealing`  — paper §IV-C: placement-only choice (load
+  deliberately ignored), balancing pass when workers go under-loaded.
+* :class:`HeftScheduler`     — beyond-paper baseline: classic HEFT list
+  scheduling using known durations (simulator only).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import TaskGraph
+
+
+class SchedulerBase:
+    name = "base"
+    needs_durations = False
+
+    def attach(self, graph: TaskGraph, n_workers: int,
+               workers_per_node: int = 24, seed: int = 0) -> None:
+        self.graph = graph
+        self.n_workers = n_workers
+        self.workers_per_node = workers_per_node
+        self.rng = np.random.default_rng(seed)
+        # scheduler builds its OWN state (paper: reactor/scheduler each own
+        # a task-graph copy)
+        self.loads = np.zeros(n_workers, dtype=np.int64)
+        self.placement: dict[int, set[int]] = {}
+        self.dead: set[int] = set()
+        self.alive = np.arange(n_workers)
+
+    # -- event feed -----------------------------------------------------
+    def on_assigned(self, tid: int, wid: int) -> None:
+        self.loads[wid] += 1
+
+    def on_finished(self, tid: int, wid: int) -> None:
+        self.loads[wid] -= 1
+        self.placement.setdefault(tid, set()).add(wid)
+
+    def on_placed(self, tid: int, wid: int) -> None:
+        self.placement.setdefault(tid, set()).add(wid)
+
+    def on_worker_change(self, n_workers: int) -> None:
+        old = self.loads
+        self.loads = np.zeros(n_workers, dtype=np.int64)
+        self.loads[:min(len(old), n_workers)] = old[:n_workers]
+        self.n_workers = n_workers
+        self.alive = np.array([w for w in range(n_workers)
+                               if w not in self.dead])
+
+    def on_worker_removed(self, wid: int) -> None:
+        self.dead.add(wid)
+        self.alive = np.array([w for w in range(self.n_workers)
+                               if w not in self.dead])
+        for holders in self.placement.values():
+            holders.discard(wid)
+
+    def _random_alive(self, n: int) -> np.ndarray:
+        return self.alive[self.rng.integers(0, len(self.alive), size=n)]
+
+    # -- decisions ------------------------------------------------------
+    def assign(self, ready: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def balance(self, queued_by_worker) -> list[tuple[int, int]]:
+        """queued_by_worker: wid -> iterable of not-yet-started tids.
+        Returns [(tid, new_wid)] reassignments."""
+        return []
+
+
+class RandomScheduler(SchedulerBase):
+    """Uniform random assignment; no graph state at all (paper §IV-C)."""
+    name = "random"
+
+    def assign(self, ready: np.ndarray) -> np.ndarray:
+        return self._random_alive(len(ready))
+
+    def on_assigned(self, tid, wid):  # stateless: skip bookkeeping
+        pass
+
+    def on_finished(self, tid, wid):
+        pass
+
+    def on_placed(self, tid, wid):
+        pass
+
+
+class DaskWorkStealing(SchedulerBase):
+    """Dask-style: minimise estimated start time = occupancy + transfers.
+
+    Duration estimates use the running mean of observed durations (Dask
+    uses per-key-prefix means; our synthetic graphs have one prefix).
+    Implemented object/loop-style on purpose — this is the scheduler whose
+    cost profile mirrors Dask's pure-Python server.
+    """
+    name = "ws"
+    bandwidth = 6.8e9  # InfiniBand FDR56-ish, matches simulator default
+
+    def attach(self, graph, n_workers, workers_per_node=24, seed=0):
+        super().attach(graph, n_workers, workers_per_node, seed)
+        self.occupancy = [0.0] * n_workers
+        self.dur_mean = 1e-3
+        self.n_obs = 0
+
+    MAX_CANDIDATES = 20  # Dask's decide_worker caps its candidate pool
+
+    def assign(self, ready: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(ready), dtype=np.int64)
+        for i, tid in enumerate(ready):
+            inputs = self.graph.inputs_of(int(tid))
+            cands: set[int] = set()
+            for d in inputs:
+                for w in self.placement.get(int(d), ()):
+                    cands.add(w)
+                    if len(cands) >= self.MAX_CANDIDATES:
+                        break
+                if len(cands) >= self.MAX_CANDIDATES:
+                    break
+            cands -= self.dead
+            occ = np.asarray(self.occupancy)
+            if self.dead:
+                occ = occ.copy()
+                occ[list(self.dead)] = np.inf
+            cands.add(int(np.argmin(occ)))
+            best, best_est = -1, float("inf")
+            for w in cands:
+                transfer = 0.0
+                for d in inputs:
+                    if w not in self.placement.get(int(d), ()):
+                        transfer += self.graph.sizes[d] / self.bandwidth
+                est = self.occupancy[w] + transfer
+                if est < best_est:
+                    best, best_est = w, est
+            out[i] = best
+            self.occupancy[best] += self.dur_mean
+            self.loads[best] += 1
+        return out
+
+    def on_assigned(self, tid, wid):
+        pass  # handled in assign()
+
+    def on_finished(self, tid, wid):
+        super().on_finished(tid, wid)
+        d = float(self.graph.durations[tid])
+        self.n_obs += 1
+        self.dur_mean += (d - self.dur_mean) / self.n_obs
+        self.occupancy[wid] = max(0.0, self.occupancy[wid] - self.dur_mean)
+
+    def balance(self, queued_by_worker):
+        """Steal: move queued tasks from the most occupied workers to idle
+        ones (paper §III-D: stealing on imbalance)."""
+        moves = []
+        idle = [w for w in range(self.n_workers)
+                if self.loads[w] == 0 and w not in self.dead]
+        if not idle:
+            return moves
+        order = np.argsort(self.loads)[::-1]
+        it = iter(idle)
+        target = next(it)
+        for w in order:
+            if self.loads[w] <= 1:
+                break
+            queue = list(queued_by_worker.get(int(w), ()))
+            take = queue[: max(len(queue) // 2, 0)]
+            for tid in take:
+                moves.append((int(tid), int(target)))
+                self.loads[w] -= 1
+                self.loads[target] += 1
+                try:
+                    target = next(it)
+                except StopIteration:
+                    return moves
+        return moves
+
+
+class RsdsWorkStealing(SchedulerBase):
+    """RSDS work-stealing (paper §IV-C): choose the worker with minimal
+    transfer cost, deliberately ignoring load; balance under-loaded workers
+    afterwards.  No duration or network-speed estimates."""
+    name = "ws"
+
+    def assign(self, ready: np.ndarray) -> np.ndarray:
+        # vectorized fast path: source tasks (no inputs) go to random
+        # workers in one draw — the common case for wide graph frontiers
+        nin = self.graph.in_degree[ready]
+        out = self._random_alive(len(ready))
+        for i in np.flatnonzero(nin > 0):
+            tid = int(ready[i])
+            local: dict[int, float] = {}
+            for d in self.graph.inputs_of(tid):
+                for w in self.placement.get(int(d), ()):
+                    local[w] = local.get(w, 0.0) + self.graph.sizes[d]
+            if local:
+                out[i] = max(local.items(), key=lambda kv: kv[1])[0]
+        np.add.at(self.loads, out, 1)
+        return out
+
+    def on_assigned(self, tid, wid):
+        pass
+
+    def balance(self, queued_by_worker):
+        """Move tasks from loaded workers to under-loaded ones (<1 task)."""
+        moves = []
+        under = np.array([w for w in np.flatnonzero(self.loads == 0)
+                          if w not in self.dead], dtype=np.int64)
+        if len(under) == 0:
+            return moves
+        order = np.argsort(self.loads)[::-1]
+        ui = 0
+        for w in order:
+            while self.loads[w] > 1 and ui < len(under):
+                queue = list(queued_by_worker.get(int(w), ()))
+                if not queue:
+                    break
+                tid = queue.pop()
+                tgt = int(under[ui])
+                ui += 1
+                moves.append((int(tid), tgt))
+                self.loads[w] -= 1
+                self.loads[tgt] += 1
+            if ui >= len(under):
+                break
+        return moves
+
+
+class HeftScheduler(SchedulerBase):
+    """HEFT (beyond-paper baseline): static upward-rank list scheduling
+    with known durations — an oracle-ish comparison point for the
+    simulator experiments."""
+    name = "heft"
+    needs_durations = True
+    bandwidth = 6.8e9
+
+    def attach(self, graph, n_workers, workers_per_node=24, seed=0):
+        super().attach(graph, n_workers, workers_per_node, seed)
+        g = graph
+        n = g.n_tasks
+        rank = np.zeros(n)
+        for tid in range(n - 1, -1, -1):
+            cons = g.consumers_of(tid)
+            comm = g.sizes[tid] / self.bandwidth
+            rank[tid] = g.durations[tid] + (
+                max(rank[c] + comm for c in cons) if len(cons) else 0.0)
+        order = np.argsort(-rank)
+        finish = np.zeros(n)
+        wfree = np.zeros(n_workers)
+        place = np.zeros(n, dtype=np.int64)
+        for tid in order:
+            inputs = g.inputs_of(int(tid))
+            best_w, best_f = 0, float("inf")
+            for w in range(n_workers):
+                ready = wfree[w]
+                for d in inputs:
+                    arr = finish[d] + (0.0 if place[d] == w
+                                       else g.sizes[d] / self.bandwidth)
+                    ready = max(ready, arr)
+                f = ready + g.durations[tid]
+                if f < best_f:
+                    best_w, best_f = w, f
+            place[tid] = best_w
+            finish[tid] = best_f
+            wfree[best_w] = best_f
+        self._place = place
+
+    def assign(self, ready: np.ndarray) -> np.ndarray:
+        return self._place[np.asarray(ready, dtype=np.int64)]
+
+
+def make_scheduler(name: str) -> SchedulerBase:
+    return {"random": RandomScheduler, "dask_ws": DaskWorkStealing,
+            "rsds_ws": RsdsWorkStealing, "heft": HeftScheduler}[name]()

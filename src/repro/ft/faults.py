@@ -1,0 +1,135 @@
+"""Fault tolerance & elasticity utilities around the core runtime.
+
+The paper's runtime already gives us the primitives (task resubmission via
+``handle_worker_lost``, lineage recompute, scheduler worker-removal); this
+module adds the *policies* a 1000-node deployment needs:
+
+  * heartbeat monitoring with automatic failover,
+  * straggler detection -> forced balancing (work stealing as mitigation,
+    the paper's scheduler doing double duty),
+  * an elastic controller that grows/shrinks the worker pool,
+  * deterministic failure-injection schedules for tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic injection schedule: [(virtual_or_wall_time, wid)]."""
+    events: tuple = ()
+
+    def for_simulator(self):
+        return tuple(self.events)
+
+
+class HeartbeatMonitor:
+    """Watches a ThreadRuntime's workers; a worker that hasn't reported a
+    completion within ``grace`` while holding tasks is declared dead and
+    failed over (resubmission through the reactor)."""
+
+    def __init__(self, runtime, grace: float = 1.0, interval: float = 0.2):
+        self.rt = runtime
+        self.grace = grace
+        self.interval = interval
+        self.last_seen = {w: time.perf_counter()
+                          for w in range(runtime.n_workers)}
+        self.failed: list[int] = []
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def beat(self, wid: int) -> None:
+        self.last_seen[wid] = time.perf_counter()
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            now = time.perf_counter()
+            for wid, seen in list(self.last_seen.items()):
+                if wid in self.rt.dead:
+                    continue
+                busy = (wid in self.rt.running
+                        or self.rt.queued.get(wid))
+                if busy and now - seen > self.grace:
+                    self.failed.append(wid)
+                    self.rt.fail_worker(wid)
+            time.sleep(self.interval)
+
+
+class StragglerMitigator:
+    """Detects straggling workers (queue age >> mean) and triggers an
+    immediate balancing pass — the paper's work stealing applied as
+    straggler mitigation for SPMD microbatch dispatch."""
+
+    def __init__(self, runtime, factor: float = 3.0):
+        self.rt = runtime
+        self.factor = factor
+        self.interventions = 0
+
+    def check(self) -> int:
+        with self.rt._lock:
+            qlens = {w: len(q) for w, q in self.rt.queued.items()
+                     if w not in self.rt.dead}
+        if not qlens:
+            return 0
+        lens = np.array(list(qlens.values()))
+        if lens.max() >= max(self.factor * max(lens.mean(), 0.5), 2):
+            qbw = {w: list(self.rt.queued.get(w, []))
+                   for w in qlens}
+            moves = self.rt.reactor.rebalance(qbw)
+            applied = []
+            with self.rt._lock:
+                for tid, nw in moves:
+                    src = next((w for w, q in self.rt.queued.items()
+                                if tid in q), None)
+                    if src is None:
+                        continue
+                    self.rt.queued[src].remove(tid)
+                    applied.append((tid, nw))
+            self.rt._send(applied)
+            self.interventions += len(applied)
+            return len(applied)
+        return 0
+
+
+class ElasticController:
+    """Grows/shrinks a ThreadRuntime's worker pool at runtime.  Growth
+    spawns a worker thread and notifies the scheduler; shrink retires the
+    worker gracefully (its queue is rebalanced, not lost)."""
+
+    def __init__(self, runtime):
+        self.rt = runtime
+
+    def scale_up(self, n: int = 1) -> list[int]:
+        import queue as _q
+        new_ids = []
+        for _ in range(n):
+            wid = self.rt.n_workers
+            self.rt.worker_inbox.append(_q.Queue())
+            self.rt.n_workers += 1
+            self.rt.reactor.n_workers += 1
+            self.rt.reactor.scheduler.on_worker_change(self.rt.n_workers)
+            t = threading.Thread(target=self.rt._worker_loop, args=(wid,),
+                                 daemon=True)
+            t.start()
+            new_ids.append(wid)
+        return new_ids
+
+    def scale_down(self, wid: int) -> None:
+        """Graceful retire: reassign queued tasks, then stop the thread."""
+        with self.rt._lock:
+            pending = list(self.rt.queued.pop(wid, []))
+            self.rt.dead.add(wid)
+        out = self.rt.reactor.handle_worker_lost(wid, pending)
+        self.rt._send(out)
+        self.rt.worker_inbox[wid].put(None)

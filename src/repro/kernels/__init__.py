@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots, each with a pure-jnp
+oracle in ref.py and a dispatching wrapper in ops.py:
+
+  flash_attention   blocked online-softmax attention (GQA via index maps)
+  decode_attention  flash-decoding for single-token GQA decode
+  rmsnorm           fused normalisation
+  mamba_chunk_scan  Mamba-2 SSD chunked state-space scan
+"""
+from repro.kernels import ops, ref

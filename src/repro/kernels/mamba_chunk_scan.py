@@ -1,0 +1,106 @@
+"""Pallas TPU Mamba-2 SSD chunk scan.
+
+Grid: (batch, heads, chunks) with the chunk dim sequential ("arbitrary"),
+carrying the (HD, NS) state in VMEM scratch across chunks.  Within a chunk
+everything is dense MXU work: the (Q, Q) decay-masked score block, the
+state outer-product update, and the inter-chunk contribution — the TPU
+reshaping of Mamba-2's GPU kernel (DESIGN.md hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hf_ref, h_scr, *, q: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, HD)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = a_ref[0].astype(jnp.float32)                 # scalar
+    bm = b_ref[0].astype(jnp.float32)                # (Q, NS)
+    cm = c_ref[0].astype(jnp.float32)                # (Q, NS)
+    dsk = d_ref[0].astype(jnp.float32)               # scalar
+
+    logdec = dt * a                                  # (Q,) <= 0
+    fcum = jnp.cumsum(logdec)
+    ftot = fcum[-1]
+
+    # intra-chunk: w[t,u] = (C_t.B_u) exp(F_t - F_u) dt_u, u <= t
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    gap = fcum[:, None] - fcum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    w = jnp.where(tri, jnp.exp(gap), 0.0) * cb * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,HD)
+
+    # inter-chunk contribution from the carried state
+    h = h_scr[...]                                   # (HD, NS)
+    y = y + jnp.exp(fcum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y = y + dsk * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: h' = exp(F_Q) h + sum_u exp(F_Q - F_u) dt_u x_u (x) B_u
+    decay_u = jnp.exp(ftot - fcum) * dt              # (Q,)
+    delta = jax.lax.dot_general(x * decay_u[:, None], bm,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_scr[...] = jnp.exp(ftot) * h + delta
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hf_ref[0, 0] = h_scr[...].astype(hf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_chunk_scan(x, dt, a, b, c, d, *, chunk=256, h0=None,
+                     interpret=False):
+    """Matches kernels.ref.mamba_chunk_scan semantics.
+
+    x: (B,S,NH,HD)  dt: (B,S,NH)  a,d: (NH,)  b,c: (B,S,NS)
+    Returns (y (B,S,NH,HD), h_final (B,NH,HD,NS))."""
+    bs, s, nh, hd = x.shape
+    ns = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    if h0 is None:
+        h0 = jnp.zeros((bs, nh, hd, ns), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, q=q, n_chunks=nc)
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=(bs, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, q, ns), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, ns), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, hd, ns), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, hd, ns), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, s, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((bs, nh, hd, ns), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ns), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d, h0)
+    return y, hf

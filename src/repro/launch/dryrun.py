@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+production NamedShardings on 512 placeholder host devices, record
+memory_analysis / cost_analysis / collective schedule, and emit
+cost-CORRECTED roofline terms.
+
+Cost correction (DESIGN.md): XLA cost_analysis counts a while-loop (scan)
+body once regardless of trip count, so the full scanned compile is used for
+memory_analysis only.  FLOPs/bytes/wire-bytes come from small UNROLLED
+variants: with per-group body costs b_g = cost(group g at repeat 2, rest 1)
+- cost(all groups at repeat 1), the full-depth cost is exactly
+    cost(all@1) + sum_g (r_g - 1) * b_g
+because layer costs are additive.  sLSTM's inner time-scan is corrected
+analytically (its recurrence is inherently sequential).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.models.common import SHAPE_CASES
+from repro.parallel import sharding
+from repro.parallel.annotate import logical_rules, make_rules
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def variant_cfg(cfg, repeats):
+    groups = tuple(dataclasses.replace(g, repeat=r)
+                   for g, r in zip(cfg.groups, repeats))
+    return dataclasses.replace(cfg, groups=groups, unroll=True)
+
+
+def build(cfg, case, mesh):
+    """Returns (fn, args, donate) for the cell's step function."""
+    params = sharding.abstract_sharded_params(cfg, mesh)
+    ins = sharding.input_specs(cfg, case, mesh)
+    if case.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_state = opt.abstract_state(params, mesh)
+        fn = make_train_step(cfg, opt)
+        return fn, (params, opt_state, ins), (0, 1)
+    if case.kind == "prefill":
+        cache = sharding.cache_shardings(cfg, mesh, case.global_batch,
+                                         case.seq_len)
+        if cfg.vision_dim:
+            def fn(params, tokens, cache, image_embeds):
+                return model_lib.prefill(params, cfg, tokens, cache,
+                                         image_embeds)
+            return fn, (params, ins["tokens"], cache,
+                        ins["image_embeds"]), (2,)
+
+        def fn(params, tokens, cache):
+            return model_lib.prefill(params, cfg, tokens, cache)
+        return fn, (params, ins["tokens"], cache), (2,)
+    # decode
+    cache = sharding.cache_shardings(cfg, mesh, case.global_batch,
+                                     case.seq_len)
+
+    def fn(params, tokens, cache, pos):
+        return model_lib.decode_step(params, cfg, tokens, cache, pos)
+    return fn, (params, ins["tokens"], cache, ins["pos"]), (2,)
+
+
+def compile_cell(cfg, case, mesh, *, want_memory=True):
+    """Lower+compile; returns dict of raw artifact numbers."""
+    fn, args, donate = build(cfg, case, mesh)
+    t0 = time.time()
+    with logical_rules(mesh, make_rules(cfg, mesh, case.global_batch)):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis()
+    out = {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+    txt = compiled.as_text()
+    stats = rl.collective_stats(txt)
+    out["wire_bytes"] = stats.wire_bytes
+    out["collective_counts"] = stats.counts
+    out["collective_bytes_by_op"] = {k: float(v)
+                                     for k, v in stats.bytes_by_op.items()}
+    if want_memory:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "alias_bytes_per_dev": ma.alias_size_in_bytes,
+            "peak_bytes_per_dev": (ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+        }
+        print(f"  memory_analysis: {ma}")
+        print(f"  cost_analysis: flops={out['flops']:.3e} "
+              f"bytes={out['bytes']:.3e} wire={out['wire_bytes']:.3e}")
+    return out
+
+
+def slstm_correction(cfg, case, mesh):
+    """Analytic per-device FLOPs for the sequential sLSTM time-scan."""
+    n_slstm = sum(sum(1 for s in g.pattern if s.kind == "slstm") * g.repeat
+                  for g in cfg.groups)
+    if n_slstm == 0 or case.kind == "decode":
+        return 0.0
+    b_axes = sharding.batch_axes(mesh, case.global_batch)
+    shards = 1
+    for a in b_axes:
+        shards *= mesh.shape[a]
+    b_local = case.global_batch / max(shards, 1)
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    per_step = b_local * (4 * nh * hd * hd * 2 + 20 * nh * hd)
+    fwd = (case.seq_len - 1) * per_step
+    return n_slstm * fwd * (3.0 if case.kind == "train" else 1.0)
+
+
+def corrected_costs(cfg, case, mesh):
+    """Unrolled-variant extrapolation -> per-device (flops, bytes, wire)."""
+    repeats = [g.repeat for g in cfg.groups]
+    base = compile_cell(variant_cfg(cfg, [1] * len(repeats)), case, mesh,
+                        want_memory=False)
+    flops, byts, wire = base["flops"], base["bytes"], base["wire_bytes"]
+    coll = dict(base["collective_bytes_by_op"])
+    counts = dict(base["collective_counts"])
+    for gi, r in enumerate(repeats):
+        if r == 1:
+            continue
+        reps = [1] * len(repeats)
+        reps[gi] = 2
+        two = compile_cell(variant_cfg(cfg, reps), case, mesh,
+                           want_memory=False)
+        flops += (r - 1) * (two["flops"] - base["flops"])
+        byts += (r - 1) * (two["bytes"] - base["bytes"])
+        wire += (r - 1) * (two["wire_bytes"] - base["wire_bytes"])
+        for k, v in two["collective_bytes_by_op"].items():
+            coll[k] = coll.get(k, 0.0) + (r - 1) * (v - base[
+                "collective_bytes_by_op"].get(k, 0.0))
+        for k, v in two["collective_counts"].items():
+            counts[k] = counts.get(k, 0) + (r - 1) * (v - base[
+                "collective_counts"].get(k, 0))
+    flops += slstm_correction(cfg, case, mesh)
+    return {"flops": flops, "bytes": byts, "wire_bytes": wire,
+            "collective_bytes_by_op": coll, "collective_counts": counts}
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: pathlib.Path,
+             *, force: bool = False, skip_variants: bool = False,
+             optimized: bool = False) -> dict:
+    suffix = "_opt" if optimized else ""
+    out_path = out_dir / (f"{configs.canonical(arch)}__{shape}"
+                          f"__{mesh_name}{suffix}.json")
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        print(f"[skip-cached] {out_path.name}: {rec.get('status')}")
+        return rec
+    if optimized:
+        from repro.configs.optimized import optimized_config
+        cfg = optimized_config(arch)
+    else:
+        cfg = configs.get_config(arch)
+    case = SHAPE_CASES[shape]
+    rec = {"arch": configs.canonical(arch), "shape": shape,
+           "mesh": mesh_name, "time": time.strftime("%F %T")}
+    if shape == "long_500k" and not cfg.subquadratic:
+        rec.update(status="skip",
+                   reason="full-attention arch; long_500k requires "
+                          "sub-quadratic decode (DESIGN.md)")
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[skip] {out_path.name}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = mesh.size
+    try:
+        print(f"[run ] {arch} {shape} {mesh_name} ({n_dev} devices)")
+        full = compile_cell(cfg, case, mesh, want_memory=True)
+        rec["full"] = full
+        if not skip_variants:
+            corr = corrected_costs(cfg, case, mesh)
+            rec["corrected"] = corr
+            tokens = case.global_batch * (case.seq_len
+                                          if case.kind != "decode" else 1)
+            mf = rl.model_flops(cfg.active_param_count(), tokens,
+                                case.kind) + rl.attn_model_flops(cfg, case)
+            roof = rl.Roofline(flops=corr["flops"],
+                               bytes_accessed=corr["bytes"],
+                               wire_bytes=corr["wire_bytes"],
+                               model_flops=mf / n_dev)
+            rec["roofline"] = roof.to_dict()
+        rec["n_devices"] = n_dev
+        rec["status"] = "ok"
+    except Exception as e:  # record failures as artifacts too
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {arch} {shape} {mesh_name}: {e}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPES + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-variants", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the §Perf-validated optimized configs")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = configs.all_arch_names() if args.all or not args.arch \
+        else [args.arch]
+    shapes = SHAPES if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name, out_dir,
+                               force=args.force,
+                               skip_variants=args.skip_variants,
+                               optimized=args.optimized)
+                if rec.get("status") == "error":
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"\ndone: {n_ok} ok/skip, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s/link (ring-collective effective)
+
+Terms (per-device quantities; XLA SPMD modules report per-device costs):
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_wire_bytes_per_device / ICI_BW
+
+Collective wire bytes are parsed from the compiled HLO (``as_text``) using
+ring-algorithm cost factors over the op's replica-group size n:
+    all-gather      (n-1)/n * result
+    all-reduce      2 (n-1)/n * size
+    reduce-scatter  (n-1)   * result        (result is the scattered shard)
+    all-to-all      (n-1)/n * size
+    collective-permute  1   * size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4,
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|\S+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group("dt"), 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group("gs")), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    counts: dict = dataclasses.field(default_factory=dict)
+    bytes_by_op: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op: str, b: float) -> None:
+        self.counts[op] = self.counts.get(op, 0) + 1
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+        self.wire_bytes += b
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device collective wire bytes from a compiled SPMD HLO module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue  # count only the -start of async pairs
+        op = m.group("op")
+        size = _shape_bytes(m.group("shape"))
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            b = size * (n - 1) / n
+        elif op == "all-reduce":
+            b = size * 2 * (n - 1) / n
+        elif op == "reduce-scatter":
+            b = size * (n - 1)
+        elif op == "all-to-all":
+            b = size * (n - 1) / n
+        else:  # collective-permute
+            b = float(size)
+        stats.add(op, b)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    bytes_accessed: float     # per device
+    wire_bytes: float         # per device
+    model_flops: float        # analytic useful flops, per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound (sum) — reported alongside max()."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the dominant term
+        sets step time: (model_flops/PEAK) / max-term."""
+        t = self.step_time
+        return (self.model_flops / PEAK_FLOPS) / t if t else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "model_flops_per_dev": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(param_count_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * param_count_active * tokens
+
+
+def attn_model_flops(cfg, case) -> float:
+    """Useful attention FLOPs not covered by 6·N·D (scores + AV matmuls),
+    approximated per mixer family.  Keeps the useful-FLOPs ratio honest
+    for attention-dominated cells (small-d, long-S archs)."""
+    b = case.global_batch
+    s = 1 if case.kind == "decode" else case.seq_len
+    t_ctx = case.seq_len
+    mult = 3.0 if case.kind == "train" else 1.0
+    total = 0.0
+    for g in cfg.groups:
+        for spec in g.pattern:
+            if spec.kind in ("attn", "mla", "cross_attn"):
+                h = cfg.num_heads
+                if spec.kind == "mla":
+                    m = cfg.mla
+                    dd = m.nope_head_dim + m.rope_head_dim + m.v_head_dim
+                else:
+                    dd = 2 * cfg.head_dim
+                if spec.kind == "cross_attn":
+                    t_avg = cfg.num_image_tokens
+                elif case.kind == "decode":
+                    t_avg = t_ctx
+                elif spec.window:
+                    t_avg = min(spec.window, t_ctx)
+                else:
+                    t_avg = t_ctx / 2
+                total += 2.0 * b * h * dd * s * t_avg * g.repeat * mult
+            elif spec.kind == "mlstm" and case.kind != "decode":
+                d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+                hd = d_inner // cfg.num_heads
+                total += (4.0 * b * cfg.num_heads * hd * s
+                          * cfg.xlstm.chunk / 2 * g.repeat * mult)
+            elif spec.kind == "mamba2" and case.kind != "decode":
+                mc = cfg.mamba
+                d_inner = mc.expand * cfg.d_model
+                nh = d_inner // mc.head_dim
+                total += (2.0 * b * s * mc.chunk / 2
+                          * (nh * mc.head_dim + 2 * mc.d_state)
+                          * g.repeat * mult)
+    return total

@@ -1,0 +1,6 @@
+from repro.models import model
+from repro.models.config import (GroupSpec, LayerSpec, MambaConfig,
+                                 MLAConfig, ModelConfig, MoEConfig,
+                                 XLSTMConfig, uniform_groups)
+from repro.models.model import (abstract_cache, abstract_params, decode_step,
+                                forward, init_cache, init_params, prefill)

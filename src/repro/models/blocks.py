@@ -1,0 +1,209 @@
+"""Layer composition and the scan-over-layers group machinery.
+
+One *layer* = (pre-norm -> mixer block -> residual) + optional
+(pre-norm -> MLP/MoE -> residual), with gemma2-style post-norms when
+``spec.post_norms``.  A *group* scans a repeating pattern of layers with
+stacked parameters; weight-shared slots (zamba2's shared attention) are
+closed over instead of scanned.  ``cfg.unroll`` switches the scan to a
+Python loop — used by the dry-run cost-accounting variants (DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mamba2, xlstm
+from repro.models.common import rmsnorm, rmsnorm_init, take_keys
+from repro.models.config import GroupSpec, LayerSpec, ModelConfig
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.models.moe import apply_moe, init_moe
+
+Params = Any
+
+_MIXER_INIT = {
+    "attn": attention.init_attn,
+    "mla": attention.init_mla,
+    "cross_attn": attention.init_cross_attn,
+    "mamba2": mamba2.init_mamba2,
+    "mlstm": xlstm.init_mlstm,
+    "slstm": xlstm.init_slstm,
+}
+
+_CACHE_INIT = {
+    "attn": attention.init_attn_cache,
+    "mla": attention.init_mla_cache,
+    "cross_attn": attention.init_cross_cache,
+    "mamba2": mamba2.init_mamba_cache,
+    "mlstm": xlstm.init_mlstm_cache,
+    "slstm": xlstm.init_slstm_cache,
+}
+
+ZERO_AUX = {"moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_dropped": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    k1, k2 = take_keys(key, 2)
+    dt = cfg.compute_dtype
+    p: dict = {}
+    if spec.kind != "none":
+        p["pre_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["mixer"] = _MIXER_INIT[spec.kind](k1, cfg, spec)
+        if spec.post_norms:
+            p["post_norm"] = rmsnorm_init(cfg.d_model, dt)
+    if spec.mlp != "none":
+        p["pre_mlp_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["mlp"] = (init_moe(k2, cfg) if spec.mlp == "moe"
+                    else init_mlp(k2, cfg))
+        if spec.post_norms:
+            p["post_mlp_norm"] = rmsnorm_init(cfg.d_model, dt)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> Params:
+    if spec.kind == "none":
+        return {}
+    return _CACHE_INIT[spec.kind](cfg, spec, batch, max_len, dtype)
+
+
+def apply_layer(params: Params, cfg: ModelConfig, spec: LayerSpec,
+                x: jax.Array, ctx: dict, cache: Params | None
+                ) -> tuple[jax.Array, Params | None, dict]:
+    aux = dict(ZERO_AUX)
+    if spec.kind != "none":
+        h = rmsnorm(params["pre_norm"], x, eps=cfg.norm_eps)
+        if spec.kind == "attn":
+            h, new_cache = attention.apply_attn(
+                params["mixer"], cfg, spec, h, ctx["positions"], cache)
+        elif spec.kind == "mla":
+            h, new_cache = attention.apply_mla(
+                params["mixer"], cfg, spec, h, ctx["positions"], cache,
+                absorbed=ctx.get("mla_absorbed", False))
+        elif spec.kind == "cross_attn":
+            h, new_cache = attention.apply_cross_attn(
+                params["mixer"], cfg, spec, h, ctx.get("image_embeds"), cache)
+        elif spec.kind == "mamba2":
+            h, new_cache = mamba2.apply_mamba2(params["mixer"], cfg, spec, h,
+                                               cache)
+        elif spec.kind == "mlstm":
+            h, new_cache = xlstm.apply_mlstm(params["mixer"], cfg, spec, h,
+                                             cache)
+        elif spec.kind == "slstm":
+            h, new_cache = xlstm.apply_slstm(params["mixer"], cfg, spec, h,
+                                             cache)
+        else:  # pragma: no cover
+            raise ValueError(spec.kind)
+        if spec.post_norms:
+            h = rmsnorm(params["post_norm"], h, eps=cfg.norm_eps)
+        x = x + h
+    else:
+        new_cache = cache
+
+    if spec.mlp != "none":
+        h = rmsnorm(params["pre_mlp_norm"], x, eps=cfg.norm_eps)
+        if spec.mlp == "moe":
+            h, moe_aux = apply_moe(params["mlp"], cfg, h)
+            aux["moe_aux_loss"] = moe_aux["moe_aux_loss"].astype(jnp.float32)
+            aux["moe_dropped"] = moe_aux["moe_dropped"].astype(jnp.float32)
+        else:
+            h = apply_mlp(params["mlp"], cfg, h)
+        if spec.post_norms:
+            h = rmsnorm(params["post_mlp_norm"], h, eps=cfg.norm_eps)
+        x = x + h
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Groups (scan over repeats)
+# ---------------------------------------------------------------------------
+
+def init_group(key, cfg: ModelConfig, gspec: GroupSpec) -> Params:
+    slot_params = []
+    keys = take_keys(key, len(gspec.pattern))
+    for spec, k in zip(gspec.pattern, keys):
+        if spec.shared:
+            slot_params.append(init_layer(k, cfg, spec))
+        else:
+            ks = jax.random.split(k, gspec.repeat)
+            slot_params.append(
+                jax.vmap(lambda kk: init_layer(kk, cfg, spec))(ks))
+    return {"slots": tuple(slot_params)}
+
+
+def init_group_cache(cfg: ModelConfig, gspec: GroupSpec, batch: int,
+                     max_len: int, dtype) -> Params:
+    slots = []
+    for spec in gspec.pattern:
+        one = init_layer_cache(cfg, spec, batch, max_len, dtype)
+        slots.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (gspec.repeat, *a.shape)).copy()
+            if hasattr(a, "shape") else a, one))
+    return {"slots": tuple(slots)}
+
+
+def apply_group(params: Params, cfg: ModelConfig, gspec: GroupSpec,
+                x: jax.Array, ctx: dict, cache: Params | None
+                ) -> tuple[jax.Array, Params | None, dict]:
+    pattern = gspec.pattern
+    scanned_params = tuple(p for spec, p in zip(pattern, params["slots"])
+                           if not spec.shared)
+    shared_params = tuple(p for spec, p in zip(pattern, params["slots"])
+                          if spec.shared)
+
+    def body(carry, per_repeat):
+        xc, aux_acc = carry
+        sl_params, sl_caches = per_repeat
+        it_sc, it_sh = iter(sl_params), iter(shared_params)
+        new_caches = []
+        for i, spec in enumerate(pattern):
+            p = next(it_sh) if spec.shared else next(it_sc)
+            c = sl_caches[i] if (sl_caches is not None and sl_caches[i]) \
+                else None
+            xc, nc, aux = apply_layer(p, cfg, spec, xc, ctx, c)
+            new_caches.append({} if nc is None else nc)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        return (xc, aux_acc), tuple(new_caches)
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=cfg.unroll)
+
+    aux0 = dict(ZERO_AUX)
+    sl_caches = None if cache is None else cache["slots"]
+    if cfg.unroll:
+        carry = (x, aux0)
+        new_slots = [[] for _ in pattern]
+        for r in range(gspec.repeat):
+            sp = tuple(jax.tree.map(lambda a: a[r], p) for p in scanned_params)
+            sc = (None if sl_caches is None else
+                  tuple(jax.tree.map(lambda a: a[r], c) for c in sl_caches))
+            carry, ncs = body(carry, (sp, sc))
+            for i, nc in enumerate(ncs):
+                new_slots[i].append(nc)
+        (x, aux) = carry
+        if cache is None:
+            return x, None, aux
+        stacked = tuple(
+            jax.tree.map(lambda *a: jnp.stack(a), *ns) if ns and ns[0] else {}
+            for ns in new_slots)
+        return x, {"slots": stacked}, aux
+
+    xs = (scanned_params,
+          sl_caches if sl_caches is not None
+          else tuple(None for _ in pattern))
+    if sl_caches is None:
+        # scan requires uniform xs; use empty dicts as per-slot cache stand-in
+        xs = (scanned_params, tuple({} for _ in pattern))
+    (x, aux), new_caches = jax.lax.scan(body, (x, aux0), xs)
+    if cache is None:
+        return x, None, aux
+    return x, {"slots": new_caches}, aux

@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD) block: fused in-projection, causal depthwise conv, chunked
+state-space scan, gated RMSNorm, out-projection.
+
+The chunked scan does intra-chunk work as dense matmuls and propagates
+inter-chunk states with ``jax.lax.associative_scan`` (log-depth, no while
+loop) so compiled FLOPs are fully visible to ``cost_analysis`` — see
+DESIGN.md (scan cost-accounting).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init, take_keys
+from repro.models.config import ModelConfig
+from repro.parallel.annotate import hint
+
+Params = Any
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    nh = d_inner // mc.head_dim
+    return d_inner, nh, mc.d_state, mc.d_conv
+
+
+def init_mamba2(key, cfg: ModelConfig, spec=None) -> Params:
+    dt = cfg.compute_dtype
+    d_inner, nh, ns, k = _dims(cfg)
+    conv_dim = d_inner + 2 * ns
+    ks = take_keys(key, 4)
+    return {
+        # fused in-proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              (2 * d_inner + 2 * ns + nh,), dt),
+        "conv_w": (jax.random.normal(ks[1], (k, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dt),
+        "out_proj": dense_init(ks[2], d_inner, (cfg.d_model,), dt),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, spec, batch: int, max_len: int,
+                     dtype) -> Params:
+    d_inner, nh, ns, k = _dims(cfg)
+    conv_dim = d_inner + 2 * ns
+    return {
+        "conv": jnp.zeros((batch, k - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.mamba.head_dim, ns), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B,S,C), w: (K,C). Returns (y, new_tail)."""
+    k = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(y + b[None, None]), new_tail
+
+
+def _ssd_chunked(x, dtv, a, bmat, cmat, d_skip, h0, chunk: int):
+    """Chunked SSD. x:(B,S,NH,HD) dtv:(B,S,NH) bmat/cmat:(B,S,NS) a:(NH,).
+
+    Returns (y, h_final:(B,NH,HD,NS))."""
+    bsz, s, nh, hd = x.shape
+    ns = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    xr = x.reshape(bsz, nc, q, nh, hd).astype(jnp.float32)
+    dtr = dtv.reshape(bsz, nc, q, nh).astype(jnp.float32)
+    br = bmat.reshape(bsz, nc, q, ns).astype(jnp.float32)
+    cr = cmat.reshape(bsz, nc, q, ns).astype(jnp.float32)
+
+    logdec = dtr * a[None, None, None]                  # (B,NC,Q,NH) <= 0
+    fcum = jnp.cumsum(logdec, axis=2)                   # within-chunk cumsum
+    ftot = fcum[:, :, -1]                               # (B,NC,NH)
+
+    # intra-chunk: scores[t,u] = (C_t . B_u) * exp(F_t - F_u) * dt_u, u <= t
+    cb = jnp.einsum("bcqn,bcun->bcqu", cr, br)          # (B,NC,Q,Q)
+    gap = fcum[:, :, :, None, :] - fcum[:, :, None, :, :]   # (B,NC,Q,Q,NH)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(gap), 0.0)
+    w = w * cb[..., None] * dtr[:, :, None, :, :]
+    y = jnp.einsum("bcquh,bcuhd->bcqhd", w, xr)
+
+    # chunk states: S_c = sum_u exp(F_Q - F_u) dt_u B_u (x) x_u
+    decay_u = jnp.exp(ftot[:, :, None] - fcum)          # (B,NC,Q,NH)
+    sc = jnp.einsum("bcuh,bcuhd,bcun->bchdn", decay_u * dtr, xr, br)
+
+    # inter-chunk: H_c = exp(F_Q_c) H_{c-1} + S_c  (associative affine scan)
+    adec = jnp.exp(ftot)                                # (B,NC,NH)
+
+    def comb(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2[..., None, None] * b1 + b2
+
+    acc_a, acc_b = jax.lax.associative_scan(comb, (adec, sc), axis=1)
+    # exclusive prefix entering chunk c: H_in_c = prod(a_1..c-1) h0 + B_{c-1}
+    prod_a = jnp.concatenate(
+        [jnp.ones_like(acc_a[:, :1]), acc_a[:, :-1]], axis=1)
+    h_in = prod_a[..., None, None] * h0[:, None] + jnp.concatenate(
+        [jnp.zeros_like(acc_b[:, :1]), acc_b[:, :-1]], axis=1)
+
+    y = y + jnp.einsum("bcqn,bcqh,bchdn->bcqhd", cr, jnp.exp(fcum), h_in)
+    y = y + d_skip[None, None, None, :, None] * xr
+    h_final = acc_a[:, -1][..., None, None] * h0 + acc_b[:, -1]
+    return y.reshape(bsz, s, nh, hd), h_final
+
+
+def apply_mamba2(params: Params, cfg: ModelConfig, spec, x: jax.Array,
+                 cache: Params | None = None
+                 ) -> tuple[jax.Array, Params | None]:
+    bsz, s, _ = x.shape
+    d_inner, nh, ns, k = _dims(cfg)
+    hd = cfg.mamba.head_dim
+    proj = jnp.einsum("bsd,dn->bsn", x, params["in_proj"])
+    z, xi, bmat, cmat, dtv = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + ns, 2 * d_inner + 2 * ns],
+        axis=-1)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32)
+                          + params["dt_bias"][None, None])
+    a = -jnp.exp(params["a_log"])
+
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    tail = cache["conv"] if cache is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], tail)
+    xi, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + ns], axis=-1)
+    xh = hint(xi.reshape(bsz, s, nh, hd), "batch", "seq", "mamba_heads",
+              None)
+
+    # pad to a chunk multiple with dt=0 / x=0 tail: decay=exp(0)=1 and a
+    # zero input leave the state untouched, so padded rows are inert
+    q = min(cfg.mamba.chunk, s) if s > 1 else 1
+    pad = (-s) % max(q, 1)
+
+    if s == 1 and cache is not None:  # decode step
+        h = cache["ssm"]
+        dt1 = dtv[:, 0]                                   # (B,NH)
+        decay = jnp.exp(dt1 * a[None])
+        dbx = jnp.einsum("bh,bn,bhd->bhdn", dt1,
+                         bmat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h = h * decay[..., None, None] + dbx
+        y = jnp.einsum("bhdn,bn->bhd", h, cmat[:, 0].astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(bsz, 1, d_inner)
+        new_cache = {"conv": new_tail, "ssm": h}
+    else:
+        h0 = (cache["ssm"] if cache is not None
+              else jnp.zeros((bsz, nh, hd, ns), jnp.float32))
+        xh_p, dtv_p, b_p, c_p = xh, dtv, bmat, cmat
+        if pad:
+            zpad = lambda arr: jnp.pad(arr, [(0, 0), (0, pad)]
+                                       + [(0, 0)] * (arr.ndim - 2))
+            xh_p, dtv_p = zpad(xh), zpad(dtv)
+            b_p, c_p = zpad(bmat), zpad(cmat)
+        y, hf = _ssd_chunked(xh_p, dtv_p, a, b_p, c_p, params["d_skip"],
+                             h0, cfg.mamba.chunk)
+        y = y[:, :s].reshape(bsz, s, d_inner)
+        new_cache = (None if cache is None
+                     else {"conv": new_tail, "ssm": hf})
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, eps=cfg.norm_eps)
+    return jnp.einsum("bsn,nd->bsd", y, params["out_proj"]), new_cache

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: grouped GShard-style top-k capacity dispatch.
+
+Supports Grok-1-style softmax top-2 over 8 experts and DeepSeek-V3-style
+sigmoid top-8 over 256 routed + shared experts with aux-loss-free bias
+routing.
+
+Tokens are reshaped into dispatch groups of ~``GROUP_SIZE`` tokens so the
+one-hot dispatch/combine tensors stay O(S_g^2) per group instead of O(T^2);
+groups shard over the data axes, experts shard over the model (and, for very
+large expert counts, also the data) axis — see repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.models.common import ACTIVATIONS, dense_init, take_keys
+from repro.models.config import ModelConfig
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.parallel.annotate import hint
+
+Params = Any
+GROUP_SIZE = 2048
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    dt = cfg.compute_dtype
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_expert or cfg.d_ff
+    k_r, k_e, k_s = take_keys(key, 3)
+    ke1, ke2, ke3 = take_keys(k_e, 3)
+    p = {
+        "router": {"w": dense_init(k_r, d, (m.num_experts,), jnp.float32)},
+        "experts": {
+            "wi": _stack_init(ke1, m.num_experts, d, f, dt),
+            "wu": _stack_init(ke2, m.num_experts, d, f, dt),
+            "wo": _stack_init(ke3, m.num_experts, f, d, dt),
+        },
+    }
+    if m.router_bias:
+        p["router"]["bias"] = jnp.zeros((m.num_experts,), jnp.float32)
+    if m.num_shared:
+        p["shared"] = init_mlp(k_s, cfg, d_ff=f * m.num_shared)
+    return p
+
+
+def _stack_init(key, e: int, din: int, dout: int, dt) -> jax.Array:
+    keys = jax.random.split(key, e)
+    return jax.vmap(lambda k: dense_init(k, din, (dout,), dt))(keys)
+
+
+def _group(tokens: jax.Array, group_size: int = GROUP_SIZE) -> jax.Array:
+    t = tokens.shape[0]
+    sg = group_size if t % group_size == 0 else t
+    return tokens.reshape(t // sg, sg, tokens.shape[-1])
+
+
+def apply_moe(params: Params, cfg: ModelConfig, x: jax.Array
+              ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (y, aux) where aux carries load-balance stats."""
+    m = cfg.moe
+    b, s, d = x.shape
+    act = ACTIVATIONS[cfg.activation]
+    xt = _group(x.reshape(b * s, d), m.group_size)   # (G, Sg, D)
+    g, sg, _ = xt.shape
+    e = m.num_experts
+    cap = max(int(sg * m.top_k * m.capacity_factor / e), 1)
+    cap = min(cap, sg)
+
+    logits = jnp.einsum("gsd,de->gse", xt, params["router"]["w"]
+                        ).astype(jnp.float32)
+    bias = params["router"].get("bias")
+    if bias is not None:
+        bias = jax.lax.stop_gradient(bias)
+    weights, idx = jax.vmap(
+        lambda lg: kref.topk_gating(lg, m.top_k, router=m.router, bias=bias)
+    )(logits)                                  # (G,Sg,K), (G,Sg,K)
+
+    # Capacity-limited one-hot dispatch (GShard): earlier tokens win slots.
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)        # (G,Sg,K,E)
+    # priority: k=0 choices across all tokens first, then k=1, ...
+    prio = jnp.moveaxis(onehot, 2, 1).reshape(g, m.top_k * sg, e)
+    pos = jnp.cumsum(prio, axis=1) - 1                       # slot per (k,t)
+    pos = jnp.moveaxis(pos.reshape(g, m.top_k, sg, e), 1, 2)  # (G,Sg,K,E)
+    keep = (pos < cap) & (onehot > 0)
+    slot = jnp.where(keep, pos, 0)
+    disp = (jax.nn.one_hot(slot, cap, dtype=xt.dtype)
+            * keep[..., None].astype(xt.dtype))              # (G,Sg,K,E,C)
+    comb = disp * weights[..., None, None].astype(xt.dtype)
+    disp = disp.sum(axis=2)                                  # (G,Sg,E,C)
+    comb = comb.sum(axis=2)
+
+    xin = jnp.einsum("gsec,gsd->gecd", disp, xt)             # (G,E,C,D)
+    xin = hint(xin, "moe_groups", "experts", None, None)
+    wi = hint(params["experts"]["wi"], "experts", "wt_d", "expert_ffn")
+    wu = hint(params["experts"]["wu"], "experts", "wt_d", "expert_ffn")
+    wo = hint(params["experts"]["wo"], "experts", "expert_ffn", "wt_d")
+    h = act(jnp.einsum("gecd,edf->gecf", xin, wi))
+    h = h * jnp.einsum("gecd,edf->gecf", xin, wu)
+    h = hint(h, "moe_groups", "experts", None, "expert_ffn")
+    xout = jnp.einsum("gecf,efd->gecd", h, wo)
+    xout = hint(xout, "moe_groups", "experts", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", comb, xout)
+    y = hint(y, "moe_groups", None, None)
+
+    # load-balance stats (Switch aux loss + DSv3 bias-update signal)
+    probs = (jax.nn.softmax(logits, axis=-1) if m.router == "softmax"
+             else jax.nn.sigmoid(logits))
+    frac_tokens = jnp.mean(onehot.sum(axis=2).astype(jnp.float32),
+                           axis=(0, 1))                      # (E,)
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = e * jnp.sum(frac_tokens * frac_prob) * m.aux_loss_weight
+    dropped = 1.0 - jnp.sum(disp) / (g * sg * m.top_k)
+    aux = {"moe_aux_loss": aux_loss, "moe_load": frac_tokens,
+           "moe_dropped": dropped}
+
+    if m.num_shared:
+        y = y + apply_mlp(params["shared"], cfg, xt)
+    return y.reshape(b, s, d), aux

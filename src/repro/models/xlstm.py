@@ -1,0 +1,242 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, inherently sequential recurrence with block-diagonal recurrent
+weights).
+
+The mLSTM chunked path mirrors the Mamba-2 treatment: intra-chunk dense
+matmuls + ``associative_scan`` over inter-chunk (C, n) states.  Gate
+pre-activations are soft-capped so the unstabilised inter-chunk exponentials
+stay in fp32 range (validated against the stabilised quadratic oracle in
+kernels/ref.py).  sLSTM keeps a genuine ``lax.scan`` over time — the paper
+itself notes it is not parallelisable; its FLOPs are corrected analytically
+in the roofline (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init, soft_cap, take_keys
+from repro.models.config import ModelConfig
+
+Params = Any
+GATE_CAP = 15.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ModelConfig):
+    d_inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    return d_inner, nh, d_inner // nh
+
+
+def init_mlstm(key, cfg: ModelConfig, spec=None) -> Params:
+    dt = cfg.compute_dtype
+    d_inner, nh, hd = _mdims(cfg)
+    ks = take_keys(key, 6)
+    return {
+        "up": dense_init(ks[0], cfg.d_model, (2 * d_inner,), dt),  # [x, z]
+        "wq": dense_init(ks[1], d_inner, (d_inner,), dt),
+        "wk": dense_init(ks[2], d_inner, (d_inner,), dt),
+        "wv": dense_init(ks[3], d_inner, (d_inner,), dt),
+        "w_gates": dense_init(ks[4], d_inner, (2 * nh,), dt),  # [i, f]
+        "norm": rmsnorm_init(d_inner, dt),
+        "down": dense_init(ks[5], d_inner, (cfg.d_model,), dt),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, spec, batch: int, max_len: int,
+                     dtype) -> Params:
+    _, nh, hd = _mdims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+def _mlstm_chunked(q, k, v, ig, fg, c0, n0, chunk: int, eps: float = 1e-6):
+    """q,k,v: (B,S,NH,HD); ig,fg: (B,S,NH) soft-capped pre-activations.
+    Returns (y, c_final, n_final)."""
+    bsz, s, nh, hd = q.shape
+    qq = min(chunk, s)
+    assert s % qq == 0
+    nc = s // qq
+    shp = (bsz, nc, qq, nh)
+    qr = (q.reshape(*shp, hd) / (hd ** 0.5)).astype(jnp.float32)
+    kr = k.reshape(*shp, hd).astype(jnp.float32)
+    vr = v.reshape(*shp, hd).astype(jnp.float32)
+    igr = ig.reshape(shp).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.reshape(shp).astype(jnp.float32))
+    fcum = jnp.cumsum(logf, axis=2)                      # (B,NC,Q,NH)
+    ftot = fcum[:, :, -1]
+
+    # intra-chunk: w[t,u] = q_t.k_u * exp(F_t - F_u + i_u), u <= t
+    gap = fcum[:, :, :, None, :] - fcum[:, :, None, :, :] \
+        + igr[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((qq, qq), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], jnp.exp(gap), 0.0)
+    scores = jnp.einsum("bcqnh,bcunh->bcqun", qr, kr) * dmat
+    y_num = jnp.einsum("bcqun,bcunh->bcqnh", scores, vr)
+    y_den = jnp.sum(scores, axis=3)                      # (B,NC,Q,NH)
+
+    # chunk state contributions
+    decay_u = jnp.exp(ftot[:, :, None] - fcum + igr)     # (B,NC,Q,NH)
+    dc = jnp.einsum("bcun,bcunh,bcund->bcnhd",
+                    decay_u, kr, vr)                     # (B,NC,NH,HD,HD)
+    dn = jnp.einsum("bcun,bcunh->bcnh", decay_u, kr)     # (B,NC,NH,HD)
+    adec = jnp.exp(ftot)                                 # (B,NC,NH)
+
+    def comb(lhs, rhs):
+        (a1, c1, n1), (a2, c2, n2) = lhs, rhs
+        return (a1 * a2,
+                a2[..., None, None] * c1 + c2,
+                a2[..., None] * n1 + n2)
+
+    acc = jax.lax.associative_scan(comb, (adec, dc, dn), axis=1)
+    prod_a = jnp.concatenate(
+        [jnp.ones_like(acc[0][:, :1]), acc[0][:, :-1]], axis=1)
+    c_in = prod_a[..., None, None] * c0[:, None] + jnp.concatenate(
+        [jnp.zeros_like(acc[1][:, :1]), acc[1][:, :-1]], axis=1)
+    n_in = prod_a[..., None] * n0[:, None] + jnp.concatenate(
+        [jnp.zeros_like(acc[2][:, :1]), acc[2][:, :-1]], axis=1)
+
+    w_in = jnp.exp(fcum)                                  # (B,NC,Q,NH)
+    y_num = y_num + jnp.einsum("bcqnh,bcnhd,bcqn->bcqnd", qr, c_in, w_in)
+    y_den = y_den + jnp.einsum("bcqnh,bcnh,bcqn->bcqn", qr, n_in, w_in)
+    y = y_num / (jnp.maximum(jnp.abs(y_den), 1.0)[..., None] + eps)
+
+    c_f = acc[0][:, -1][..., None, None] * c0 + acc[1][:, -1]
+    n_f = acc[0][:, -1][..., None] * n0 + acc[2][:, -1]
+    return y.reshape(bsz, s, nh, hd), c_f, n_f
+
+
+def apply_mlstm(params: Params, cfg: ModelConfig, spec, x: jax.Array,
+                cache: Params | None = None
+                ) -> tuple[jax.Array, Params | None]:
+    bsz, s, _ = x.shape
+    d_inner, nh, hd = _mdims(cfg)
+    up = jnp.einsum("bsd,dn->bsn", x, params["up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsn,nm->bsm", xi, params["wq"]).reshape(bsz, s, nh, hd)
+    k = jnp.einsum("bsn,nm->bsm", xi, params["wk"]).reshape(bsz, s, nh, hd)
+    v = jnp.einsum("bsn,nm->bsm", xi, params["wv"]).reshape(bsz, s, nh, hd)
+    gates = jnp.einsum("bsn,nm->bsm", xi, params["w_gates"])
+    ig, fg = jnp.split(soft_cap(gates, GATE_CAP), 2, axis=-1)  # (B,S,NH)
+
+    if s == 1 and cache is not None:  # decode
+        c0, n0 = cache["c"], cache["n"]
+        logf = jax.nn.log_sigmoid(fg[:, 0].astype(jnp.float32))
+        iexp = jnp.exp(ig[:, 0].astype(jnp.float32))
+        fexp = jnp.exp(logf)
+        kv = jnp.einsum("bnh,bnd->bnhd", k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32))
+        c1 = fexp[..., None, None] * c0 + iexp[..., None, None] * kv
+        n1 = fexp[..., None] * n0 + iexp[..., None] * k[:, 0].astype(
+            jnp.float32)
+        qf = q[:, 0].astype(jnp.float32) / (hd ** 0.5)
+        num = jnp.einsum("bnh,bnhd->bnd", qf, c1)
+        den = jnp.einsum("bnh,bnh->bn", qf, n1)
+        y = (num / (jnp.maximum(jnp.abs(den), 1.0)[..., None] + 1e-6)
+             ).reshape(bsz, 1, d_inner)
+        new_cache = {"c": c1, "n": n1}
+    else:
+        c0 = (cache["c"] if cache is not None
+              else jnp.zeros((bsz, nh, hd, hd), jnp.float32))
+        n0 = (cache["n"] if cache is not None
+              else jnp.zeros((bsz, nh, hd), jnp.float32))
+        # pad to a chunk multiple with inert gates: i=-inf (no input),
+        # f=+large (decay 1) so the carried state is untouched
+        qq = min(cfg.xlstm.chunk, s)
+        pad = (-s) % qq
+        if pad:
+            p3 = lambda arr, val: jnp.pad(
+                arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2),
+                constant_values=val)
+            q, k, v = p3(q, 0), p3(k, 0), p3(v, 0)
+            ig, fg = p3(ig, -30.0), p3(fg, 30.0)
+        y, cf, nf = _mlstm_chunked(q, k, v, ig, fg, c0, n0, cfg.xlstm.chunk)
+        y = y[:, :s].reshape(bsz, s, d_inner)
+        new_cache = None if cache is None else {"c": cf, "n": nf}
+
+    y = rmsnorm(params["norm"], y.astype(x.dtype), eps=cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsn,nd->bsd", y, params["down"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _sdims(cfg: ModelConfig):
+    nh = cfg.num_heads
+    return cfg.d_model, nh, cfg.d_model // nh
+
+
+def init_slstm(key, cfg: ModelConfig, spec=None) -> Params:
+    dt = cfg.compute_dtype
+    d, nh, hd = _sdims(cfg)
+    pf = cfg.xlstm.slstm_proj_factor
+    d_up = int(d * pf)
+    ks = take_keys(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d, (4 * d,), dt),       # i,f,z,o pre-acts
+        "r": (jax.random.normal(ks[1], (4, nh, hd, hd)) /
+              (hd ** 0.5)).astype(dt),                    # block-diag recurrent
+        "norm": rmsnorm_init(d, dt),
+        "up_gate": dense_init(ks[2], d, (2 * d_up,), dt),
+        "down": dense_init(ks[3], d_up, (d,), dt),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, spec, batch: int, max_len: int,
+                     dtype) -> Params:
+    d, nh, hd = _sdims(cfg)
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, nh, hd), -1e30)}
+
+
+def _slstm_scan(pre, r, state):
+    """pre: (B,S,4,NH,HD) input pre-activations; r: (4,NH,HD,HD)."""
+    def step(carry, p_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bnh,gnhk->bgnk", h, r)          # (B,4,NH,HD)
+        zi, zf, zz, zo = [p_t[:, g] + rec[:, g] for g in range(4)]
+        logf = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(logf + m, zi)
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c = f * c + i * jnp.tanh(zz)
+        n = f * n + i
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    pre_t = jnp.moveaxis(pre, 1, 0).astype(jnp.float32)   # (S,B,4,NH,HD)
+    (h, c, n, m), ys = jax.lax.scan(step, state, pre_t)
+    return jnp.moveaxis(ys, 0, 1), (h, c, n, m)           # (B,S,NH,HD)
+
+
+def apply_slstm(params: Params, cfg: ModelConfig, spec, x: jax.Array,
+                cache: Params | None = None
+                ) -> tuple[jax.Array, Params | None]:
+    bsz, s, d = x.shape
+    _, nh, hd = _sdims(cfg)
+    pre = jnp.einsum("bsd,dn->bsn", x, params["w_in"]).reshape(
+        bsz, s, 4, nh, hd)
+    state = (
+        (cache["h"], cache["c"], cache["n"], cache["m"]) if cache is not None
+        else tuple(jnp.zeros((bsz, nh, hd), jnp.float32) for _ in range(3))
+        + (jnp.full((bsz, nh, hd), -1e30),))
+    ys, (h, c, n, m) = _slstm_scan(pre, params["r"].astype(jnp.float32),
+                                   state)
+    new_cache = (None if cache is None
+                 else {"h": h, "c": c, "n": n, "m": m})
+    y = ys.reshape(bsz, s, d).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, eps=cfg.norm_eps)
+    up = jnp.einsum("bsd,dn->bsn", y, params["up_gate"])
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(a, approximate=True) * b
+    return jnp.einsum("bsn,nd->bsd", y, params["down"]), new_cache

@@ -1,0 +1,152 @@
+"""Batched serving engine: continuous batching over the model's
+prefill/decode paths.
+
+Requests enter a queue; the engine admits them into free KV-cache slots
+(prompt prefill, padded to bucket sizes to bound recompilation), then runs
+one batched decode step per iteration for all active slots.  Slots free as
+requests finish, new requests are admitted immediately — vLLM-style
+continuous batching on top of this framework's cache layout (which is the
+same layout the multi-pod dry-run shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: run to max_new_tokens
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    submit_t: float = 0.0
+    finish_t: float = 0.0
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 1023) // 1024) * 1024
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
+                 max_len: int = 256):
+        assert not cfg.vision_dim, "engine example supports pure-LM archs"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model_lib.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros(max_batch, dtype=np.int32)    # next position
+        self._next_in = np.zeros(max_batch, dtype=np.int32)
+        self.active: list[Request | None] = [None] * max_batch
+        self.inbox: queue.Queue = queue.Queue()
+        self.n_decode_steps = 0
+        self.n_generated = 0
+        self._stop = threading.Event()
+        self._rid = 0
+
+        def prefill_fn(params, tokens, cache):
+            return model_lib.prefill(params, cfg, tokens, cache)
+
+        def decode_fn(params, tokens, cache, pos):
+            logits, cache = model_lib.decode_step(params, cfg, tokens,
+                                                  cache, pos)
+            return jnp.argmax(logits[:, 0], axis=-1), cache
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=10)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: int = -1) -> Request:
+        self._rid += 1
+        req = Request(self._rid, np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id, submit_t=time.perf_counter())
+        self.inbox.put(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None:
+                continue
+            try:
+                req = self.inbox.get_nowait()
+            except queue.Empty:
+                return
+            # prefill prompt[:-1]; the last prompt token goes through the
+            # normal decode path, yielding the first generated token with a
+            # correctly positioned cache write.
+            s = len(req.prompt)
+            if s > 1:
+                recurrent = (self.cfg.mamba is not None
+                             or self.cfg.xlstm is not None)
+                # recurrent state must not see padding; attention caches
+                # mask by length so bucketed padding is safe
+                bucket = (s - 1 if recurrent
+                          else min(_bucket(s - 1), self.max_len))
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :s - 1] = req.prompt[:-1]  # right-pad
+                one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+                _, one_cache = self._prefill(self.params, jnp.asarray(toks),
+                                             one_cache)
+                self.cache = jax.tree.map(
+                    lambda g, p: g.at[:, slot].set(p[:, 0])
+                    if hasattr(g, "at") else g, self.cache, one_cache)
+            self.pos[slot] = s - 1
+            self._next_in[slot] = int(req.prompt[-1])
+            self.active[slot] = req
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._admit()
+            live = [i for i, r in enumerate(self.active) if r is not None]
+            if not live:
+                time.sleep(0.002)
+                continue
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            for i in live:
+                tokens[i, 0] = self._next_in[i]
+            nxt, self.cache = self._decode(
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(self.pos))
+            nxt = np.asarray(nxt)
+            self.n_decode_steps += 1
+            for i in live:
+                req = self.active[i]
+                self.pos[i] += 1
+                req.out_tokens.append(int(nxt[i]))
+                self._next_in[i] = int(nxt[i])
+                self.n_generated += 1
+                done = (len(req.out_tokens) >= req.max_new_tokens
+                        or int(nxt[i]) == req.eos_id
+                        or self.pos[i] >= self.max_len - 1)
+                if done:
+                    req.finish_t = time.perf_counter()
+                    req.done.set()
+                    self.active[i] = None

@@ -1,0 +1,82 @@
+"""Loss and train-step builders (fwd + bwd + optimizer update), with
+optional microbatch gradient accumulation and MoE aux-loss wiring.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.train.optimizer import Optimizer
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits: (B,S,V) or (B,S,K,V)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        loss, aux = model_lib.forward_loss(params, cfg, batch["tokens"],
+                                           batch["labels"],
+                                           batch.get("image_embeds"))
+        total = loss + aux["moe_aux_loss"]
+        metrics = {"loss": loss, "moe_aux_loss": aux["moe_aux_loss"],
+                   "moe_dropped": aux["moe_dropped"]}
+        return total, metrics
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = opt.apply(params, grads, opt_state)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    if grad_accum == 1:
+        return single
+
+    def accumulated(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        params, opt_state, om = opt.apply(params, grads, opt_state)
+        om["loss"] = lsum / grad_accum
+        return params, opt_state, om
+
+    return accumulated
+
+
+def make_eval_step(cfg: ModelConfig):
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+    return eval_step

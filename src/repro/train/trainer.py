@@ -1,0 +1,229 @@
+"""Training drivers.
+
+:class:`Trainer` — the standard single-controller loop: jitted train step,
+prefetched data, periodic async checkpoints and evals, exact restart from
+the latest checkpoint (data pipeline included, since batches are a pure
+function of step).
+
+:class:`MicrobatchCoordinator` — the paper-integration path: each global
+step becomes a task graph (M microbatch-gradient tasks -> 1 reduce+update
+task) executed by the core runtime across a pool of executors ("pods").
+The work-stealing scheduler rebalances microbatches away from stragglers,
+and executor failure mid-step resubmits the lost microbatches — the
+paper's mechanisms doing real training work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.array_reactor import ArrayReactor
+from repro.core.graph import Task, TaskGraph
+from repro.core.runtime import ThreadRuntime
+from repro.core.schedulers import make_scheduler
+from repro.ckpt import checkpoint as ckpt_lib
+from repro.data.pipeline import PrefetchPipeline, SyntheticDataset
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.train.optimizer import Optimizer, make_optimizer
+from repro.train.train_step import make_loss_fn, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_every: int = 50
+    eval_every: int = 50
+    ckpt_dir: str = ""
+    keep_ckpts: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig,
+                 optimizer: Optimizer | None = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.opt = optimizer or make_optimizer(cfg.optimizer)
+        key = jax.random.PRNGKey(tc.seed)
+        self.params = model_lib.init_params(key, cfg)
+        self.opt_state = self.opt.init(self.params)
+        self.step = 0
+        self.dataset = SyntheticDataset(cfg, tc.global_batch, tc.seq_len,
+                                        tc.seed)
+        self._train_step = jax.jit(make_train_step(cfg, self.opt))
+        self._eval_step = jax.jit(
+            lambda p, b: make_loss_fn(cfg)(p, b)[1]["loss"])
+        self.ckptr = (ckpt_lib.AsyncCheckpointer(tc.ckpt_dir, tc.keep_ckpts)
+                      if tc.ckpt_dir else None)
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self) -> bool:
+        if not self.tc.ckpt_dir:
+            return False
+        step = ckpt_lib.latest_step(self.tc.ckpt_dir)
+        if step is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, step, _ = ckpt_lib.restore(self.tc.ckpt_dir, tree, step)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.step = step
+        return True
+
+    def train(self, steps: int | None = None) -> list[dict]:
+        steps = steps or self.tc.steps
+        pipe = PrefetchPipeline(self.dataset, depth=2, n_loaders=2,
+                                start_step=self.step)
+        try:
+            while self.step < steps:
+                step_id, batch = pipe.get()
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self._train_step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                self.step = step_id + 1
+                rec = {"step": self.step, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "time_s": time.perf_counter() - t0}
+                self.history.append(rec)
+                if self.ckptr and self.step % self.tc.ckpt_every == 0:
+                    self.ckptr.save(self.step,
+                                    {"params": self.params,
+                                     "opt": self.opt_state},
+                                    meta={"config": self.cfg.name})
+                if self.step % self.tc.eval_every == 0:
+                    eb = {k: jnp.asarray(v) for k, v in
+                          self.dataset.batch_at(10_000_000 + self.step
+                                                ).items()}
+                    rec["eval_loss"] = float(self._eval_step(self.params,
+                                                             eb))
+                if self.step % self.tc.log_every == 0:
+                    print(f"step {self.step:5d} loss {loss:.4f} "
+                          f"({rec['time_s']*1e3:.0f} ms)")
+        finally:
+            pipe.stop()
+            if self.ckptr:
+                self.ckptr.wait()
+        return self.history
+
+
+# ---------------------------------------------------------------------------
+# Microbatch dispatch through the paper's runtime
+# ---------------------------------------------------------------------------
+
+class MicrobatchCoordinator:
+    """One training step = one task graph over the core runtime.
+
+    Executors are runtime workers (stand-ins for pods); each microbatch
+    gradient is a task; the final task averages gradients and applies the
+    optimizer.  ``slow_workers`` makes chosen executors straggle so the
+    work-stealing scheduler's rebalancing is observable.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_executors: int = 4,
+                 n_microbatches: int = 8, scheduler: str = "rsds_ws",
+                 slow_workers: dict[int, float] | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.n_executors = n_executors
+        self.n_micro = n_microbatches
+        self.scheduler_name = scheduler
+        self.slow = slow_workers or {}
+        self.opt = make_optimizer(cfg.optimizer)
+        key = jax.random.PRNGKey(seed)
+        self.params = model_lib.init_params(key, cfg)
+        self.opt_state = self.opt.init(self.params)
+        loss_fn = make_loss_fn(cfg)
+        self._grad = jax.jit(
+            lambda p, b: jax.value_and_grad(
+                lambda q: loss_fn(q, b)[0])(p))
+        self.step = 0
+        self.steal_count = 0
+
+    def _make_step_graph(self, batch: dict) -> TaskGraph:
+        mb = {k: np.array_split(v, self.n_micro) for k, v in batch.items()}
+        tasks = []
+        losses = [0.0] * self.n_micro
+        grads: list = [None] * self.n_micro
+
+        def run_micro(i):
+            def fn():
+                # straggler injection happens per-executor in the runtime
+                loss, g = self._grad(self.params,
+                                     {k: jnp.asarray(v[i])
+                                      for k, v in mb.items()})
+                losses[i] = float(loss)
+                grads[i] = g
+                return i
+            return fn
+
+        for i in range(self.n_micro):
+            tasks.append(Task(i, (), duration=1e-3, output_size=1024,
+                              fn=run_micro(i), name=f"micro-{i}"))
+
+        def reduce_fn(*_):
+            gsum = grads[0]
+            for g in grads[1:]:
+                gsum = jax.tree.map(jnp.add, gsum, g)
+            gmean = jax.tree.map(lambda x: x / self.n_micro, gsum)
+            self.params, self.opt_state, om = self.opt.apply(
+                self.params, gmean, self.opt_state)
+            return float(np.mean(losses))
+
+        tasks.append(Task(self.n_micro, tuple(range(self.n_micro)),
+                          duration=1e-3, output_size=8, fn=reduce_fn,
+                          name="reduce"))
+        return TaskGraph(tasks, name=f"train-step-{self.step}")
+
+    def train_step(self, batch: dict, *, fail_worker: int | None = None
+                   ) -> dict:
+        graph = self._make_step_graph(batch)
+        sched = make_scheduler(self.scheduler_name)
+        reactor = ArrayReactor(graph, sched, self.n_executors)
+        rt = ThreadRuntime(graph, reactor, self.n_executors,
+                           balance_interval=0.002, timeout=120.0)
+        if self.slow:
+            orig = rt._worker_loop
+
+            def slow_loop(wid):
+                if wid in self.slow:
+                    inbox = rt.worker_inbox[wid]
+                    while True:
+                        item = inbox.get()
+                        if item is None:
+                            return
+                        time.sleep(self.slow[wid])
+                        if wid not in rt.dead:
+                            with rt._lock:
+                                if item in rt.queued.get(wid, []):
+                                    rt.queued[wid].remove(item)
+                            t = graph.tasks[item]
+                            if t.fn is not None:
+                                rt.results[item] = t.fn()
+                            rt.server_inbox.put(("finished", item, wid))
+                else:
+                    orig(wid)
+            rt._worker_loop = slow_loop
+        if fail_worker is not None:
+            def _killer():
+                time.sleep(0.01)
+                rt.fail_worker(fail_worker)
+            import threading
+            threading.Thread(target=_killer, daemon=True).start()
+        res = rt.run()
+        self.step += 1
+        loss = res.results.get(self.n_micro)
+        return {"step": self.step, "loss": loss,
+                "makespan": res.makespan, "timed_out": res.timed_out,
+                "server_busy": res.server_busy}

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces the
+# 512 placeholder devices (per the dry-run contract in the system design).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,77 @@
+"""TaskGraph + benchmark-suite structural tests (paper Table I)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import benchgraphs
+from repro.core.graph import Task, TaskGraph
+
+
+def test_merge_shape():
+    g = benchgraphs.merge(100)
+    assert g.n_tasks == 101
+    assert g.n_deps == 100
+    assert g.longest_path() == 1  # paper Table I: LP=1 for merge
+
+
+def test_tree_shape():
+    g = benchgraphs.tree(15)
+    assert g.n_tasks == 32767  # paper Table I
+    assert g.longest_path() == 14
+
+
+def test_merge_slow_durations():
+    g = benchgraphs.merge_slow(100, 0.1)
+    assert 60 < g.avg_duration_ms < 160  # around the 100 ms target
+
+
+def test_suite_diversity():
+    graphs = benchgraphs.suite(scale=0.02)
+    names = {g.name.split("-")[0] for g in graphs}
+    assert {"merge", "tree", "xarray", "bag", "numpy", "groupby",
+            "join", "vectorizer", "wordbag"} <= names
+    for g in graphs:
+        assert g.n_tasks > 1
+        assert g.longest_path() >= 1
+
+
+def test_topological_validation():
+    with pytest.raises(ValueError):
+        TaskGraph([Task(0, (1,)), Task(1, ())])  # forward dep
+
+
+def test_csr_consistency():
+    g = benchgraphs.shuffle(6, name="join")
+    for t in g.tasks:
+        for d in t.inputs:
+            assert t.tid in g.consumers_of(int(d))
+        assert list(g.inputs_of(t.tid)) == list(t.inputs)
+
+
+def test_critical_path_bounds():
+    g = benchgraphs.tree(6)
+    cp = g.critical_path_time()
+    assert 0 < cp <= g.total_work()
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 40))
+    tasks = []
+    for i in range(n):
+        max_deps = min(i, 4)
+        k = draw(st.integers(0, max_deps))
+        deps = tuple(sorted(draw(
+            st.sets(st.integers(0, i - 1), min_size=k, max_size=k)))) \
+            if i else ()
+        tasks.append(Task(i, deps, duration=draw(
+            st.floats(1e-5, 1e-3)), output_size=draw(st.floats(1, 1e4))))
+    return TaskGraph(tasks, name="hyp")
+
+
+@given(random_dag())
+@settings(max_examples=30, deadline=None)
+def test_random_dag_invariants(g):
+    assert g.n_deps == sum(len(t.inputs) for t in g.tasks)
+    assert g.longest_path() < g.n_tasks
+    assert g.critical_path_time() <= g.total_work() + 1e-9

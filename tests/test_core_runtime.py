@@ -1,0 +1,132 @@
+"""Simulator + reactor behaviour: every (server x scheduler) completes
+every graph family, dependencies are respected, failures recover, zero
+worker isolates the server (paper §IV-D / §VI)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import benchgraphs, simulate
+from repro.core.array_reactor import ArrayReactor
+from repro.core.graph import Task, TaskGraph
+from repro.core.reactor import ObjectReactor
+from repro.core.schedulers import make_scheduler
+from repro.core.simulator import SimConfig, Simulator
+
+SERVERS = ["dask", "rsds"]
+SCHEDS = ["random", "ws"]
+
+
+@pytest.mark.parametrize("server", SERVERS)
+@pytest.mark.parametrize("sched", SCHEDS)
+@pytest.mark.parametrize("maker", [
+    lambda: benchgraphs.merge(300),
+    lambda: benchgraphs.tree(6),
+    lambda: benchgraphs.shuffle(8, name="groupby"),
+    lambda: benchgraphs.bag(4),
+    lambda: benchgraphs.numpy_transpose(4),
+])
+def test_all_complete(server, sched, maker):
+    g = maker()
+    r = simulate(g, server=server, scheduler=sched, n_workers=13)
+    assert not r.timed_out
+    assert r.makespan >= g.critical_path_time() * 0.999
+    assert r.stats["msgs_in"] >= g.n_tasks
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_dependencies_respected(server):
+    g = benchgraphs.tree(5)
+    sched = make_scheduler("random")
+    cls = ObjectReactor if server == "dask" else ArrayReactor
+    reactor = cls(g, sched, 7)
+    sim = Simulator(g, reactor, SimConfig(n_workers=7))
+    r = sim.run()
+    assert not r.timed_out
+    for t in g.tasks:
+        for d in t.inputs:
+            assert sim.finish_time[d] <= sim.finish_time[t.tid] + 1e-12
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_zero_worker_isolates_server(server):
+    g = benchgraphs.merge(2000)
+    rz = simulate(g, server=server, scheduler="ws", n_workers=24,
+                  zero_worker=True)
+    assert not rz.timed_out
+    # zero-worker makespan ~ server busy time (paper's isolation argument)
+    assert rz.server_busy >= 0.5 * rz.makespan
+
+
+def test_rsds_lower_overhead_than_dask():
+    """Paper Fig. 6: RSDS beats Dask with the zero worker."""
+    g = benchgraphs.merge(5000)
+    rd = simulate(g, server="dask", scheduler="ws", n_workers=24,
+                  zero_worker=True)
+    rr = simulate(g, server="rsds", scheduler="ws", n_workers=24,
+                  zero_worker=True)
+    assert rr.makespan < rd.makespan
+
+
+@pytest.mark.parametrize("server", SERVERS)
+@pytest.mark.parametrize("sched", SCHEDS)
+def test_failure_recovery(server, sched):
+    g = benchgraphs.tree(7)
+    r = simulate(g, server=server, scheduler=sched, n_workers=9,
+                 failures=((0.0005, 2), (0.001, 5)))
+    assert not r.timed_out
+    # completion may legitimately beat the second injection; at least one
+    # failure must have been recovered from
+    assert r.failures_handled >= 1
+
+
+def test_heft_completes_and_is_competitive():
+    g = benchgraphs.shuffle(8, name="groupby")
+    rh = simulate(g, server="rsds", scheduler="heft", n_workers=16)
+    rw = simulate(g, server="rsds", scheduler="ws", n_workers=16)
+    assert not rh.timed_out
+    # HEFT knows durations; it should be within 3x of ws either way
+    assert rh.makespan < 3 * rw.makespan + 0.1
+
+
+def test_duplicate_completions_ignored():
+    g = benchgraphs.merge(10)
+    for cls in (ObjectReactor, ArrayReactor):
+        reactor = cls(g, make_scheduler("random"), 2)
+        reactor.start()
+        reactor.handle_finished([(0, 0)])
+        n1 = reactor.n_done
+        reactor.handle_finished([(0, 1), (0, 0)])  # dupes
+        assert reactor.n_done == n1
+
+
+@st.composite
+def dag_and_failures(draw):
+    n = draw(st.integers(3, 30))
+    tasks = []
+    for i in range(n):
+        k = draw(st.integers(0, min(i, 3)))
+        deps = tuple(sorted(draw(st.sets(
+            st.integers(0, i - 1), min_size=k, max_size=k)))) if i else ()
+        tasks.append(Task(i, deps, duration=1e-4, output_size=100.0))
+    g = TaskGraph(tasks, name="hyp")
+    n_workers = draw(st.integers(2, 6))
+    fail = draw(st.booleans())
+    failures = ((5e-4, draw(st.integers(0, n_workers - 1))),) if fail else ()
+    server = draw(st.sampled_from(SERVERS))
+    sched = draw(st.sampled_from(SCHEDS))
+    return g, n_workers, failures, server, sched
+
+
+@given(dag_and_failures())
+@settings(max_examples=25, deadline=None)
+def test_property_any_dag_completes(case):
+    """System invariant: any DAG + any scheduler + any single failure ->
+    all tasks complete, deps respected, makespan >= critical path."""
+    g, n_workers, failures, server, sched = case
+    # never kill the only worker
+    if failures and n_workers < 3:
+        failures = ()
+    r = simulate(g, server=server, scheduler=sched, n_workers=n_workers,
+                 failures=failures)
+    assert not r.timed_out
+    assert r.makespan >= g.critical_path_time() * 0.999

@@ -1,0 +1,137 @@
+"""Per-arch smoke tests (reduced same-family configs) + train/prefill/
+decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as model_lib
+
+ARCHS = configs.all_arch_names()
+
+
+def _inputs(cfg, b, s, rng):
+    if cfg.num_codebooks:
+        toks = rng.integers(0, cfg.vocab_size, (b, s, cfg.num_codebooks))
+    else:
+        toks = rng.integers(0, cfg.vocab_size, (b, s))
+    img = None
+    if cfg.vision_dim:
+        img = jnp.asarray(rng.standard_normal(
+            (b, cfg.num_image_tokens, cfg.vision_dim)), jnp.float32)
+    return jnp.asarray(toks, jnp.int32), img
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch, rng):
+    cfg = configs.get_config(arch, smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    toks, img = _inputs(cfg, 2, 32, rng)
+    logits, aux = jax.jit(
+        lambda p, t: model_lib.forward(p, cfg, t, img))(params, toks)
+    expect = ((2, 32, cfg.num_codebooks, cfg.vocab_size)
+              if cfg.num_codebooks else (2, 32, cfg.vocab_size))
+    assert logits.shape == expect
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux["moe_aux_loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng):
+    from repro.train.optimizer import make_optimizer
+    from repro.train.train_step import make_train_step
+    cfg = configs.get_config(arch, smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw")
+    state = opt.init(params)
+    toks, img = _inputs(cfg, 2, 32, rng)
+    batch = {"tokens": toks, "labels": toks}
+    if img is not None:
+        batch["image_embeds"] = img
+    step = jax.jit(make_train_step(cfg, opt))
+    params2, state2, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch, rng):
+    """Forward logits at the last position must match prefill(t[:-1]) +
+    one decode step — the cache path is numerically consistent with the
+    training path (for every mixer family: attention, MLA, mamba2,
+    m/sLSTM, cross-attn)."""
+    cfg = configs.get_config(arch, smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    toks, img = _inputs(cfg, b, s, rng)
+    full, _ = jax.jit(lambda p, t: model_lib.forward(p, cfg, t, img))(
+        params, toks)
+
+    cache = model_lib.init_cache(cfg, b, s + 4)
+    _, cache = jax.jit(lambda p, t, c: model_lib.prefill(p, cfg, t, c, img))(
+        params, toks[:, :-1], cache)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    dec, _ = jax.jit(lambda p, t, c, q: model_lib.decode_step(p, cfg, t, c,
+                                                              q))(
+        params, toks[:, -1:], cache, pos)
+    want = full[:, -1]
+    got = dec[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_published():
+    import numpy as np
+    expected = {
+        "gemma_7b": 8.5e9, "gemma2_27b": 27.2e9, "llama3_2_1b": 1.24e9,
+        "deepseek_coder_33b": 33.3e9, "grok_1_314b": 316e9,
+        "deepseek_v3_671b": 671e9, "llama3_2_vision_90b": 87.6e9,
+        "musicgen_medium": 1.38e9,
+    }
+    for arch, want in expected.items():
+        cfg = configs.get_config(arch)
+        shapes = model_lib.abstract_params(cfg)
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+        assert abs(n - want) / want < 0.02, (arch, n, want)
+
+
+def test_layer_counts():
+    for arch in ARCHS:
+        cfg = configs.get_config(arch)
+        assert cfg.num_layers == {
+            "gemma_7b": 28, "gemma2_27b": 46, "llama3_2_1b": 16,
+            "deepseek_coder_33b": 62, "zamba2_2_7b": 54,
+            "grok_1_314b": 64, "deepseek_v3_671b": 61, "xlstm_350m": 24,
+            "llama3_2_vision_90b": 100, "musicgen_medium": 48}[arch]
+
+
+def test_gemma2_softcap_applied(rng):
+    cfg = configs.get_config("gemma2_27b", smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    toks, _ = _inputs(cfg, 1, 16, rng)
+    logits, _ = model_lib.forward(params, cfg, toks)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_moe_router_bias_is_selection_only(rng):
+    """DSv3 aux-free bias: changing the bias changes *selection* but never
+    receives gradient."""
+    from repro.train.train_step import make_loss_fn
+    cfg = configs.get_config("deepseek_v3_671b", smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    toks, _ = _inputs(cfg, 2, 16, rng)
+    loss_fn = make_loss_fn(cfg)
+    g = jax.grad(lambda p: loss_fn(p, {"tokens": toks, "labels": toks})[0])(
+        params)
+    for gi, group in enumerate(g["groups"]):
+        for slot in group["slots"]:
+            mlp = slot.get("mlp", {})
+            if isinstance(mlp, dict) and "router" in mlp \
+                    and "bias" in mlp["router"]:
+                assert float(jnp.max(jnp.abs(mlp["router"]["bias"]))) == 0.0

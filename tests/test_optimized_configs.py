@@ -1,0 +1,108 @@
+"""The §Perf-optimized configs must stay functionally correct: every arch
+trains a step under its optimized flags (fused projections, sequence
+parallelism, MoE sharding modes) with finite loss, and the fused-QKV /
+fused-GLU paths match their unfused math."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.optimized import _OVERRIDES, optimized_config
+from repro.models import model as model_lib
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+ARCHS = configs.all_arch_names()
+
+
+def _smoke_with_overrides(arch):
+    """Reduced config + that arch's optimized overrides."""
+    cfg = configs.get_config(arch, smoke=True)
+    over = dict(_OVERRIDES.get(configs.canonical(arch), {}))
+    gsize = over.pop("_moe_group_size", None)
+    over.pop("seq_parallel", None)  # mesh-level; no-op on 1 device anyway
+    if gsize and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=gsize))
+    return dataclasses.replace(cfg, **over)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_optimized_smoke_train_step(arch, rng):
+    cfg = _smoke_with_overrides(arch)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    opt = make_optimizer("adamw")
+    state = opt.init(params)
+    if cfg.num_codebooks:
+        toks = rng.integers(0, cfg.vocab_size, (2, 32, cfg.num_codebooks))
+    else:
+        toks = rng.integers(0, cfg.vocab_size, (2, 32))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(toks, jnp.int32)}
+    if cfg.vision_dim:
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((2, cfg.num_image_tokens, cfg.vision_dim)),
+            jnp.float32)
+    step = jax.jit(make_train_step(cfg, opt))
+    _, _, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+
+
+def test_fused_qkv_matches_unfused(rng):
+    """Splitting a fused QKV projection reproduces the unfused math when
+    the fused weight is the concatenation of the separate ones."""
+    from repro.models import attention
+    from repro.models.config import LayerSpec
+    base = configs.get_config("llama3_2_1b", smoke=True)
+    fused_cfg = dataclasses.replace(base, fuse_qkv=True)
+    spec = LayerSpec(kind="attn", mlp="glu")
+    p = attention.init_attn(jax.random.PRNGKey(0), base, spec)
+    pf = {"wqkv": jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=-1),
+          "wo": p["wo"]}
+    x = jnp.asarray(rng.standard_normal((2, 16, base.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    want, _ = attention.apply_attn(p, base, spec, x, pos)
+    got, _ = attention.apply_attn(pf, fused_cfg, spec, x, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_glu_matches_unfused(rng):
+    from repro.models import mlp
+    base = configs.get_config("llama3_2_1b", smoke=True)
+    fused_cfg = dataclasses.replace(base, fuse_glu=True)
+    p = mlp.init_mlp(jax.random.PRNGKey(0), base)
+    pf = {"wgu": jnp.stack([p["wi"], p["wu"]], axis=1),  # (D,2,F)
+          "wo": p["wo"]}
+    x = jnp.asarray(rng.standard_normal((2, 16, base.d_model)), jnp.float32)
+    want = mlp.apply_mlp(p, base, x)
+    got = mlp.apply_mlp(pf, fused_cfg, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_absorbed_matches_baseline(rng):
+    """The weight-absorbed MLA decode path (beyond-paper opt) must equal
+    the naive K/V-expanding formulation."""
+    cfg = configs.get_config("deepseek_v3_671b", smoke=True)
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    cache_a = model_lib.init_cache(cfg, 2, 32)
+    cache_b = model_lib.init_cache(cfg, 2, 32)
+    la, ca = model_lib.prefill(params, cfg, toks, cache_a,
+                               mla_absorbed=False)
+    lb, cb = model_lib.prefill(params, cfg, toks, cache_b,
+                               mla_absorbed=True)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(la),
+                               rtol=2e-4, atol=2e-4)
+    pos = jnp.full((2,), 16, jnp.int32)
+    nxt = toks[:, :1]
+    da, _ = model_lib.decode_step(params, cfg, nxt, ca, pos,
+                                  mla_absorbed=False)
+    db, _ = model_lib.decode_step(params, cfg, nxt, cb, pos,
+                                  mla_absorbed=True)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(da),
+                               rtol=2e-4, atol=2e-4)

