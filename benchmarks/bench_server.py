@@ -1,40 +1,71 @@
 """Paper Fig. 3 + Fig. 4 + Table II (experiment B): RSDS-style server vs
-Dask-style server, with work-stealing and with the random scheduler."""
+Dask-style server, with work-stealing and with the random scheduler.
+
+``run(runtime="thread"|"process")`` repeats the comparison on the
+wall-clock engines (small worker counts, instant tasks) where, for the
+process runtime, the two servers pay their real codec cost over an OS
+transport."""
 from __future__ import annotations
+
+import argparse
+import sys
 
 from benchmarks.common import bench_suite, geomean, run_avg
 
 
-def run(scale=None) -> list[tuple]:
+def run(scale=None, runtime: str = "sim") -> list[tuple]:
     rows = []
-    for workers in (24, 168):
+    sim = runtime == "sim"
+    worker_counts = (24, 168) if sim else (4, 8)
+    extra = {} if sim else {"simulate_durations": False, "timeout": 120.0,
+                            "reps": 1}
+    for workers in worker_counts:
         sp_ws, sp_rnd = [], []
-        for g in bench_suite(scale or 0.12):
+        for g in bench_suite(scale or (0.12 if sim else 0.04)):
             base, _ = run_avg(g, server="dask", scheduler="ws",
-                              n_workers=workers)
+                              n_workers=workers, runtime=runtime, **extra)
             rws, _ = run_avg(g, server="rsds", scheduler="ws",
-                             n_workers=workers)
+                             n_workers=workers, runtime=runtime, **extra)
             rrnd, _ = run_avg(g, server="rsds", scheduler="random",
-                              n_workers=workers)
+                              n_workers=workers, runtime=runtime, **extra)
             if base is None:
                 continue
+            tag = "" if sim else f"-{runtime}"
             if rws is not None:
                 sp_ws.append(base / rws)
-                rows.append((f"fig3/rsds_ws/{g.name}/w{workers}",
+                rows.append((f"fig3{tag}/rsds_ws/{g.name}/w{workers}",
                              round(rws * 1e6 / g.n_tasks, 3),
                              f"speedup={base / rws:.3f}"))
             if rrnd is not None:
                 sp_rnd.append(base / rrnd)
-                rows.append((f"fig4/rsds_random/{g.name}/w{workers}",
+                rows.append((f"fig4{tag}/rsds_random/{g.name}/w{workers}",
                              round(rrnd * 1e6 / g.n_tasks, 3),
                              f"speedup={base / rrnd:.3f}"))
-        rows.append((f"table2/rsds_ws_geomean/w{workers}", "",
+        tag = "" if sim else f"-{runtime}"
+        rows.append((f"table2{tag}/rsds_ws_geomean/w{workers}", "",
                      f"geomean_speedup={geomean(sp_ws):.3f}"))
-        rows.append((f"table2/rsds_random_geomean/w{workers}", "",
+        rows.append((f"table2{tag}/rsds_random_geomean/w{workers}", "",
                      f"geomean_speedup={geomean(sp_rnd):.3f}"))
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runtime", default="sim",
+                    choices=("sim", "thread", "process"))
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--out", default=None,
+                    help="artifact prefix: writes <out>.csv and <out>.json")
+    args = ap.parse_args(argv)
+    rows = run(scale=args.scale, runtime=args.runtime)
+    from benchmarks.common import emit, write_artifacts
+    emit(rows)
+    if args.out:
+        write_artifacts(rows, args.out,
+                        meta={"runtime": args.runtime, "scale": args.scale,
+                              "bench": "server"})
+    return 0
+
+
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run())
+    sys.exit(main())

@@ -1,14 +1,25 @@
 """Paper Fig. 6/7/8 (experiment D): zero-worker server-overhead isolation.
 Fig 6: RSDS-vs-Dask speedup with the zero worker; Fig 7: AOT per
 benchmark/cluster size; Fig 8: AOT vs task count (top) and worker count
-(bottom) on merge."""
+(bottom) on merge.
+
+Beyond the paper's virtual-time rig, a ``--runtime thread|process`` axis
+runs the same isolation on the wall-clock engines.  With
+``--runtime process`` the Dask-style server pays its per-message msgpack
+cost over a real OS transport while the RSDS-style server ships static
+batched frames, so the reported per-task overhead includes genuine codec
+and IPC work.  ``--out`` writes CSV+JSON artifacts for CI.
+"""
 from __future__ import annotations
+
+import argparse
+import sys
 
 from repro.core import benchgraphs
 from benchmarks.common import bench_suite, run_avg
 
 
-def run() -> list[tuple]:
+def _run_sim() -> list[tuple]:
     rows = []
     # Fig 6: speedup with zero worker on a structural subset
     for g in bench_suite(0.08):
@@ -58,6 +69,68 @@ def run() -> list[tuple]:
     return rows
 
 
+def _run_wallclock(runtime: str, scale: float) -> list[tuple]:
+    """Zero-worker isolation on a real engine: every completion crosses
+    the server (and, for the process runtime, the wire) for real."""
+    rows = []
+    for g in bench_suite(scale):
+        if g.name.startswith(("wordbag", "vectorizer")):
+            continue
+        for server in ("dask", "rsds"):
+            ms, last = run_avg(g, reps=1, runtime=runtime, server=server,
+                               n_workers=4, zero_worker=True, timeout=120.0)
+            if ms is None:
+                rows.append((f"zero-{runtime}/{g.name}/{server}", "",
+                             "timeout"))
+                continue
+            aot_us = ms * 1e6 / g.n_tasks
+            derived = (f"aot_us={aot_us:.2f};"
+                       f"server_busy_s={last.server_busy:.4f}")
+            if runtime == "process":
+                derived += (f";codec_s={last.stats['codec_s']};"
+                            f"wire_bytes={last.stats['wire_bytes']};"
+                            f"wire_frames={last.stats['wire_frames']}")
+            rows.append((f"zero-{runtime}/{g.name}/{server}",
+                         round(aot_us, 3), derived))
+    # headline: merge AOT + dask/rsds speedup at two sizes
+    for n in (1000, 4000):
+        g = benchgraphs.merge(int(n * max(scale / 0.08, 0.25)))
+        d, _ = run_avg(g, reps=1, runtime=runtime, server="dask",
+                       n_workers=4, zero_worker=True, timeout=120.0)
+        r, _ = run_avg(g, reps=1, runtime=runtime, server="rsds",
+                       n_workers=4, zero_worker=True, timeout=120.0)
+        if d and r:
+            rows.append((f"zero-{runtime}/merge{g.n_tasks}/speedup",
+                         round(r * 1e6 / g.n_tasks, 3),
+                         f"speedup={d / r:.2f}"))
+    return rows
+
+
+def run(runtime: str = "sim", scale: float = 0.08) -> list[tuple]:
+    if runtime == "sim":
+        return _run_sim()
+    return _run_wallclock(runtime, scale)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runtime", default="sim",
+                    choices=("sim", "thread", "process"))
+    ap.add_argument("--scale", type=float, default=0.08,
+                    help="suite scale factor (wall-clock runtimes)")
+    ap.add_argument("--out", default=None,
+                    help="artifact prefix: writes <out>.csv and <out>.json")
+    args = ap.parse_args(argv)
+    rows = run(runtime=args.runtime, scale=args.scale)
+    from benchmarks.common import emit, write_artifacts
+    emit(rows)
+    if args.out:
+        write_artifacts(rows, args.out,
+                        meta={"runtime": args.runtime,
+                              "scale": args.scale,
+                              "bench": "zero_worker"})
+    return 0
+
+
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run())
+    sys.exit(main())

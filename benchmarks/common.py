@@ -2,9 +2,11 @@
 (§VI: averaged repetitions, 300 s timeout, cluster reset per run)."""
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
-from repro.core import benchgraphs, simulate
+from repro.core import benchgraphs, run_graph, simulate
 
 REPS = 3           # paper uses 5 (2 for scaling); we use 3/1 for wall time
 SCALE = 0.2        # suite scale factor (task counts ~2k-17k)
@@ -15,11 +17,19 @@ def geomean(xs):
     return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
 
 
-def run_avg(graph, *, reps=REPS, **kw):
+def run_avg(graph, *, reps=REPS, runtime="sim", **kw):
+    """Averaged makespan on a chosen engine.
+
+    runtime="sim" is the virtual-time simulator (paper's scaling rig);
+    "thread"/"process" run the wall-clock engines, where the server —
+    and, for "process", the transport codec — is paid for real."""
     makespans = []
     last = None
     for i in range(reps):
-        last = simulate(graph, seed=i, **kw)
+        if runtime == "sim":
+            last = simulate(graph, seed=i, **kw)
+        else:
+            last = run_graph(graph, runtime=runtime, seed=i, **kw)
         if last.timed_out:
             return None, last
         makespans.append(last.makespan)
@@ -34,3 +44,18 @@ def emit(rows, header=("name", "us_per_call", "derived")):
     print(",".join(header))
     for r in rows:
         print(",".join(str(x) for x in r))
+
+
+def write_artifacts(rows, out_prefix: str,
+                    header=("name", "us_per_call", "derived"),
+                    meta: dict | None = None) -> None:
+    """CSV + JSON result files (CI uploads these to track the perf
+    trajectory per PR)."""
+    with open(out_prefix + ".csv", "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    payload = {"meta": meta or {},
+               "rows": [dict(zip(header, r)) for r in rows]}
+    with open(out_prefix + ".json", "w") as f:
+        json.dump(payload, f, indent=1)

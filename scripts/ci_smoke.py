@@ -1,0 +1,72 @@
+"""CI hang-catcher: one tiny graph end-to-end on EVERY runtime.
+
+Runs merge+tree graphs through the simulator, the thread runtime and the
+process runtime (both servers each), each under a short watchdog, and
+exits nonzero on any timeout/hang/error — so CI fails in seconds instead
+of waiting out the 300 s benchmark timeout.
+
+    PYTHONPATH=src python scripts/ci_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+import traceback
+
+WATCHDOG_S = 60.0   # per-case hard limit (process spawn included)
+
+
+def _cases():
+    from repro.core import benchgraphs, run_graph, simulate
+
+    graphs = [benchgraphs.merge(60), benchgraphs.tree(5)]
+    for g in graphs:
+        for server in ("dask", "rsds"):
+            yield (f"sim/{server}/{g.name}",
+                   lambda g=g, s=server: simulate(g, server=s,
+                                                  n_workers=4, timeout=30))
+            for runtime in ("thread", "process"):
+                yield (f"{runtime}/{server}/{g.name}",
+                       lambda g=g, s=server, r=runtime: run_graph(
+                           g, server=s, runtime=r, n_workers=3,
+                           simulate_durations=False, timeout=30))
+
+
+def _run_case(name, fn) -> tuple[bool, str]:
+    box: dict = {}
+
+    def target():
+        try:
+            box["result"] = fn()
+        except BaseException:
+            box["error"] = traceback.format_exc()
+
+    th = threading.Thread(target=target, daemon=True)
+    t0 = time.perf_counter()
+    th.start()
+    th.join(WATCHDOG_S)
+    wall = time.perf_counter() - t0
+    if th.is_alive():
+        return False, f"HANG after {wall:.1f}s"
+    if "error" in box:
+        return False, "ERROR\n" + box["error"]
+    r = box["result"]
+    if getattr(r, "timed_out", False):
+        return False, f"runtime timeout (wall {wall:.1f}s)"
+    return True, f"ok ({wall:.2f}s, {r.n_tasks} tasks)"
+
+
+def main() -> int:
+    failures = 0
+    for name, fn in _cases():
+        ok, detail = _run_case(name, fn)
+        print(f"{'PASS' if ok else 'FAIL'} {name:28s} {detail}")
+        if not ok:
+            failures += 1
+    print(f"\n{failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

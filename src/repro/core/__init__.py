@@ -1,12 +1,15 @@
 """The paper's contribution: task-graph runtime with reactor/scheduler
 separation, Dask-style vs RSDS-style server implementations, zero-worker
-overhead isolation, virtual-time cluster simulation and a real-time thread
-runtime."""
+overhead isolation, virtual-time cluster simulation and real-time engines
+(thread workers in-process, or OS-process workers behind a pluggable byte
+transport)."""
 from repro.core.array_reactor import ArrayReactor
 from repro.core.graph import Task, TaskGraph
 from repro.core.reactor import ObjectReactor
-from repro.core.runtime import ThreadRuntime, run_graph
+from repro.core.runtime import ProcessRuntime, ThreadRuntime, run_graph
 from repro.core.schedulers import (DaskWorkStealing, HeftScheduler,
                                    RandomScheduler, RsdsWorkStealing,
                                    make_scheduler)
 from repro.core.simulator import SimConfig, Simulator, simulate
+from repro.core.transport import (InprocTransport, PipeTransport,
+                                  SocketTransport)

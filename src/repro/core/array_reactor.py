@@ -36,10 +36,15 @@ class ArrayReactor:
     name = "rsds"
 
     def __init__(self, graph: TaskGraph, scheduler: SchedulerBase,
-                 n_workers: int, workers_per_node: int = 24, seed: int = 0):
+                 n_workers: int, workers_per_node: int = 24, seed: int = 0,
+                 simulate_codec: bool = True):
         self.graph = graph
         self.scheduler = scheduler
         self.n_workers = n_workers
+        # Accepted for signature parity with ObjectReactor; the RSDS-style
+        # reactor never simulates a codec (static structures in-process),
+        # so the flag changes nothing here.
+        self.simulate_codec = simulate_codec
         self.stats = ReactorStats()
         scheduler.attach(graph, n_workers, workers_per_node, seed)
         n = graph.n_tasks

@@ -1,4 +1,4 @@
-"""Dask-style protocol messages (paper §III-B / §IV-B).
+"""Dask-style protocol messages and wire codecs (paper §III-B / §IV-B).
 
 The Dask-style :class:`repro.core.reactor.ObjectReactor` round-trips every
 message through msgpack at the server boundary, mirroring Dask's
@@ -6,10 +6,23 @@ serialize-per-message behaviour.  The RSDS-style ArrayReactor keeps static
 in-process structures (the paper's protocol modification keeps message
 structure static, so deserialization cost collapses); it skips the codec
 entirely.
+
+For the multi-process runtime the codec is no longer simulated: frames
+really cross an OS pipe or socket.  Two wire codecs implement the paper's
+asymmetry:
+
+* :class:`DaskWire` — one msgpack dict per message, packed and unpacked
+  per task / per completion (Dask's serialize-per-message cost profile).
+* :class:`StaticWire` — RSDS-style static frame layout: a fixed header
+  plus fixed-size records, encoded once per *batch* with ``struct``; the
+  only dynamic part is an optional pickled payload section for tasks that
+  carry real data (which the paper's hot path does not).
 """
 from __future__ import annotations
 
-from typing import Any
+import pickle
+import struct
+from typing import Any, Iterable, Sequence
 
 import msgpack
 
@@ -42,3 +55,154 @@ def compute_task(tid: int, wid: int, inputs, who_has) -> dict:
 def task_finished(tid: int, wid: int, nbytes: float) -> dict:
     return {"op": TASK_FINISHED, "key": int(tid), "worker": int(wid),
             "nbytes": float(nbytes)}
+
+
+# ---------------------------------------------------------------------------
+# Wire codecs (process runtime)
+# ---------------------------------------------------------------------------
+# Frame-level ops.  A "frame" is one transport send; the transports do the
+# length-prefix framing, the codecs define the bytes inside.
+
+OP_COMPUTE = 1       # server -> worker: run these tasks
+OP_FINISHED = 2      # worker -> server: these tasks completed
+OP_RETRACT = 3       # server -> worker: drop these if not yet started
+OP_SHUTDOWN = 4      # server -> worker: drain and exit
+
+_NO_RESULT = object()   # worker-side marker: task produced no value
+
+
+class DaskWire:
+    """Per-message msgpack codec: every task and every completion is its
+    own dict, packed and unpacked individually (Dask's cost profile)."""
+    name = "dask"
+    batched = False
+
+    def encode_compute_batch(self, items: Sequence[tuple[int, float]],
+                             payloads: dict[int, Any] | None = None,
+                             inputs_of=None) -> list[bytes]:
+        frames = []
+        for tid, dur in items:
+            m = {"op": OP_COMPUTE, "key": int(tid), "duration": float(dur),
+                 "inputs": ([int(i) for i in inputs_of(tid)]
+                            if inputs_of is not None else [])}
+            if payloads is not None and tid in payloads:
+                m["data"] = pickle.dumps(payloads[tid], protocol=4)
+            frames.append(pack(m))
+        return frames
+
+    def encode_finished_batch(self, wid: int,
+                              items: Sequence[tuple[int, Any]]
+                              ) -> list[bytes]:
+        frames = []
+        for tid, result in items:
+            m = {"op": OP_FINISHED, "key": int(tid), "worker": int(wid)}
+            if result is not _NO_RESULT:
+                blob = pickle.dumps(result, protocol=4)
+                m["data"] = blob
+                m["nbytes"] = float(len(blob))
+            else:
+                m["nbytes"] = 0.0
+            frames.append(pack(m))
+        return frames
+
+    def encode_retract(self, tids: Iterable[int]) -> list[bytes]:
+        return [pack({"op": OP_RETRACT, "keys": [int(t) for t in tids]})]
+
+    def encode_shutdown(self) -> bytes:
+        return pack({"op": OP_SHUTDOWN})
+
+    def decode(self, raw: bytes):
+        """-> (op, records, payloads) with one record per frame."""
+        m = unpack(raw)
+        op = m["op"]
+        if op == OP_COMPUTE:
+            payloads = None
+            if "data" in m:
+                payloads = {m["key"]: pickle.loads(m["data"])}
+            return op, [(m["key"], m["duration"])], payloads
+        if op == OP_FINISHED:
+            payloads = None
+            if "data" in m:
+                payloads = {m["key"]: pickle.loads(m["data"])}
+            return op, [(m["key"], m["worker"], m.get("nbytes", 0.0))], \
+                payloads
+        if op == OP_RETRACT:
+            return op, list(m["keys"]), None
+        return op, [], None
+
+
+class StaticWire:
+    """RSDS-style static frame layout, one encode/decode per batch.
+
+    header  = op:u8  has_blob:u8  count:u32
+    compute  record = tid:i64  duration:f64
+    finished record = tid:i64  wid:i32  nbytes:f64
+    retract  record = tid:i64
+    blob (optional) = pickled {tid: value} payload section
+    """
+    name = "static"
+    batched = True
+
+    _HDR = struct.Struct("<BBI")
+    _COMPUTE = struct.Struct("<qd")
+    _FINISHED = struct.Struct("<qid")
+    _RETRACT = struct.Struct("<q")
+
+    def encode_compute_batch(self, items: Sequence[tuple[int, float]],
+                             payloads: dict[int, Any] | None = None,
+                             inputs_of=None) -> list[bytes]:
+        body = b"".join(self._COMPUTE.pack(int(t), float(d))
+                        for t, d in items)
+        blob = pickle.dumps(payloads, protocol=4) if payloads else b""
+        return [self._HDR.pack(OP_COMPUTE, 1 if blob else 0, len(items))
+                + body + blob]
+
+    def encode_finished_batch(self, wid: int,
+                              items: Sequence[tuple[int, Any]]
+                              ) -> list[bytes]:
+        payloads = {int(t): r for t, r in items if r is not _NO_RESULT}
+        blob = pickle.dumps(payloads, protocol=4) if payloads else b""
+        nb = float(len(blob)) / max(len(payloads), 1)
+        body = b"".join(
+            self._FINISHED.pack(int(t), int(wid),
+                                nb if r is not _NO_RESULT else 0.0)
+            for t, r in items)
+        return [self._HDR.pack(OP_FINISHED, 1 if blob else 0, len(items))
+                + body + blob]
+
+    def encode_retract(self, tids: Iterable[int]) -> list[bytes]:
+        tids = list(tids)
+        body = b"".join(self._RETRACT.pack(int(t)) for t in tids)
+        return [self._HDR.pack(OP_RETRACT, 0, len(tids)) + body]
+
+    def encode_shutdown(self) -> bytes:
+        return self._HDR.pack(OP_SHUTDOWN, 0, 0)
+
+    def decode(self, raw: bytes):
+        op, has_blob, count = self._HDR.unpack_from(raw)
+        off = self._HDR.size
+        if op == OP_COMPUTE:
+            rec, recs = self._COMPUTE, []
+            for i in range(count):
+                recs.append(rec.unpack_from(raw, off + i * rec.size))
+            off += count * rec.size
+        elif op == OP_FINISHED:
+            rec, recs = self._FINISHED, []
+            for i in range(count):
+                recs.append(rec.unpack_from(raw, off + i * rec.size))
+            off += count * rec.size
+        elif op == OP_RETRACT:
+            rec = self._RETRACT
+            recs = [rec.unpack_from(raw, off + i * rec.size)[0]
+                    for i in range(count)]
+            off += count * rec.size
+        else:
+            recs = []
+        payloads = pickle.loads(raw[off:]) if has_blob else None
+        return op, recs, payloads
+
+
+def make_wire(server_name: str):
+    """Wire codec for a reactor flavour: dask -> per-message msgpack,
+    rsds -> static batched frames."""
+    return DaskWire() if server_name == "dask" else StaticWire()

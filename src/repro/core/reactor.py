@@ -44,11 +44,16 @@ class ObjectReactor:
     name = "dask"
 
     def __init__(self, graph: TaskGraph, scheduler: SchedulerBase,
-                 n_workers: int, workers_per_node: int = 24, seed: int = 0):
+                 n_workers: int, workers_per_node: int = 24, seed: int = 0,
+                 simulate_codec: bool = True):
         self.graph = graph
         self.scheduler = scheduler
         self.n_workers = n_workers
         self.stats = ReactorStats()
+        # When the runtime moves real bytes over a transport (process
+        # runtime), the wire pays the codec cost and the simulation here
+        # must be off, or Dask-style overhead would be charged twice.
+        self.simulate_codec = simulate_codec
         scheduler.attach(graph, n_workers, workers_per_node, seed)
         # per-task dict objects keyed by Dask-style STRING keys — Dask
         # addresses every task by a string key throughout its server; the
@@ -79,11 +84,13 @@ class ObjectReactor:
             ts = self.tasks[self.key[tid]]
             ts["state"] = READY
             ts["worker"] = int(wid)
-            who_has = {int(d): list(self.tasks[self.key[int(d)]]["who_has"])
-                       for d in self.graph.inputs_of(tid)}
-            m = msg.compute_task(tid, int(wid),
-                                 self.graph.inputs_of(tid), who_has)
-            self.stats.bytes_coded += len(msg.pack(m))
+            if self.simulate_codec:
+                who_has = {int(d):
+                           list(self.tasks[self.key[int(d)]]["who_has"])
+                           for d in self.graph.inputs_of(tid)}
+                m = msg.compute_task(tid, int(wid),
+                                     self.graph.inputs_of(tid), who_has)
+                self.stats.bytes_coded += len(msg.pack(m))
             self.stats.msgs_out += 1
             self.scheduler.on_assigned(tid, int(wid))
             out.append((int(tid), int(wid)))
@@ -99,13 +106,16 @@ class ObjectReactor:
         at a time, each round-tripped through msgpack."""
         assignments: list[tuple[int, int]] = []
         for tid, wid in events:
-            raw = msg.pack(msg.task_finished(tid, wid,
-                                             self.graph.sizes[tid]))
-            m = msg.unpack(raw)
-            self.stats.bytes_coded += len(raw)
+            if self.simulate_codec:
+                raw = msg.pack(msg.task_finished(tid, wid,
+                                                 self.graph.sizes[tid]))
+                m = msg.unpack(raw)
+                self.stats.bytes_coded += len(raw)
+                tid = int(m["key"])
+                wid = int(m["worker"])
             self.stats.msgs_in += 1
-            tid = int(m["key"])
-            wid = int(m["worker"])
+            tid = int(tid)
+            wid = int(wid)
             key = self.key[tid]
             ts = self.tasks[key]
             if ts["state"] in (MEMORY, RELEASED):

@@ -1,26 +1,38 @@
-"""Real-time (wall-clock) execution engine: server thread + worker threads.
+"""Real-time (wall-clock) execution engines.
 
-This is the engine behind the paper's wall-clock experiments on small
-clusters (24 / 168 workers on this machine): tasks are real Python
+:class:`ThreadRuntime` — server thread + worker threads connected by an
+:class:`repro.core.transport.InprocTransport`.  Tasks are real Python
 callables (or calibrated sleeps, or zero-worker instant completions), the
 server is a real event loop around a reactor, and the measured makespan
 includes every genuine runtime overhead.  Workers are threads — the GIL is
 released during sleeps and numpy/JAX work, matching the paper's
-single-threaded-worker setup.
+single-threaded-worker setup.  Also the substrate for the framework
+integration: the trainer/serving engine submit task graphs here.
 
-Also the substrate for the framework integration: the trainer/serving
-engine submit task graphs here (data prefetch, microbatch dispatch,
-checkpoint/eval service tasks), with elastic worker membership and
-failure-driven resubmission.
+:class:`ProcessRuntime` — the same contract with workers as separate OS
+processes behind a pluggable byte transport (pipe or localhost socket).
+Task payloads and completions cross the transport as real bytes: the
+Dask-style server pays msgpack encode/decode *per message*, the RSDS-style
+server packs a static frame layout *once per batch*
+(:mod:`repro.core.messages` wire codecs), so the paper's codec-overhead
+asymmetry is measured instead of simulated.  Worker-process kill is a
+first-class failure injection (``fail_worker`` sends SIGKILL; the server
+detects the death and resubmits through the reactor's lineage machinery).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import multiprocessing as mp
+import os
 import queue
+import sys
 import threading
 import time
 from typing import Any, Callable
 
+from repro.core import messages as msg
+from repro.core import transport as tp
 from repro.core.graph import TaskGraph
 
 
@@ -49,9 +61,7 @@ class ThreadRuntime:
         self.simulate_durations = simulate_durations
         self.balance_interval = balance_interval
         self.timeout = timeout
-        self.server_inbox: queue.Queue = queue.Queue()
-        self.worker_inbox: list[queue.Queue] = [queue.Queue()
-                                                for _ in range(n_workers)]
+        self.transport = tp.InprocTransport(n_workers)
         self.results: dict[int, Any] = {}
         self.queued: dict[int, list[int]] = {}
         self.running: dict[int, int] = {}   # wid -> tid
@@ -60,11 +70,19 @@ class ThreadRuntime:
         self._lock = threading.Lock()
         self._done_evt = threading.Event()
 
+    # back-compat views onto the transport (trainer / faults poke these)
+    @property
+    def server_inbox(self) -> queue.Queue:
+        return self.transport.inbox
+
+    @property
+    def worker_inbox(self) -> list[queue.Queue]:
+        return self.transport.worker_queues
+
     # ------------------------------------------------------------------
     def _worker_loop(self, wid: int) -> None:
-        inbox = self.worker_inbox[wid]
         while True:
-            item = inbox.get()
+            item = self.transport.worker_recv(wid)
             if item is None:
                 return
             tid = item
@@ -85,40 +103,50 @@ class ThreadRuntime:
                     time.sleep(t.duration)
             with self._lock:
                 self.running.pop(wid, None)
-            self.server_inbox.put(("finished", tid, wid))
+            self.transport.worker_send(wid, ("finished", tid, wid))
 
     def _send(self, assignments) -> None:
         for tid, wid in assignments:
-            if wid in self.dead:
-                self.server_inbox.put(("lost-route", tid, wid))
-                continue
+            # dead-check and queue append under ONE lock: fail_worker's
+            # snapshot of queued[wid] happens under the same lock, so a
+            # task is always either captured by the snapshot or routed
+            # here as lost — never silently stranded in between
             with self._lock:
-                self.queued.setdefault(wid, []).append(tid)
-            self.worker_inbox[wid].put(tid)
+                alive = wid not in self.dead
+                if alive:
+                    self.queued.setdefault(wid, []).append(tid)
+            if alive:
+                self.transport.send(wid, tid)
+            else:
+                self.transport.inject(("lost-route", tid, wid))
 
     def _server_loop(self) -> None:
         last_balance = time.perf_counter()
         deadline = time.perf_counter() + self.timeout
         while not self.reactor.done():
             try:
-                first = self.server_inbox.get(timeout=0.01)
+                first = self.transport.recv(timeout=0.01)
             except queue.Empty:
                 if time.perf_counter() > deadline:
                     self._timed_out = True
                     break
                 continue
-            batch = [first]
-            while True:  # drain for batching (RSDS-style batch processing)
-                try:
-                    batch.append(self.server_inbox.get_nowait())
-                except queue.Empty:
-                    break
-            finished = [(t, w) for kind, t, w in batch if kind == "finished"]
-            lost = [(t, w) for kind, t, w in batch if kind == "lost-route"]
+            # drain for batching (RSDS-style batch processing)
+            batch = [first] + self.transport.drain()
+            finished, lost, removed = [], [], []
+            for ev in batch:
+                if ev[0] == "finished":
+                    finished.append((ev[1], ev[2]))
+                elif ev[0] == "lost-route":
+                    lost.append((ev[1], ev[2]))
+                elif ev[0] == "worker-lost":
+                    removed.append((ev[1], ev[2]))
             t0 = time.perf_counter()
             out = self.reactor.handle_finished(finished)
             for tid, wid in lost:
                 out.extend(self.reactor.handle_worker_lost(wid, [tid]))
+            for wid, tids in removed:
+                out.extend(self.reactor.handle_worker_lost(wid, list(tids)))
             self.server_busy += time.perf_counter() - t0
             self._send(out)
             nowt = time.perf_counter()
@@ -146,17 +174,19 @@ class ThreadRuntime:
 
     # ------------------------------------------------------------------
     def fail_worker(self, wid: int) -> None:
-        """Failure injection: worker stops responding; server resubmits."""
+        """Failure injection: worker stops responding; server resubmits.
+
+        Safe to call from any thread: the reactor is only ever touched by
+        the server loop, so the loss is routed through the server inbox as
+        a ``("worker-lost", wid, lost)`` event instead of being handled
+        here (the old in-place handling raced ``handle_finished``)."""
         with self._lock:
             self.dead.add(wid)
             lost = list(self.queued.pop(wid, []))
             r = self.running.get(wid)
             if r is not None:
                 lost.append(r)
-        t0 = time.perf_counter()
-        out = self.reactor.handle_worker_lost(wid, lost)
-        self.server_busy += time.perf_counter() - t0
-        self._send(out)
+        self.transport.inject(("worker-lost", wid, tuple(lost)))
 
     def run(self) -> RunResult:
         self._timed_out = False
@@ -174,16 +204,374 @@ class ThreadRuntime:
         self._send(init)
         self._done_evt.wait(timeout=self.timeout + 5)
         makespan = time.perf_counter() - t_start
-        for q in self.worker_inbox:
-            q.put(None)
+        for wid in range(len(self.transport.worker_queues)):
+            self.transport.send(wid, None)
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
                          server_busy=self.server_busy,
                          stats=self.reactor.stats.as_dict(),
                          results=self.results, timed_out=self._timed_out)
 
 
+# ---------------------------------------------------------------------------
+# Multi-process runtime
+# ---------------------------------------------------------------------------
+
+def _close_fds(fds) -> None:
+    for fd in fds:
+        try:
+            os.close(fd)
+        except OSError:
+            pass
+
+
+def _worker_main(wid: int, endpoint_args, wire_name: str,
+                 zero_worker: bool, simulate_durations: bool,
+                 tasks_table, cleanup_fds) -> None:
+    """Single-threaded worker process: recv compute frames, execute, send
+    finished frames.  Mirrors the paper's one-thread-per-worker setup."""
+    _close_fds(cleanup_fds)
+    ep = tp.make_worker_endpoint(endpoint_args)
+    wire = msg.make_wire(wire_name)
+    pending: collections.deque = collections.deque()
+    retracted: set[int] = set()
+    out: list[tuple[int, Any]] = []
+    alive = True
+
+    def flush() -> None:
+        if out:
+            for frame in wire.encode_finished_batch(wid, out):
+                ep.send(frame)
+            out.clear()
+
+    while alive or pending:
+        block = alive and not pending
+        if block:
+            flush()
+        timeout = None if block else 0
+        while alive:
+            try:
+                raw = ep.recv(timeout)
+            except tp.TransportClosed:
+                alive = False
+                break
+            if raw is None:
+                break
+            op, recs, payloads = wire.decode(raw)
+            if op == msg.OP_COMPUTE:
+                for tid, dur in recs:
+                    pending.append(
+                        (tid, dur,
+                         payloads.get(tid) if payloads else None))
+            elif op == msg.OP_RETRACT:
+                retracted.update(int(t) for t in recs)
+            elif op == msg.OP_SHUTDOWN:
+                alive = False
+            timeout = 0
+        if not pending:
+            if not alive:
+                break
+            continue
+        tid, dur, payload = pending.popleft()
+        if tid in retracted:
+            retracted.discard(tid)
+            continue
+        result = msg._NO_RESULT
+        if not zero_worker:
+            fn, fargs = (tasks_table[tid] if tasks_table is not None
+                         else (None, ()))
+            if fn is not None:
+                vals = payload if payload is not None else []
+                result = fn(*vals) if fargs == () else fn(*fargs)
+            elif simulate_durations and dur > 0:
+                time.sleep(dur)
+        out.append((tid, result))
+        # dask wire is per-message anyway; for the static wire, batch up
+        # completions while more work is queued (RSDS batching)
+        if not wire.batched or not pending or len(out) >= 64:
+            flush()
+    flush()
+    ep.close()
+
+
+class ProcessRuntime:
+    """Drop-in sibling of :class:`ThreadRuntime` with OS-process workers
+    behind a byte transport and a selector-based server event loop."""
+
+    def __init__(self, graph: TaskGraph, reactor, n_workers: int,
+                 *, transport: str = "pipe", zero_worker: bool = False,
+                 simulate_durations: bool = True,
+                 balance_interval: float = 0.05, timeout: float = 300.0,
+                 start_method: str | None = None):
+        if getattr(reactor, "simulate_codec", False):
+            raise ValueError(
+                "ProcessRuntime needs a reactor with simulate_codec=False: "
+                "the wire pays the real codec cost")
+        self.g = graph
+        self.reactor = reactor
+        self.n_workers = n_workers
+        self.transport_kind = transport
+        self.zero_worker = zero_worker
+        self.simulate_durations = simulate_durations
+        self.balance_interval = balance_interval
+        self.timeout = timeout
+        self.start_method = start_method
+        self.wire = msg.make_wire(reactor.name)
+        self.results: dict[int, Any] = {}
+        self.queued: dict[int, set[int]] = {w: set()
+                                            for w in range(n_workers)}
+        self.dead: set[int] = set()
+        self.server_busy = 0.0
+        self.codec_s = 0.0
+        self.wire_bytes = 0
+        self.wire_frames = 0
+        self.procs: list = []
+        self._kill_requests: queue.Queue = queue.Queue()
+        self._tp = None
+        self._timed_out = False
+
+    # ------------------------------------------------------------------
+    def fail_worker(self, wid: int) -> None:
+        """First-class failure injection: SIGKILL the worker process.
+
+        Processed on the server loop (kill + worker-lost handling), so it
+        is safe to call from any thread."""
+        self._kill_requests.put(wid)
+
+    # ------------------------------------------------------------------
+    def _charge(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self.server_busy += time.perf_counter() - t0
+        return out
+
+    def _send_frames(self, wid: int, frames) -> None:
+        for frame in frames:
+            self.wire_bytes += len(frame)
+            self.wire_frames += 1
+            self._tp.send(wid, frame)
+
+    def _dispatch(self, assignments) -> None:
+        """Encode and send compute frames; reroutes assignments that hit a
+        dead worker (may cascade through handle_worker_lost)."""
+        durations = self.g.durations
+        has_fns = self._tasks_table is not None
+        pending = list(assignments)
+        while pending:
+            by_wid: dict[int, list] = {}
+            rerouted: list = []
+            for tid, wid in pending:
+                if wid in self.dead:
+                    out = self._charge(self.reactor.handle_worker_lost,
+                                       wid, [tid])
+                    rerouted.extend(out)
+                    continue
+                self.queued[wid].add(tid)
+                by_wid.setdefault(wid, []).append(
+                    (tid, float(durations[tid])))
+            for wid, items in by_wid.items():
+                payloads = None
+                if has_fns:
+                    payloads = {}
+                    for tid, _ in items:
+                        if self._tasks_table[tid][0] is not None \
+                                and self.g.tasks[tid].args == ():
+                            payloads[tid] = [self.results.get(int(d))
+                                             for d in self.g.inputs_of(tid)]
+                    payloads = payloads or None
+                t0 = time.perf_counter()
+                frames = self.wire.encode_compute_batch(
+                    items, payloads, inputs_of=self.g.inputs_of)
+                dt = time.perf_counter() - t0
+                self.codec_s += dt
+                self.server_busy += dt
+                self._send_frames(wid, frames)
+            pending = rerouted
+
+    def _worker_lost(self, wid: int) -> None:
+        if wid in self.dead:
+            return
+        self.dead.add(wid)
+        self._tp.drop(wid)
+        if len(self.dead) >= self.n_workers:
+            # no capacity left to resubmit onto: the run cannot finish
+            self._timed_out = True
+            return
+        lost = sorted(self.queued.pop(wid, set()))
+        out = self._charge(self.reactor.handle_worker_lost, wid, lost)
+        self._dispatch(out)
+
+    def _drain_kills(self) -> None:
+        while True:
+            try:
+                wid = self._kill_requests.get_nowait()
+            except queue.Empty:
+                return
+            if wid in self.dead:
+                continue
+            p = self.procs[wid]
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=2.0)
+            self._worker_lost(wid)
+
+    def _sweep_dead(self) -> None:
+        for wid, p in enumerate(self.procs):
+            if wid not in self.dead and not p.is_alive():
+                self._worker_lost(wid)
+
+    # ------------------------------------------------------------------
+    def run(self) -> RunResult:
+        ctx_name = (self.start_method
+                    or os.environ.get("REPRO_START_METHOD"))
+        if not ctx_name:
+            # fork is fastest, but forking a parent whose jax/XLA threads
+            # hold locks can deadlock the child (CPython warns on it) —
+            # prefer spawn once jax is loaded; workers never need jax
+            fork_ok = ("fork" in mp.get_all_start_methods()
+                       and "jax" not in sys.modules)
+            ctx_name = "fork" if fork_ok else "spawn"
+        if ctx_name != "fork" and self.transport_kind == "pipe":
+            self.transport_kind = "socket"  # raw fds need fork inheritance
+        ctx = mp.get_context(ctx_name)
+        self._tasks_table = (
+            [(t.fn, t.args) for t in self.g.tasks]
+            if any(t.fn is not None for t in self.g.tasks) else None)
+        self._tp = tp.make_server_transport(self.transport_kind,
+                                            self.n_workers)
+        try:
+            for wid in range(self.n_workers):
+                p = ctx.Process(
+                    target=_worker_main,
+                    args=(wid, self._tp.worker_args(wid),
+                          self.reactor.name, self.zero_worker,
+                          self.simulate_durations, self._tasks_table,
+                          self._tp.child_cleanup(wid)
+                          if ctx_name == "fork" else []),
+                    daemon=True)
+                p.start()
+                self.procs.append(p)
+            self._tp.after_start(self.procs)
+        except BaseException:
+            for p in self.procs:
+                if p.is_alive():
+                    p.kill()
+            raise
+
+        t_start = time.perf_counter()
+        deadline = t_start + self.timeout
+        init = self._charge(self.reactor.start)
+        self._dispatch(init)
+        last_balance = time.perf_counter()
+        try:
+            while not self.reactor.done() and not self._timed_out:
+                now = time.perf_counter()
+                if now > deadline:
+                    self._timed_out = True
+                    break
+                self._drain_kills()
+                events = self._tp.poll(0.01)
+                finished: list[tuple[int, int]] = []
+                for wid, raw in events:
+                    if raw is None:           # EOF: unexpected death
+                        self._worker_lost(wid)
+                        continue
+                    self.wire_bytes += len(raw)
+                    self.wire_frames += 1
+                    t0 = time.perf_counter()
+                    op, recs, payloads = self.wire.decode(raw)
+                    dt = time.perf_counter() - t0
+                    self.codec_s += dt
+                    self.server_busy += dt
+                    if op != msg.OP_FINISHED:
+                        continue
+                    for tid, rw, _nbytes in recs:
+                        if wid in self.dead:
+                            continue  # stale frame from a failed worker
+                        finished.append((int(tid), int(rw)))
+                        self.queued.get(wid, set()).discard(int(tid))
+                    if payloads:
+                        self.results.update(payloads)
+                if finished:
+                    out = self._charge(self.reactor.handle_finished,
+                                       finished)
+                    self._dispatch(out)
+                now = time.perf_counter()
+                if now - last_balance > self.balance_interval:
+                    last_balance = now
+                    self._sweep_dead()
+                    self._do_balance()
+        finally:
+            self._shutdown()
+        makespan = time.perf_counter() - t_start
+        stats = self.reactor.stats.as_dict()
+        stats.update(wire_bytes=self.wire_bytes,
+                     wire_frames=self.wire_frames,
+                     codec_s=round(self.codec_s, 6),
+                     transport=self.transport_kind)
+        return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
+                         server_busy=self.server_busy, stats=stats,
+                         results=self.results, timed_out=self._timed_out)
+
+    def _do_balance(self) -> None:
+        qbw = {w: sorted(s) for w, s in self.queued.items()
+               if s and w not in self.dead}
+        if not qbw:
+            return
+        moves = self._charge(self.reactor.rebalance, qbw)
+        retract_by_wid: dict[int, list[int]] = {}
+        real_moves = []
+        for tid, nw in moves:
+            src = next((w for w, s in self.queued.items() if tid in s),
+                       None)
+            if src is None or src == nw:
+                continue
+            # optimistic steal: the old worker drops the task if it has
+            # not started; a duplicate completion is ignored by the
+            # reactor (same retraction semantics as the simulator)
+            self.queued[src].discard(tid)
+            retract_by_wid.setdefault(src, []).append(tid)
+            real_moves.append((tid, nw))
+        for wid, tids in retract_by_wid.items():
+            t0 = time.perf_counter()
+            frames = self.wire.encode_retract(tids)
+            dt = time.perf_counter() - t0
+            self.codec_s += dt
+            self.server_busy += dt
+            self._send_frames(wid, frames)
+        self._dispatch(real_moves)
+
+    def _shutdown(self) -> None:
+        try:
+            bye = self.wire.encode_shutdown()
+            for wid in range(self.n_workers):
+                if wid not in self.dead:
+                    self._tp.send(wid, bye)
+            # give the non-blocking writers a chance to flush
+            for _ in range(50):
+                self._tp.poll(0.01)
+                if all(not p.is_alive() for p in self.procs):
+                    break
+        finally:
+            self._tp.close()
+            for p in self.procs:
+                p.join(timeout=1.0)
+                if p.is_alive():
+                    p.kill()
+                    p.join(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+
 def run_graph(graph: TaskGraph, server: str = "rsds",
-              scheduler: str = "ws", n_workers: int = 8, **kw) -> RunResult:
+              scheduler: str = "ws", n_workers: int = 8,
+              runtime: str = "thread", seed: int = 0, **kw) -> RunResult:
+    """Run a graph on a wall-clock engine.
+
+    runtime="thread": in-process worker threads (codec simulated for the
+    Dask-style server).  runtime="process": OS-process workers behind a
+    real byte transport (codec paid on the wire); extra kwargs:
+    ``transport="pipe"|"socket"``, ``start_method``.
+    """
     from repro.core.array_reactor import ArrayReactor
     from repro.core.reactor import ObjectReactor
     from repro.core.schedulers import make_scheduler
@@ -192,5 +580,11 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
                   "random": "random", "heft": "heft"}[scheduler]
     sched = make_scheduler(sched_name)
     cls = ObjectReactor if server == "dask" else ArrayReactor
-    reactor = cls(graph, sched, n_workers)
-    return ThreadRuntime(graph, reactor, n_workers, **kw).run()
+    if runtime == "thread":
+        reactor = cls(graph, sched, n_workers, seed=seed)
+        return ThreadRuntime(graph, reactor, n_workers, **kw).run()
+    if runtime == "process":
+        reactor = cls(graph, sched, n_workers, seed=seed,
+                      simulate_codec=False)
+        return ProcessRuntime(graph, reactor, n_workers, **kw).run()
+    raise ValueError(f"unknown runtime {runtime!r} (want thread|process)")

@@ -1,0 +1,476 @@
+"""Pluggable transport layer: how task payloads reach workers.
+
+The paper's thesis is that Dask's overhead is *runtime* cost — per-message
+serialization and event-loop work at the server boundary.  The original
+:class:`repro.core.runtime.ThreadRuntime` kept workers in-process, so that
+boundary was simulated.  This module makes it pluggable:
+
+* :class:`InprocTransport` — queue-based channels for the thread runtime.
+  Messages are Python objects; no codec is paid (the Dask-style reactor
+  keeps simulating it internally, as before).
+* :class:`PipeTransport` — one ``os.pipe()`` pair per worker **process**
+  with 4-byte length-prefixed frames.  Fork start method only (raw fds).
+* :class:`SocketTransport` — localhost TCP with the same framing; works
+  with any start method (workers connect by address).
+
+Server sides of the process transports are *selector-driven and
+never block on send*: outbound frames go through a non-blocking buffered
+writer (:class:`_NBWriter`), so a flood of compute messages cannot
+deadlock against workers flooding completions back.  Worker endpoints are
+plain blocking I/O (single-threaded workers, matching the paper's setup).
+
+Wire *content* (what the bytes mean) lives in :mod:`repro.core.messages`;
+this module only moves frames.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import queue
+import selectors
+import socket
+import struct
+import time
+
+_LEN = struct.Struct("<I")
+
+
+class TransportClosed(Exception):
+    """Peer hung up (EOF on the channel)."""
+
+
+# ---------------------------------------------------------------------------
+# In-process transport (thread runtime)
+# ---------------------------------------------------------------------------
+
+class InprocTransport:
+    """Per-worker object queues + one multiplexed server inbox.
+
+    This is the existing thread-runtime wiring lifted behind the transport
+    interface.  ``inject`` lets any thread hand the server loop a control
+    event (e.g. ``("worker-lost", wid, lost)``) so reactor mutation stays
+    on the server thread.
+    """
+    name = "inproc"
+
+    def __init__(self, n_workers: int):
+        self.inbox: queue.Queue = queue.Queue()
+        self.worker_queues: list[queue.Queue] = [queue.Queue()
+                                                 for _ in range(n_workers)]
+
+    # server side -------------------------------------------------------
+    def send(self, wid: int, item) -> None:
+        self.worker_queues[wid].put(item)
+
+    def recv(self, timeout: float | None = None):
+        """One event, or raise queue.Empty after ``timeout``."""
+        return self.inbox.get(timeout=timeout)
+
+    def drain(self) -> list:
+        out = []
+        while True:
+            try:
+                out.append(self.inbox.get_nowait())
+            except queue.Empty:
+                return out
+
+    def inject(self, event) -> None:
+        self.inbox.put(event)
+
+    def add_worker(self) -> int:
+        self.worker_queues.append(queue.Queue())
+        return len(self.worker_queues) - 1
+
+    # worker side -------------------------------------------------------
+    def worker_recv(self, wid: int):
+        return self.worker_queues[wid].get()
+
+    def worker_send(self, wid: int, item) -> None:
+        self.inbox.put(item)
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking buffered writer (server side of process transports)
+# ---------------------------------------------------------------------------
+
+class _NBWriter:
+    """Buffers outbound bytes over a non-blocking fd/socket.
+
+    ``write`` never blocks: what the kernel won't take is buffered and
+    retried on the next ``flush``.  This breaks the send/send deadlock
+    cycle between a server dispatching a large batch and workers pushing
+    completions back."""
+
+    def __init__(self, write_fn):
+        self._write = write_fn          # bytes -> n_written (may raise)
+        self.buf = bytearray()
+
+    def write(self, data: bytes) -> None:
+        self.buf += data
+        self.flush()
+
+    def flush(self) -> bool:
+        """Push buffered bytes; True when the buffer is empty."""
+        while self.buf:
+            try:
+                n = self._write(self.buf)
+            except (BlockingIOError, InterruptedError):
+                return False
+            if n <= 0:
+                return False
+            del self.buf[:n]
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Pipe transport (fork start method)
+# ---------------------------------------------------------------------------
+
+class PipeTransport:
+    """One pair of unidirectional pipes per worker, length-prefixed frames.
+
+    Raw ``os.pipe()`` fds (not ``multiprocessing.Pipe``) so the server can
+    write non-blocking with manual framing.  Children must close every
+    inherited fd except their own pair — :meth:`child_cleanup` lists them —
+    otherwise EOF-on-death detection breaks.
+    """
+    name = "pipe"
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._s2w = []   # (r, w): server writes w, worker reads r
+        self._w2s = []   # (r, w): worker writes w, server reads r
+        for _ in range(n_workers):
+            self._s2w.append(os.pipe())
+            self._w2s.append(os.pipe())
+        self._writers: dict[int, _NBWriter] = {}
+        self._rbufs: dict[int, bytearray] = {}
+        self._sel = selectors.DefaultSelector()
+        self._open: set[int] = set()
+
+    # lifecycle ---------------------------------------------------------
+    def worker_args(self, wid: int):
+        return ("pipe", self._s2w[wid][0], self._w2s[wid][1])
+
+    def child_cleanup(self, wid: int) -> list[int]:
+        fds = []
+        for i in range(self.n_workers):
+            fds += [self._s2w[i][1], self._w2s[i][0]]
+            if i != wid:
+                fds += [self._s2w[i][0], self._w2s[i][1]]
+        return fds
+
+    def after_start(self, procs=None, timeout: float = 30.0) -> None:
+        """Close the parent's copies of the child ends; arm the selector."""
+        for wid in range(self.n_workers):
+            os.close(self._s2w[wid][0])
+            os.close(self._w2s[wid][1])
+            wfd = self._s2w[wid][1]
+            rfd = self._w2s[wid][0]
+            os.set_blocking(wfd, False)
+            os.set_blocking(rfd, False)
+            self._writers[wid] = _NBWriter(lambda b, fd=wfd: os.write(fd, b))
+            self._rbufs[wid] = bytearray()
+            self._sel.register(rfd, selectors.EVENT_READ, wid)
+            self._open.add(wid)
+
+    # server side -------------------------------------------------------
+    def send(self, wid: int, data: bytes) -> None:
+        if wid not in self._open:
+            return
+        try:
+            self._writers[wid].write(_LEN.pack(len(data)) + data)
+        except (BrokenPipeError, OSError):
+            pass  # death is reported via the read side
+
+    def poll(self, timeout: float) -> list[tuple[int, bytes | None]]:
+        """Flush pending sends, then gather complete inbound frames.
+
+        Returns ``(wid, frame_bytes)`` entries; ``(wid, None)`` marks EOF
+        (worker death)."""
+        for wid in list(self._open):
+            try:
+                self._writers[wid].flush()
+            except OSError:
+                pass  # peer died; the read side reports it
+        events: list[tuple[int, bytes | None]] = []
+        if not self._open:
+            time.sleep(min(timeout, 0.01))
+            return events
+        for key, _ in self._sel.select(timeout):
+            wid = key.data
+            buf = self._rbufs[wid]
+            eof = False
+            while True:
+                try:
+                    chunk = os.read(key.fd, 1 << 16)
+                except (BlockingIOError, InterruptedError):
+                    break
+                except OSError:
+                    chunk = b""
+                if not chunk:
+                    eof = True
+                    break
+                buf += chunk
+            events.extend((wid, f) for f in _split_frames(buf))
+            if eof:
+                self.drop(wid)
+                events.append((wid, None))
+        return events
+
+    def drop(self, wid: int) -> None:
+        if wid not in self._open:
+            return
+        self._open.discard(wid)
+        self._writers.pop(wid, None)
+        self._rbufs.pop(wid, None)
+        try:
+            self._sel.unregister(self._w2s[wid][0])
+        except (KeyError, ValueError):
+            pass
+        for fd in (self._w2s[wid][0], self._s2w[wid][1]):
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        for wid in list(self._open):
+            self.drop(wid)
+        self._sel.close()
+
+
+def _split_frames(buf: bytearray) -> list[bytes]:
+    frames = []
+    while len(buf) >= _LEN.size:
+        (n,) = _LEN.unpack_from(buf)
+        if len(buf) < _LEN.size + n:
+            break
+        frames.append(bytes(buf[_LEN.size:_LEN.size + n]))
+        del buf[:_LEN.size + n]
+    return frames
+
+
+# ---------------------------------------------------------------------------
+# Socket transport (any start method)
+# ---------------------------------------------------------------------------
+
+class SocketTransport:
+    """Localhost TCP, 4-byte length-prefixed frames, hello(wid) handshake."""
+    name = "socket"
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(n_workers)
+        self.addr = self._listener.getsockname()
+        self._conns: dict[int, socket.socket] = {}
+        self._writers: dict[int, _NBWriter] = {}
+        self._rbufs: dict[int, bytearray] = {}
+        self._sel = selectors.DefaultSelector()
+        self._open: set[int] = set()
+
+    def worker_args(self, wid: int):
+        return ("socket", self.addr, wid)
+
+    def child_cleanup(self, wid: int) -> list[int]:
+        return []  # children create their own socket after start
+
+    def after_start(self, procs=None, timeout: float = 30.0) -> None:
+        """Accept one connection per worker (identified by hello frame)."""
+        self._listener.settimeout(timeout)
+        for _ in range(self.n_workers):
+            conn, _ = self._listener.accept()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            hello = _recv_exact(conn, _LEN.size)
+            (wid,) = _LEN.unpack(hello)
+            conn.setblocking(False)
+            self._conns[wid] = conn
+            self._writers[wid] = _NBWriter(conn.send)
+            self._rbufs[wid] = bytearray()
+            self._sel.register(conn, selectors.EVENT_READ, wid)
+            self._open.add(wid)
+        self._listener.close()
+
+    def send(self, wid: int, data: bytes) -> None:
+        if wid not in self._open:
+            return
+        try:
+            self._writers[wid].write(_LEN.pack(len(data)) + data)
+        except OSError:
+            pass
+
+    def poll(self, timeout: float) -> list[tuple[int, bytes | None]]:
+        for wid in list(self._open):
+            try:
+                self._writers[wid].flush()
+            except OSError:
+                pass
+        events: list[tuple[int, bytes | None]] = []
+        if not self._open:
+            time.sleep(min(timeout, 0.01))
+            return events
+        for key, _ in self._sel.select(timeout):
+            wid = key.data
+            buf = self._rbufs[wid]
+            eof = False
+            while True:
+                try:
+                    chunk = self._conns[wid].recv(1 << 16)
+                except (BlockingIOError, InterruptedError):
+                    break
+                except OSError:
+                    chunk = b""
+                if not chunk:
+                    eof = True
+                    break
+                buf += chunk
+            events.extend((wid, f) for f in _split_frames(buf))
+            if eof:
+                self.drop(wid)
+                events.append((wid, None))
+        return events
+
+    def drop(self, wid: int) -> None:
+        if wid not in self._open:
+            return
+        self._open.discard(wid)
+        self._writers.pop(wid, None)
+        self._rbufs.pop(wid, None)
+        conn = self._conns.pop(wid)
+        try:
+            self._sel.unregister(conn)
+        except (KeyError, ValueError):
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        for wid in list(self._open):
+            self.drop(wid)
+        self._sel.close()
+
+
+def _recv_exact(conn: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = conn.recv(n - len(buf))
+        if not chunk:
+            raise TransportClosed("peer closed during handshake")
+        buf += chunk
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Worker endpoints (blocking I/O inside the worker process)
+# ---------------------------------------------------------------------------
+
+class WorkerEndpoint:
+    """Blocking framed channel as seen from inside a worker process."""
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        """One frame; None on timeout; raises TransportClosed on EOF."""
+        raise NotImplementedError
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+
+class _PipeWorkerEndpoint(WorkerEndpoint):
+    def __init__(self, rfd: int, wfd: int):
+        self.rfd, self.wfd = rfd, wfd
+        self.buf = bytearray()
+        self.frames: collections.deque[bytes] = collections.deque()
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(rfd, selectors.EVENT_READ)
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        while True:
+            if self.frames:
+                return self.frames.popleft()
+            if not self._sel.select(timeout):
+                return None
+            chunk = os.read(self.rfd, 1 << 16)
+            if not chunk:
+                raise TransportClosed("server closed pipe")
+            self.buf += chunk
+            self.frames.extend(_split_frames(self.buf))
+
+    def send(self, data: bytes) -> None:
+        payload = _LEN.pack(len(data)) + data
+        view = memoryview(payload)
+        while view:
+            n = os.write(self.wfd, view)
+            view = view[n:]
+
+    def close(self) -> None:
+        self._sel.close()
+        for fd in (self.rfd, self.wfd):
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+
+class _SocketWorkerEndpoint(WorkerEndpoint):
+    def __init__(self, addr, wid: int):
+        self.sock = socket.create_connection(addr, timeout=30.0)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock.sendall(_LEN.pack(wid))     # hello
+        self.sock.settimeout(None)
+        self.buf = bytearray()
+        self.frames: collections.deque[bytes] = collections.deque()
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        while True:
+            if self.frames:
+                return self.frames.popleft()
+            self.sock.settimeout(timeout)
+            try:
+                chunk = self.sock.recv(1 << 16)
+            except (socket.timeout, BlockingIOError, InterruptedError):
+                # timeout=0 puts the socket in non-blocking mode, where
+                # "nothing there" is BlockingIOError rather than timeout
+                return None
+            finally:
+                self.sock.settimeout(None)
+            if not chunk:
+                raise TransportClosed("server closed socket")
+            self.buf += chunk
+            self.frames.extend(_split_frames(self.buf))
+
+    def send(self, data: bytes) -> None:
+        self.sock.sendall(_LEN.pack(len(data)) + data)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def make_worker_endpoint(args) -> WorkerEndpoint:
+    kind = args[0]
+    if kind == "pipe":
+        return _PipeWorkerEndpoint(args[1], args[2])
+    if kind == "socket":
+        return _SocketWorkerEndpoint(args[1], args[2])
+    raise ValueError(f"unknown worker endpoint kind {kind!r}")
+
+
+def make_server_transport(kind: str, n_workers: int):
+    if kind == "pipe":
+        return PipeTransport(n_workers)
+    if kind == "socket":
+        return SocketTransport(n_workers)
+    raise ValueError(f"unknown transport {kind!r} (want pipe|socket)")

@@ -27,6 +27,29 @@ class FailurePlan:
     def for_simulator(self):
         return tuple(self.events)
 
+    def apply_wallclock(self, runtime) -> list[threading.Timer]:
+        """Arm the schedule against a wall-clock runtime.
+
+        Works uniformly on both engines: on a ThreadRuntime,
+        ``fail_worker`` routes a worker-lost event through the server
+        inbox; on a ProcessRuntime it SIGKILLs the worker process and the
+        server resubmits its outstanding tasks.  Call before
+        ``runtime.run()``; returns the timers (cancel to abort)."""
+        timers = []
+        for delay, wid in self.events:
+            t = threading.Timer(delay, runtime.fail_worker, args=(wid,))
+            t.daemon = True
+            t.start()
+            timers.append(t)
+        return timers
+
+
+def kill_worker_after(runtime, wid: int, delay: float) -> threading.Timer:
+    """One-shot process/thread worker kill (first-class failure
+    injection for tests and benchmarks)."""
+    (t,) = FailurePlan(((delay, wid),)).apply_wallclock(runtime)
+    return t
+
 
 class HeartbeatMonitor:
     """Watches a ThreadRuntime's workers; a worker that hasn't reported a
@@ -111,11 +134,9 @@ class ElasticController:
         self.rt = runtime
 
     def scale_up(self, n: int = 1) -> list[int]:
-        import queue as _q
         new_ids = []
         for _ in range(n):
-            wid = self.rt.n_workers
-            self.rt.worker_inbox.append(_q.Queue())
+            wid = self.rt.transport.add_worker()
             self.rt.n_workers += 1
             self.rt.reactor.n_workers += 1
             self.rt.reactor.scheduler.on_worker_change(self.rt.n_workers)
@@ -126,10 +147,13 @@ class ElasticController:
         return new_ids
 
     def scale_down(self, wid: int) -> None:
-        """Graceful retire: reassign queued tasks, then stop the thread."""
+        """Graceful retire: reassign queued tasks, then stop the thread.
+
+        The loss is routed through the server inbox so the reactor is
+        only ever mutated on the server thread (same discipline as
+        ``fail_worker``)."""
         with self.rt._lock:
             pending = list(self.rt.queued.pop(wid, []))
             self.rt.dead.add(wid)
-        out = self.rt.reactor.handle_worker_lost(wid, pending)
-        self.rt._send(out)
-        self.rt.worker_inbox[wid].put(None)
+        self.rt.transport.inject(("worker-lost", wid, tuple(pending)))
+        self.rt.transport.send(wid, None)

@@ -1,7 +1,8 @@
-"""TaskGraph + benchmark-suite structural tests (paper Table I)."""
-import numpy as np
+"""TaskGraph + benchmark-suite structural tests (paper Table I).
+
+Property-based (hypothesis) invariants live in test_property.py, which
+importorskips hypothesis so minimal installs still collect this suite."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import benchgraphs
 from repro.core.graph import Task, TaskGraph
@@ -52,26 +53,3 @@ def test_critical_path_bounds():
     g = benchgraphs.tree(6)
     cp = g.critical_path_time()
     assert 0 < cp <= g.total_work()
-
-
-@st.composite
-def random_dag(draw):
-    n = draw(st.integers(2, 40))
-    tasks = []
-    for i in range(n):
-        max_deps = min(i, 4)
-        k = draw(st.integers(0, max_deps))
-        deps = tuple(sorted(draw(
-            st.sets(st.integers(0, i - 1), min_size=k, max_size=k)))) \
-            if i else ()
-        tasks.append(Task(i, deps, duration=draw(
-            st.floats(1e-5, 1e-3)), output_size=draw(st.floats(1, 1e4))))
-    return TaskGraph(tasks, name="hyp")
-
-
-@given(random_dag())
-@settings(max_examples=30, deadline=None)
-def test_random_dag_invariants(g):
-    assert g.n_deps == sum(len(t.inputs) for t in g.tasks)
-    assert g.longest_path() < g.n_tasks
-    assert g.critical_path_time() <= g.total_work() + 1e-9

@@ -1,13 +1,13 @@
 """Simulator + reactor behaviour: every (server x scheduler) completes
 every graph family, dependencies are respected, failures recover, zero
-worker isolates the server (paper §IV-D / §VI)."""
-import numpy as np
+worker isolates the server (paper §IV-D / §VI).
+
+Property-based (hypothesis) invariants live in test_property.py, which
+importorskips hypothesis so minimal installs still collect this suite."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import benchgraphs, simulate
 from repro.core.array_reactor import ArrayReactor
-from repro.core.graph import Task, TaskGraph
 from repro.core.reactor import ObjectReactor
 from repro.core.schedulers import make_scheduler
 from repro.core.simulator import SimConfig, Simulator
@@ -97,36 +97,3 @@ def test_duplicate_completions_ignored():
         n1 = reactor.n_done
         reactor.handle_finished([(0, 1), (0, 0)])  # dupes
         assert reactor.n_done == n1
-
-
-@st.composite
-def dag_and_failures(draw):
-    n = draw(st.integers(3, 30))
-    tasks = []
-    for i in range(n):
-        k = draw(st.integers(0, min(i, 3)))
-        deps = tuple(sorted(draw(st.sets(
-            st.integers(0, i - 1), min_size=k, max_size=k)))) if i else ()
-        tasks.append(Task(i, deps, duration=1e-4, output_size=100.0))
-    g = TaskGraph(tasks, name="hyp")
-    n_workers = draw(st.integers(2, 6))
-    fail = draw(st.booleans())
-    failures = ((5e-4, draw(st.integers(0, n_workers - 1))),) if fail else ()
-    server = draw(st.sampled_from(SERVERS))
-    sched = draw(st.sampled_from(SCHEDS))
-    return g, n_workers, failures, server, sched
-
-
-@given(dag_and_failures())
-@settings(max_examples=25, deadline=None)
-def test_property_any_dag_completes(case):
-    """System invariant: any DAG + any scheduler + any single failure ->
-    all tasks complete, deps respected, makespan >= critical path."""
-    g, n_workers, failures, server, sched = case
-    # never kill the only worker
-    if failures and n_workers < 3:
-        failures = ()
-    r = simulate(g, server=server, scheduler=sched, n_workers=n_workers,
-                 failures=failures)
-    assert not r.timed_out
-    assert r.makespan >= g.critical_path_time() * 0.999

@@ -1,0 +1,70 @@
+"""Property-based invariants (hypothesis).  This module degrades to a
+clean skip on minimal installs — ``pytest.importorskip`` keeps the rest
+of the suite collecting when hypothesis is absent."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import simulate  # noqa: E402
+from repro.core.graph import Task, TaskGraph  # noqa: E402
+
+SERVERS = ["dask", "rsds"]
+SCHEDS = ["random", "ws"]
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 40))
+    tasks = []
+    for i in range(n):
+        max_deps = min(i, 4)
+        k = draw(st.integers(0, max_deps))
+        deps = tuple(sorted(draw(
+            st.sets(st.integers(0, i - 1), min_size=k, max_size=k)))) \
+            if i else ()
+        tasks.append(Task(i, deps, duration=draw(
+            st.floats(1e-5, 1e-3)), output_size=draw(st.floats(1, 1e4))))
+    return TaskGraph(tasks, name="hyp")
+
+
+@given(random_dag())
+@settings(max_examples=30, deadline=None)
+def test_random_dag_invariants(g):
+    assert g.n_deps == sum(len(t.inputs) for t in g.tasks)
+    assert g.longest_path() < g.n_tasks
+    assert g.critical_path_time() <= g.total_work() + 1e-9
+
+
+@st.composite
+def dag_and_failures(draw):
+    n = draw(st.integers(3, 30))
+    tasks = []
+    for i in range(n):
+        k = draw(st.integers(0, min(i, 3)))
+        deps = tuple(sorted(draw(st.sets(
+            st.integers(0, i - 1), min_size=k, max_size=k)))) if i else ()
+        tasks.append(Task(i, deps, duration=1e-4, output_size=100.0))
+    g = TaskGraph(tasks, name="hyp")
+    n_workers = draw(st.integers(2, 6))
+    fail = draw(st.booleans())
+    failures = ((5e-4, draw(st.integers(0, n_workers - 1))),) if fail else ()
+    server = draw(st.sampled_from(SERVERS))
+    sched = draw(st.sampled_from(SCHEDS))
+    return g, n_workers, failures, server, sched
+
+
+@given(dag_and_failures())
+@settings(max_examples=25, deadline=None)
+def test_property_any_dag_completes(case):
+    """System invariant: any DAG + any scheduler + any single failure ->
+    all tasks complete, deps respected, makespan >= critical path."""
+    g, n_workers, failures, server, sched = case
+    # never kill the only worker
+    if failures and n_workers < 3:
+        failures = ()
+    r = simulate(g, server=server, scheduler=sched, n_workers=n_workers,
+                 failures=failures)
+    assert not r.timed_out
+    assert r.makespan >= g.critical_path_time() * 0.999

@@ -1,0 +1,178 @@
+"""Transport framing + wire codec unit tests."""
+import os
+import threading
+
+import pytest
+
+from repro.core import messages as msg
+from repro.core import transport as tp
+
+
+# ---------------------------------------------------------------------------
+# wire codecs
+# ---------------------------------------------------------------------------
+
+def test_dask_wire_roundtrip():
+    wire = msg.DaskWire()
+    frames = wire.encode_compute_batch([(3, 0.5), (7, 0.0)],
+                                       payloads={3: [1, 2]},
+                                       inputs_of=lambda t: [0, 1])
+    assert len(frames) == 2  # per-message
+    op, recs, payloads = wire.decode(frames[0])
+    assert op == msg.OP_COMPUTE and recs == [(3, 0.5)]
+    assert payloads == {3: [1, 2]}
+    op, recs, payloads = wire.decode(frames[1])
+    assert recs == [(7, 0.0)] and payloads is None
+
+    fins = wire.encode_finished_batch(2, [(3, 42), (7, msg._NO_RESULT)])
+    assert len(fins) == 2
+    op, recs, payloads = wire.decode(fins[0])
+    assert op == msg.OP_FINISHED and recs[0][:2] == (3, 2)
+    assert payloads == {3: 42}
+    op, recs, payloads = wire.decode(fins[1])
+    assert recs[0][:2] == (7, 2) and payloads is None
+
+
+def test_static_wire_roundtrip():
+    wire = msg.StaticWire()
+    items = [(i, float(i) / 10) for i in range(100)]
+    frames = wire.encode_compute_batch(items)
+    assert len(frames) == 1  # one frame per batch
+    op, recs, payloads = wire.decode(frames[0])
+    assert op == msg.OP_COMPUTE and payloads is None
+    assert recs == items
+
+    fins = wire.encode_finished_batch(5, [(1, msg._NO_RESULT),
+                                          (2, {"x": 1})])
+    (frame,) = fins
+    op, recs, payloads = wire.decode(frame)
+    assert op == msg.OP_FINISHED
+    assert [(t, w) for t, w, _ in recs] == [(1, 5), (2, 5)]
+    assert payloads == {2: {"x": 1}}
+
+    (rframe,) = wire.encode_retract([9, 11])
+    op, recs, _ = wire.decode(rframe)
+    assert op == msg.OP_RETRACT and recs == [9, 11]
+
+    op, recs, _ = wire.decode(wire.encode_shutdown())
+    assert op == msg.OP_SHUTDOWN and recs == []
+
+
+def test_codec_asymmetry_bytes():
+    """Static batched frames are far smaller than per-message msgpack for
+    the same event batch (the paper's protocol modification)."""
+    items = [(i, 0.001) for i in range(1000)]
+    dask_bytes = sum(len(f) for f in msg.DaskWire().encode_compute_batch(
+        items, inputs_of=lambda t: []))
+    static_bytes = sum(len(f) for f in
+                       msg.StaticWire().encode_compute_batch(items))
+    assert static_bytes < 0.5 * dask_bytes
+
+
+def test_make_wire():
+    assert isinstance(msg.make_wire("dask"), msg.DaskWire)
+    assert isinstance(msg.make_wire("rsds"), msg.StaticWire)
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_split_frames_partial():
+    buf = bytearray(tp._LEN.pack(5) + b"hello" + tp._LEN.pack(3) + b"wo")
+    assert tp._split_frames(buf) == [b"hello"]
+    assert bytes(buf) == tp._LEN.pack(3) + b"wo"  # partial kept
+    buf += b"r"  # completing the 3-byte frame yields it
+    assert tp._split_frames(buf) == [b"wor"]
+    assert not buf
+
+
+def test_inproc_transport_inject_and_drain():
+    t = tp.InprocTransport(2)
+    t.send(0, 42)
+    assert t.worker_recv(0) == 42
+    t.worker_send(0, ("finished", 42, 0))
+    t.inject(("worker-lost", 1, (7,)))
+    got = t.drain()
+    assert ("finished", 42, 0) in got and ("worker-lost", 1, (7,)) in got
+    assert t.add_worker() == 2
+
+
+def test_socket_transport_roundtrip_and_eof():
+    """Server and 'worker' in one process (worker on a thread): frames
+    flow both ways; closing the worker socket surfaces EOF as
+    (wid, None)."""
+    server = tp.SocketTransport(1)
+    args = server.worker_args(0)
+    ep_box = {}
+
+    def worker():
+        ep = tp.make_worker_endpoint(args)
+        ep_box["ep"] = ep
+        raw = ep.recv(timeout=5.0)
+        ep.send(b"pong:" + raw)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    server.after_start()
+    server.send(0, b"ping")
+    got = []
+    for _ in range(200):
+        got += server.poll(0.05)
+        if got:
+            break
+    th.join(5.0)
+    assert got and got[0] == (0, b"pong:ping")
+    ep_box["ep"].close()
+    eof = []
+    for _ in range(200):
+        eof += server.poll(0.05)
+        if eof:
+            break
+    assert (0, None) in eof
+    server.close()
+
+
+def test_pipe_transport_roundtrip_in_process():
+    """Pipe endpoints exercised without forking: parent plays both sides
+    (reader thread as the worker)."""
+    server = tp.PipeTransport(1)
+    kind, rfd, wfd = server.worker_args(0)
+    # duplicate the child ends so after_start() can close its copies
+    ep = tp._PipeWorkerEndpoint(os.dup(rfd), os.dup(wfd))
+
+    def worker():
+        raw = ep.recv(timeout=5.0)
+        ep.send(b"echo:" + raw)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    server.after_start()
+    server.send(0, b"abc")
+    got = []
+    for _ in range(200):
+        got += server.poll(0.05)
+        if got:
+            break
+    th.join(5.0)
+    assert got and got[0] == (0, b"echo:abc")
+    ep.close()
+    server.close()
+
+
+def test_nbwriter_buffers_on_eagain():
+    writes = []
+    state = {"block": True}
+
+    def write_fn(b):
+        if state["block"]:
+            raise BlockingIOError
+        writes.append(bytes(b[:4]))
+        return min(4, len(b))
+
+    w = tp._NBWriter(write_fn)
+    w.write(b"12345678")
+    assert w.buf == bytearray(b"12345678")  # kernel refused; buffered
+    state["block"] = False
+    assert w.flush()
+    assert b"".join(writes) == b"12345678"
