@@ -1,0 +1,100 @@
+"""Warm-vs-cold: persistent Cluster amortizes worker startup.
+
+N back-to-back graphs submitted to ONE persistent Cluster (the paper's
+long-lived-server shape) vs N one-shot ``run_graph`` calls that each spin
+the pool up and tear it down.  Cold per-graph time includes pool
+construction, startup and teardown (that is the point); warm per-graph
+time is submission→completion on the already-running pool — the first
+warm epoch is reported separately since it also pays codec/jit warmup.
+
+    PYTHONPATH=src:. python benchmarks/bench_client.py \
+        --runtime process --n-graphs 5 --n-tasks 300 --out client-bench
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import benchgraphs, run_graph
+from repro.core.client import Cluster
+
+SERVERS = ("dask", "rsds")
+
+
+def _bench_one(server: str, runtime: str, n_graphs: int,
+               n_tasks: int, n_workers: int) -> list[tuple]:
+    graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_graphs)]
+    rows: list[tuple] = []
+
+    cold = []
+    for g in graphs:
+        t0 = time.perf_counter()
+        r = run_graph(g, server=server, runtime=runtime,
+                      n_workers=n_workers, simulate_durations=False,
+                      timeout=120.0)
+        if r.timed_out:
+            rows.append((f"client-{runtime}/{server}/cold", "", "timeout"))
+            return rows
+        cold.append(time.perf_counter() - t0)
+
+    warm = []
+    with Cluster(server=server, runtime=runtime, n_workers=n_workers,
+                 simulate_durations=False, timeout=120.0) as c:
+        for g in graphs:
+            t0 = time.perf_counter()
+            c.client.submit_graph(g).result(120.0)
+            warm.append(time.perf_counter() - t0)
+
+    cold_ms = float(np.mean(cold)) * 1e3
+    first_ms = warm[0] * 1e3
+    rows.append((f"client-{runtime}/{server}/cold-per-graph",
+                 round(cold_ms, 3), f"n={n_graphs};tasks={n_tasks}"))
+    rows.append((f"client-{runtime}/{server}/warm-first",
+                 round(first_ms, 3), "epoch=1"))
+    if len(warm) > 1:    # warm-rest excludes the warmup-polluted epoch 1
+        rest_ms = float(np.mean(warm[1:])) * 1e3
+        rows.append((f"client-{runtime}/{server}/warm-rest",
+                     round(rest_ms, 3),
+                     f"epochs=2..{n_graphs};"
+                     f"speedup={cold_ms / rest_ms:.2f}"))
+    return rows
+
+
+def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
+        n_workers: int = 8) -> list[tuple]:
+    rows = []
+    for server in SERVERS:
+        rows.extend(_bench_one(server, runtime, n_graphs, n_tasks,
+                               n_workers))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runtime", default="thread",
+                    choices=("thread", "process"))
+    ap.add_argument("--n-graphs", type=int, default=5)
+    ap.add_argument("--n-tasks", type=int, default=300)
+    ap.add_argument("--n-workers", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help="artifact prefix: writes <out>.csv and <out>.json")
+    args = ap.parse_args(argv)
+    rows = run(runtime=args.runtime, n_graphs=args.n_graphs,
+               n_tasks=args.n_tasks, n_workers=args.n_workers)
+    from benchmarks.common import emit, write_artifacts
+    header = ("name", "per_graph_ms", "derived")
+    emit(rows, header=header)
+    if args.out:
+        write_artifacts(rows, args.out, header=header,
+                        meta={"runtime": args.runtime,
+                              "n_graphs": args.n_graphs,
+                              "n_tasks": args.n_tasks,
+                              "bench": "client"})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

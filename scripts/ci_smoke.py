@@ -1,9 +1,10 @@
 """CI hang-catcher: one tiny graph end-to-end on EVERY runtime.
 
 Runs merge+tree graphs through the simulator, the thread runtime and the
-process runtime (both servers each), each under a short watchdog, and
-exits nonzero on any timeout/hang/error — so CI fails in seconds instead
-of waiting out the 300 s benchmark timeout.
+process runtime (both servers each), plus a warm persistent Cluster
+submitting back-to-back epochs on each runtime, each under a short
+watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
+seconds instead of waiting out the 300 s benchmark timeout.
 
     PYTHONPATH=src python scripts/ci_smoke.py
 """
@@ -13,8 +14,24 @@ import sys
 import threading
 import time
 import traceback
+import types
 
 WATCHDOG_S = 60.0   # per-case hard limit (process spawn included)
+
+
+def _warm_cluster_case(runtime: str, server: str):
+    """Two graph epochs back-to-back on one persistent Cluster."""
+    from repro.core import benchgraphs
+    from repro.core.client import Cluster
+
+    graphs = [benchgraphs.merge(60), benchgraphs.tree(5)]
+    total = 0
+    with Cluster(server=server, runtime=runtime, n_workers=3,
+                 simulate_durations=False, timeout=30) as c:
+        for g in graphs:
+            c.client.submit_graph(g).result(30)
+            total += g.n_tasks
+    return types.SimpleNamespace(timed_out=False, n_tasks=total)
 
 
 def _cases():
@@ -31,6 +48,10 @@ def _cases():
                        lambda g=g, s=server, r=runtime: run_graph(
                            g, server=s, runtime=r, n_workers=3,
                            simulate_durations=False, timeout=30))
+    for runtime in ("thread", "process"):
+        for server in ("dask", "rsds"):
+            yield (f"client/{runtime}/{server}/warm2",
+                   lambda r=runtime, s=server: _warm_cluster_case(r, s))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

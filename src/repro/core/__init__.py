@@ -4,9 +4,11 @@ overhead isolation, virtual-time cluster simulation and real-time engines
 (thread workers in-process, or OS-process workers behind a pluggable byte
 transport)."""
 from repro.core.array_reactor import ArrayReactor
-from repro.core.graph import Task, TaskGraph
+from repro.core.client import Client, Cluster, Future, GraphFutures
+from repro.core.graph import GraphBuilder, Task, TaskGraph
 from repro.core.reactor import ObjectReactor
-from repro.core.runtime import ProcessRuntime, ThreadRuntime, run_graph
+from repro.core.runtime import ProcessRuntime, RunResult, ThreadRuntime, \
+    run_graph
 from repro.core.schedulers import (DaskWorkStealing, HeftScheduler,
                                    RandomScheduler, RsdsWorkStealing,
                                    make_scheduler)

@@ -54,6 +54,10 @@ class ArrayReactor:
         self.primary = np.full(n, -1, dtype=np.int32)  # first data location
         self.assigned = np.full(n, -1, dtype=np.int32)
         self.n_done = 0
+        # keys whose client hold was explicitly dropped (Client.release);
+        # reclaimed values are logged in ``purged`` for the runtime
+        self._dropped: set[int] = set()
+        self.purged: list[int] = []
 
     # ------------------------------------------------------------------
     def _assign(self, ready: np.ndarray) -> list[tuple[int, int]]:
@@ -70,6 +74,96 @@ class ArrayReactor:
     def start(self) -> list[tuple[int, int]]:
         ready = np.flatnonzero(self.waiting_count == 0)
         return self._assign(ready)
+
+    # incremental ingestion (persistent Cluster/Client path) -----------
+    def add_tasks(self, lo: int, hi: int, retain: bool = False
+                  ) -> list[tuple[int, int]]:
+        """Ingest the graph epoch ``[lo, hi)`` just appended to
+        ``self.graph``: grow the state arrays, wire up cross-epoch
+        refcounts, and assign the immediately-ready tasks.  With
+        ``retain=True`` each new task carries one client-hold waiter
+        (released via :meth:`release_keys`)."""
+        self.scheduler.on_graph_extended()
+        g = self.graph
+        n_new = hi - lo
+        self.state = np.concatenate(
+            [self.state, np.full(n_new, WAITING, dtype=np.int8)])
+        self.waiting_count = np.concatenate(
+            [self.waiting_count, np.zeros(n_new, dtype=np.int32)])
+        self.waiter_count = np.concatenate(
+            [self.waiter_count, np.zeros(n_new, dtype=np.int32)])
+        self.primary = np.concatenate(
+            [self.primary, np.full(n_new, -1, dtype=np.int32)])
+        self.assigned = np.concatenate(
+            [self.assigned, np.full(n_new, -1, dtype=np.int32)])
+        ready = []
+        for tid in range(lo, hi):
+            missing = 0
+            for d in g.inputs_of(tid):
+                d = int(d)
+                if self.state[d] == RELEASED:
+                    raise ValueError(
+                        f"task {tid} depends on released key {d}")
+                self.waiter_count[d] += 1
+                if self.state[d] != MEMORY:
+                    missing += 1
+            self.waiting_count[tid] = missing
+            if retain:
+                self.waiter_count[tid] += 1
+            if missing == 0:
+                ready.append(tid)
+        return self._assign(np.asarray(ready, dtype=np.int64))
+
+    def add_poisoned(self, lo: int, hi: int) -> None:
+        """Register an inert, already-RELEASED tid range: placeholders
+        for a failed epoch, keeping reactor and graph tid spaces
+        aligned so later epochs stay submittable."""
+        self.scheduler.on_graph_extended()
+        n_new = hi - lo
+        self.state = np.concatenate(
+            [self.state, np.full(n_new, RELEASED, dtype=np.int8)])
+        self.waiting_count = np.concatenate(
+            [self.waiting_count, np.zeros(n_new, dtype=np.int32)])
+        self.waiter_count = np.concatenate(
+            [self.waiter_count, np.zeros(n_new, dtype=np.int32)])
+        self.primary = np.concatenate(
+            [self.primary, np.full(n_new, -1, dtype=np.int32)])
+        self.assigned = np.concatenate(
+            [self.assigned, np.full(n_new, -1, dtype=np.int32)])
+        self.n_done += n_new   # they never run; keep done() consistent
+
+    def release_keys(self, tids) -> list[int]:
+        """Drop the client hold on ``tids``; returns the tids whose data
+        transitioned to RELEASED (safe to purge from runtime results).
+        A released key that is still WAITING/RUNNING, or still has
+        consumer waiters, is reclaimed later — when it completes or its
+        last consumer finishes — and then surfaces via ``drain_purged``."""
+        released = []
+        for tid in tids:
+            tid = int(tid)
+            self._dropped.add(tid)
+            self.waiter_count[tid] -= 1
+            if self.waiter_count[tid] <= 0 and self.state[tid] == MEMORY:
+                self.state[tid] = RELEASED
+                self.stats.releases += 1
+                released.append(tid)
+        return released
+
+    def drain_purged(self) -> list[int]:
+        """Tids of client-dropped keys reclaimed since the last drain
+        (the runtime purges their values)."""
+        out, self.purged = self.purged, []
+        return out
+
+    def all_done_in(self, lo: int, hi: int) -> bool:
+        return bool(np.all(self.state[lo:hi] >= MEMORY))
+
+    def is_released(self, tid: int) -> bool:
+        return self.state[int(tid)] == RELEASED
+
+    def holders_of(self, tid: int) -> list[int]:
+        w = int(self.primary[int(tid)])
+        return [w] if w >= 0 else []
 
     def handle_finished(self, events: Iterable[tuple[int, int]]
                         ) -> list[tuple[int, int]]:
@@ -94,6 +188,7 @@ class ArrayReactor:
         self.n_done += len(ev)
         for tid, wid in zip(tids, wids):
             self.scheduler.on_finished(int(tid), int(wid))
+        self._reclaim_dropped(tids)
 
         g = self.graph
         # consumers of all finished tasks (CSR gather, vectorized)
@@ -114,7 +209,23 @@ class ArrayReactor:
                         & (self.state[dead] == MEMORY)]
             self.state[dead] = RELEASED
             self.stats.releases += len(dead)
+            if self._dropped:
+                self.purged.extend(int(d) for d in dead
+                                   if int(d) in self._dropped)
         return self._assign(ready)
+
+    def _reclaim_dropped(self, tids) -> None:
+        """Keys released by the client before they finished: reclaim as
+        they reach MEMORY (no consumer waits on them any more)."""
+        if not self._dropped:
+            return
+        for tid in tids:
+            tid = int(tid)
+            if tid in self._dropped and self.waiter_count[tid] <= 0 \
+                    and self.state[tid] == MEMORY:
+                self.state[tid] = RELEASED
+                self.stats.releases += 1
+                self.purged.append(tid)
 
     def _handle_finished_scalar(self, ev) -> list[tuple[int, int]]:
         """Small-batch fast path: plain int/array indexing without the
@@ -131,6 +242,7 @@ class ArrayReactor:
             self.primary[tid] = wid
             self.n_done += 1
             self.scheduler.on_finished(tid, int(wid))
+            self._reclaim_dropped((tid,))
             for c in g.consumers_of(tid):
                 c = int(c)
                 self.waiting_count[c] -= 1
@@ -142,6 +254,8 @@ class ArrayReactor:
                 if self.waiter_count[d] == 0 and self.state[d] == MEMORY:
                     self.state[d] = RELEASED
                     self.stats.releases += 1
+                    if d in self._dropped:
+                        self.purged.append(d)
         return self._assign(np.asarray(ready_ids, dtype=np.int64))
 
     def handle_placed(self, tid: int, wid: int) -> None:
@@ -153,6 +267,10 @@ class ArrayReactor:
             self.assigned[tid] = wid
         self.stats.msgs_out += 2 * len(moves)
         return moves
+
+    def steal_failed(self, tid: int) -> None:
+        """Runtime feedback: the steal of ``tid`` could not be applied."""
+        self.scheduler.on_steal_failed(int(tid))
 
     def handle_worker_lost(self, wid: int, lost_tasks: Iterable[int]
                            ) -> list[tuple[int, int]]:

@@ -6,9 +6,18 @@ modelling), and optionally a real Python callable (for the wall-clock
 runtime).  Both reactor implementations consume the same graph; the
 RSDS-style :class:`repro.core.array_reactor.ArrayReactor` uses the CSR
 arrays built here.
+
+Graphs are no longer construct-once: :meth:`TaskGraph.extend` appends a
+new dense tid range (an *epoch* of tasks), which is how the persistent
+:class:`repro.core.client.Cluster` ingests work incrementally.  User-facing
+code never has to produce dense topologically-ordered tids by hand —
+:class:`GraphBuilder` accepts tasks under arbitrary hashable keys, in any
+order (forward references buffer until their dependencies arrive), and
+assigns dense tids at flush time.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, Sequence
 
@@ -30,47 +39,99 @@ class TaskGraph:
     def __init__(self, tasks: Sequence[Task], name: str = "graph"):
         self.name = name
         self.tasks = list(tasks)
-        n = len(self.tasks)
-        for i, t in enumerate(self.tasks):
+        self._validate(self.tasks, 0)
+        self._build_arrays()
+
+    @staticmethod
+    def _validate(tasks: Sequence[Task], base: int) -> None:
+        for i, t in enumerate(tasks, start=base):
             if t.tid != i:
                 raise ValueError(f"task ids must be dense, got {t.tid}!={i}")
             for d in t.inputs:
-                if not (0 <= d < n):
-                    raise ValueError(f"bad dep {d} for task {i}")
-                if d >= i:
+                if not (0 <= d < i):
                     raise ValueError(
-                        f"graph must be topologically ordered ({d}>={i})")
-        self._build_arrays()
+                        f"bad dep {d} for task {i} (must be an earlier tid)")
+
+    def extend(self, tasks: Sequence[Task]) -> tuple[int, int]:
+        """Append a new epoch of tasks (dense tids continuing from
+        ``n_tasks``; inputs may reference any earlier tid, including prior
+        epochs).  Returns the appended ``(lo, hi)`` tid range.
+
+        Incremental: Python-level work is O(new tasks); array growth is
+        vectorized appends, and the consumers CSR is merged in place (a
+        memcpy-bound ``np.insert`` when new edges land in old rows, a pure
+        append when they do not), so a long-lived Cluster ingesting many
+        epochs never pays a per-task Python rebuild of the whole graph."""
+        tasks = list(tasks)
+        lo = len(self.tasks)
+        self._validate(tasks, lo)
+        self.tasks.extend(tasks)
+        self._append_arrays(tasks)
+        return lo, len(self.tasks)
 
     def _build_arrays(self) -> None:
-        n = len(self.tasks)
-        self.n_tasks = n
-        self.durations = np.array([t.duration for t in self.tasks],
-                                  dtype=np.float64)
-        self.sizes = np.array([t.output_size for t in self.tasks],
-                              dtype=np.float64)
-        self.in_degree = np.array([len(t.inputs) for t in self.tasks],
-                                  dtype=np.int32)
-        self.n_deps = int(self.in_degree.sum())
-        # consumers CSR: task -> tasks depending on it
-        counts = np.zeros(n, dtype=np.int32)
-        for t in self.tasks:
-            for d in t.inputs:
-                counts[d] += 1
-        self.consumers_indptr = np.zeros(n + 1, dtype=np.int64)
-        np.cumsum(counts, out=self.consumers_indptr[1:])
-        self.consumers = np.zeros(self.n_deps, dtype=np.int32)
-        fill = self.consumers_indptr[:-1].copy()
-        for t in self.tasks:
-            for d in t.inputs:
-                self.consumers[fill[d]] = t.tid
-                fill[d] += 1
-        # inputs CSR
-        self.inputs_indptr = np.zeros(n + 1, dtype=np.int64)
-        np.cumsum(self.in_degree, out=self.inputs_indptr[1:])
-        self.inputs_flat = np.concatenate(
-            [np.asarray(t.inputs, dtype=np.int32) for t in self.tasks]
-        ) if self.n_deps else np.zeros(0, dtype=np.int32)
+        self.n_tasks = 0
+        self.durations = np.zeros(0, dtype=np.float64)
+        self.sizes = np.zeros(0, dtype=np.float64)
+        self.in_degree = np.zeros(0, dtype=np.int32)
+        self.n_deps = 0
+        self.inputs_indptr = np.zeros(1, dtype=np.int64)
+        self.inputs_flat = np.zeros(0, dtype=np.int32)
+        self.consumers_indptr = np.zeros(1, dtype=np.int64)
+        self.consumers = np.zeros(0, dtype=np.int32)
+        if self.tasks:
+            self._append_arrays(self.tasks)
+
+    def _append_arrays(self, new: Sequence[Task]) -> None:
+        self.n_tasks = len(self.tasks)
+        n = self.n_tasks
+        self.durations = np.concatenate(
+            [self.durations,
+             np.array([t.duration for t in new], dtype=np.float64)])
+        self.sizes = np.concatenate(
+            [self.sizes,
+             np.array([t.output_size for t in new], dtype=np.float64)])
+        new_deg = np.array([len(t.inputs) for t in new], dtype=np.int32)
+        self.in_degree = np.concatenate([self.in_degree, new_deg])
+        self.n_deps = int(self.n_deps + new_deg.sum())
+        # inputs CSR: rows are appended in tid order, so flat inputs and
+        # the indptr just grow
+        new_flat = (np.concatenate(
+            [np.asarray(t.inputs, dtype=np.int32) for t in new])
+            if new_deg.sum() else np.zeros(0, dtype=np.int32))
+        self.inputs_flat = np.concatenate([self.inputs_flat, new_flat])
+        self.inputs_indptr = np.concatenate(
+            [self.inputs_indptr,
+             self.inputs_indptr[-1] + np.cumsum(new_deg, dtype=np.int64)])
+        # consumers CSR: merge the epoch's edges in place.  Edge k is
+        # (src=new_flat[k], dst=owning task); each edge lands at the END
+        # of its src row (new dsts are larger than every existing one),
+        # so a stable src-sort of the NEW edges + one np.insert keeps
+        # rows in ascending-consumer order without re-sorting old edges.
+        old_indptr = self.consumers_indptr
+        old_n = n - len(new)
+        if len(new_flat):
+            new_dst = np.repeat(np.arange(old_n, n, dtype=np.int32),
+                                new_deg)
+            order = np.argsort(new_flat, kind="stable")
+            src_sorted = new_flat[order]
+            pos = np.where(
+                src_sorted < old_n,
+                old_indptr[np.minimum(src_sorted + 1, old_n)],
+                len(self.consumers))
+            self.consumers = np.insert(self.consumers, pos,
+                                       new_dst[order])
+            counts = np.concatenate(
+                [np.diff(old_indptr),
+                 np.zeros(len(new), dtype=np.int64)])
+            counts += np.bincount(new_flat, minlength=n)
+            self.consumers_indptr = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(counts, out=self.consumers_indptr[1:])
+        else:
+            # no new edges: old rows untouched, new rows are empty
+            self.consumers_indptr = np.concatenate(
+                [old_indptr,
+                 np.full(len(new), old_indptr[-1], dtype=np.int64)])
 
     # ------------------------------------------------------------------
     # Properties matching the paper's Table I columns
@@ -117,3 +178,109 @@ class TaskGraph:
                 "avg_duration_ms": round(self.avg_duration_ms, 4),
                 "avg_output_kib": round(self.avg_output_kib, 3),
                 "longest_path": self.longest_path()}
+
+
+# ---------------------------------------------------------------------------
+# Incremental construction under user keys
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _TaskDef:
+    key: Any
+    inputs: tuple
+    duration: float
+    output_size: float
+    fn: Callable | None
+    args: tuple
+    name: str
+
+
+class GraphBuilder:
+    """Incremental graph construction under arbitrary hashable keys.
+
+    Drops the dense-tid/topological-order-at-construction restriction of
+    :class:`TaskGraph.__init__` behind an API: tasks may be added in any
+    order and may reference keys that have not been added yet (a forward
+    reference buffers the task until every dependency is known).
+    :meth:`flush` drains every task whose dependency closure is resolved,
+    assigns dense tids starting at ``base`` (topologically ordered within
+    the flushed batch), and returns ``(tasks, key_to_tid)`` ready for
+    :meth:`TaskGraph.extend` or an incremental Client submission.
+    """
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.key_to_tid: dict[Any, int] = {}
+        self._pending: dict[Any, _TaskDef] = {}
+        self._order: list[Any] = []     # insertion order of pending keys
+
+    def add(self, key: Any, inputs: Sequence[Any] = (), *,
+            duration: float = 0.0, output_size: float = 1024.0,
+            fn: Callable | None = None, args: tuple = (),
+            name: str = "") -> Any:
+        """Declare task ``key`` depending on the tasks at ``inputs`` keys
+        (which may be added before or after this call)."""
+        if key in self.key_to_tid or key in self._pending:
+            raise ValueError(f"duplicate task key {key!r}")
+        self._pending[key] = _TaskDef(key, tuple(inputs), float(duration),
+                                      float(output_size), fn, tuple(args),
+                                      name or str(key))
+        self._order.append(key)
+        return key
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self, base: int = 0) -> tuple[list[Task], dict[Any, int]]:
+        """Drain every pending task whose dependencies are all resolvable,
+        assigning dense tids ``base, base+1, ...``.  Tasks with unmet
+        forward references stay buffered for a later flush.
+
+        Ready-queue topological drain: O(pending + edges) per flush, so
+        anti-topological insertion order (sink first) costs the same as
+        sorted order."""
+        unmet: dict[Any, int] = {}
+        dependents: dict[Any, list[Any]] = {}
+        ready: collections.deque = collections.deque()
+        for key in self._order:
+            d = self._pending[key]
+            n_unmet = 0
+            for k in d.inputs:
+                if k not in self.key_to_tid:
+                    n_unmet += 1
+                    dependents.setdefault(k, []).append(key)
+            unmet[key] = n_unmet
+            if n_unmet == 0:
+                ready.append(key)
+        out: list[Task] = []
+        flushed: dict[Any, int] = {}
+        while ready:
+            key = ready.popleft()
+            d = self._pending.pop(key)
+            tid = base + len(out)
+            self.key_to_tid[key] = tid
+            flushed[key] = tid
+            out.append(Task(tid,
+                            tuple(self.key_to_tid[k] for k in d.inputs),
+                            d.duration, d.output_size, d.fn, d.args,
+                            d.name))
+            for waiter in dependents.get(key, ()):
+                unmet[waiter] -= 1
+                if unmet[waiter] == 0:
+                    ready.append(waiter)
+        self._order = [k for k in self._order if k in self._pending]
+        return out, flushed
+
+    def build(self, name: str | None = None) -> TaskGraph:
+        """Build a complete :class:`TaskGraph` from everything added so
+        far; raises if any dependency is still unresolved (dangling
+        forward reference or dependency cycle)."""
+        tasks, _ = self.flush(base=0)
+        if self._pending:
+            missing = {k: [i for i in d.inputs if i not in self.key_to_tid]
+                       for k, d in self._pending.items()}
+            raise ValueError(
+                f"unresolved dependencies (cycle or missing keys): "
+                f"{missing}")
+        return TaskGraph(tasks, name=name or self.name)

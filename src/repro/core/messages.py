@@ -17,6 +17,14 @@ asymmetry:
   plus fixed-size records, encoded once per *batch* with ``struct``; the
   only dynamic part is an optional pickled payload section for tasks that
   carry real data (which the paper's hot path does not).
+
+The persistent Cluster/Client path extends both codecs to the *submission*
+side of the protocol: ``update-graph`` frames ship new task epochs to
+running workers (per-key messages on the Dask wire, one static frame per
+epoch on the RSDS wire), ``release`` frames drop worker-cached results
+when a client releases a key, and ``gather`` frames ask a worker to
+re-send retained results — so the codec asymmetry is measured on graph
+submission and key lifetime, not only on compute/finished traffic.
 """
 from __future__ import annotations
 
@@ -67,6 +75,9 @@ OP_COMPUTE = 1       # server -> worker: run these tasks
 OP_FINISHED = 2      # worker -> server: these tasks completed
 OP_RETRACT = 3       # server -> worker: drop these if not yet started
 OP_SHUTDOWN = 4      # server -> worker: drain and exit
+OP_UPDATE_GRAPH = 5  # server -> worker: new task definitions (epoch)
+OP_RELEASE = 6       # server -> worker: drop cached results for these keys
+OP_GATHER = 7        # server -> worker: re-send cached results for keys
 
 _NO_RESULT = object()   # worker-side marker: task produced no value
 
@@ -111,6 +122,28 @@ class DaskWire:
     def encode_shutdown(self) -> bytes:
         return pack({"op": OP_SHUTDOWN})
 
+    def encode_update_graph(self, defs: Sequence[tuple[int, float]],
+                            fns: dict[int, Any] | None = None
+                            ) -> list[bytes]:
+        """Incremental graph submission: one msgpack dict per new task
+        (Dask's update-graph cost is per key), pickled ``(fn, args)``
+        riding along for tasks that carry a real callable."""
+        frames = []
+        for tid, dur in defs:
+            m = {"op": OP_UPDATE_GRAPH, "key": int(tid),
+                 "duration": float(dur)}
+            if fns is not None and tid in fns:
+                m["fn"] = pickle.dumps(fns[tid], protocol=4)
+            frames.append(pack(m))
+        return frames
+
+    def encode_release(self, tids: Iterable[int]) -> list[bytes]:
+        """Per-key release messages (Dask frees keys one message each)."""
+        return [pack({"op": OP_RELEASE, "key": int(t)}) for t in tids]
+
+    def encode_gather(self, tids: Iterable[int]) -> list[bytes]:
+        return [pack({"op": OP_GATHER, "keys": [int(t) for t in tids]})]
+
     def decode(self, raw: bytes):
         """-> (op, records, payloads) with one record per frame."""
         m = unpack(raw)
@@ -127,6 +160,15 @@ class DaskWire:
             return op, [(m["key"], m["worker"], m.get("nbytes", 0.0))], \
                 payloads
         if op == OP_RETRACT:
+            return op, list(m["keys"]), None
+        if op == OP_UPDATE_GRAPH:
+            payloads = None
+            if "fn" in m:
+                payloads = {m["key"]: pickle.loads(m["fn"])}
+            return op, [(m["key"], m["duration"])], payloads
+        if op == OP_RELEASE:
+            return op, [m["key"]], None
+        if op == OP_GATHER:
             return op, list(m["keys"]), None
         return op, [], None
 
@@ -178,10 +220,32 @@ class StaticWire:
     def encode_shutdown(self) -> bytes:
         return self._HDR.pack(OP_SHUTDOWN, 0, 0)
 
+    def encode_update_graph(self, defs: Sequence[tuple[int, float]],
+                            fns: dict[int, Any] | None = None
+                            ) -> list[bytes]:
+        """Incremental graph submission, RSDS-style: the whole epoch is
+        one static frame (same record layout as compute), with a pickled
+        ``{tid: (fn, args)}`` blob only for callable-carrying tasks."""
+        body = b"".join(self._COMPUTE.pack(int(t), float(d))
+                        for t, d in defs)
+        blob = pickle.dumps(fns, protocol=4) if fns else b""
+        return [self._HDR.pack(OP_UPDATE_GRAPH, 1 if blob else 0,
+                               len(defs)) + body + blob]
+
+    def encode_release(self, tids: Iterable[int]) -> list[bytes]:
+        tids = list(tids)
+        body = b"".join(self._RETRACT.pack(int(t)) for t in tids)
+        return [self._HDR.pack(OP_RELEASE, 0, len(tids)) + body]
+
+    def encode_gather(self, tids: Iterable[int]) -> list[bytes]:
+        tids = list(tids)
+        body = b"".join(self._RETRACT.pack(int(t)) for t in tids)
+        return [self._HDR.pack(OP_GATHER, 0, len(tids)) + body]
+
     def decode(self, raw: bytes):
         op, has_blob, count = self._HDR.unpack_from(raw)
         off = self._HDR.size
-        if op == OP_COMPUTE:
+        if op in (OP_COMPUTE, OP_UPDATE_GRAPH):
             rec, recs = self._COMPUTE, []
             for i in range(count):
                 recs.append(rec.unpack_from(raw, off + i * rec.size))
@@ -191,7 +255,7 @@ class StaticWire:
             for i in range(count):
                 recs.append(rec.unpack_from(raw, off + i * rec.size))
             off += count * rec.size
-        elif op == OP_RETRACT:
+        elif op in (OP_RETRACT, OP_RELEASE, OP_GATHER):
             rec = self._RETRACT
             recs = [rec.unpack_from(raw, off + i * rec.size)[0]
                     for i in range(count)]

@@ -26,6 +26,11 @@ from repro.core.schedulers import SchedulerBase
 # task states
 WAITING, READY, RUNNING, MEMORY, RELEASED = range(5)
 
+# Synthetic waiter marking a client-held key (a live Future): while present
+# in a task's refcount, its result is retained even after every consumer
+# task has finished — explicit key lifetime, released by Client.release().
+CLIENT_HOLD = "<client-hold>"
+
 
 class ReactorStats:
     def __init__(self):
@@ -60,6 +65,11 @@ class ObjectReactor:
         # hashing/allocation cost of that choice is part of what RSDS's
         # integer ids eliminate (paper §IV).
         self.key = [f"{graph.name}-task-{i}" for i in range(graph.n_tasks)]
+        # keys whose client hold was explicitly dropped (Client.release);
+        # when such a task's data is reclaimed the runtime must purge its
+        # value too, so the tids are logged in ``purged``
+        self._dropped: set[int] = set()
+        self.purged: list[int] = []
         self.tasks = {}
         for t in graph.tasks:
             self.tasks[self.key[t.tid]] = {
@@ -100,6 +110,92 @@ class ObjectReactor:
         ready = [t.tid for t in self.graph.tasks if not t.inputs]
         return self._assign(ready)
 
+    # incremental ingestion (persistent Cluster/Client path) -----------
+    def add_tasks(self, lo: int, hi: int, retain: bool = False
+                  ) -> list[tuple[int, int]]:
+        """Ingest the graph epoch ``[lo, hi)`` that was just appended to
+        ``self.graph`` and assign its immediately-ready tasks.  With
+        ``retain=True`` every new task gets a client-hold waiter so its
+        result survives refcount GC until :meth:`release_keys`."""
+        self.scheduler.on_graph_extended()
+        g = self.graph
+        self.key.extend(f"{g.name}-task-{i}" for i in range(lo, hi))
+        for tid in range(lo, hi):
+            t = g.tasks[tid]
+            self.tasks[self.key[tid]] = {
+                "state": WAITING,
+                "tid": tid,
+                "waiting_on": set(),
+                "waiters": {CLIENT_HOLD} if retain else set(),
+                "who_has": set(),
+                "nbytes": float(t.output_size),
+                "worker": -1,
+            }
+        ready = []
+        for tid in range(lo, hi):
+            ts = self.tasks[self.key[tid]]
+            for d in g.inputs_of(tid):
+                d = int(d)
+                dts = self.tasks[self.key[d]]
+                if dts["state"] == RELEASED:
+                    raise ValueError(
+                        f"task {tid} depends on released key {d}")
+                dts["waiters"].add(self.key[tid])
+                if dts["state"] != MEMORY:
+                    ts["waiting_on"].add(self.key[d])
+            if not ts["waiting_on"]:
+                ready.append(tid)
+        return self._assign(ready)
+
+    def add_poisoned(self, lo: int, hi: int) -> None:
+        """Register an inert, already-RELEASED tid range: placeholders
+        for a failed epoch, keeping reactor and graph tid spaces
+        aligned so later epochs stay submittable."""
+        self.scheduler.on_graph_extended()
+        g = self.graph
+        self.key.extend(f"{g.name}-task-{i}" for i in range(lo, hi))
+        for tid in range(lo, hi):
+            self.tasks[self.key[tid]] = {
+                "state": RELEASED, "tid": tid, "waiting_on": set(),
+                "waiters": set(), "who_has": set(), "nbytes": 0.0,
+                "worker": -1}
+        self.n_done += hi - lo   # they never run; keep done() consistent
+
+    def release_keys(self, tids: Iterable[int]) -> list[int]:
+        """Drop the client hold on ``tids``; returns the tids whose data
+        transitioned to RELEASED (safe to purge from runtime results).
+        A released key that is still WAITING/RUNNING, or still has
+        consumer waiters, is reclaimed later — when it completes or its
+        last consumer finishes — and then surfaces via ``drain_purged``."""
+        released = []
+        for tid in tids:
+            tid = int(tid)
+            self._dropped.add(tid)
+            ts = self.tasks[self.key[tid]]
+            ts["waiters"].discard(CLIENT_HOLD)
+            if not ts["waiters"] and ts["state"] == MEMORY:
+                ts["state"] = RELEASED
+                self.stats.releases += 1
+                self.stats.msgs_out += len(ts["who_has"])
+                released.append(tid)
+        return released
+
+    def drain_purged(self) -> list[int]:
+        """Tids of client-dropped keys reclaimed since the last drain
+        (the runtime purges their values)."""
+        out, self.purged = self.purged, []
+        return out
+
+    def all_done_in(self, lo: int, hi: int) -> bool:
+        return all(self.tasks[self.key[t]]["state"] >= MEMORY
+                   for t in range(lo, hi))
+
+    def is_released(self, tid: int) -> bool:
+        return self.tasks[self.key[int(tid)]]["state"] == RELEASED
+
+    def holders_of(self, tid: int) -> list[int]:
+        return sorted(self.tasks[self.key[int(tid)]]["who_has"])
+
     def handle_finished(self, events: Iterable[tuple[int, int]]
                         ) -> list[tuple[int, int]]:
         """events: (tid, wid) completions.  Dask-style: process one message
@@ -124,20 +220,37 @@ class ObjectReactor:
             ts["who_has"].add(wid)
             self.n_done += 1
             self.scheduler.on_finished(tid, wid)
+            # a key released by the client before it finished: reclaim
+            # now that it reached MEMORY (no consumer waits on it)
+            if tid in self._dropped and not ts["waiters"]:
+                ts["state"] = RELEASED
+                self.stats.releases += 1
+                self.purged.append(tid)
             # refcount GC: inputs of tid lose a waiter
             ready = []
             for d in self.graph.inputs_of(tid):
-                dts = self.tasks[self.key[int(d)]]
+                d = int(d)
+                dts = self.tasks[self.key[d]]
                 dts["waiters"].discard(key)
                 if not dts["waiters"] and dts["state"] == MEMORY:
                     dts["state"] = RELEASED
                     self.stats.releases += 1
                     self.stats.msgs_out += len(dts["who_has"])
+                    if d in self._dropped:
+                        self.purged.append(d)
+            woken: set[int] = set()
             for c in self.graph.consumers_of(tid):
-                cts = self.tasks[self.key[int(c)]]
+                c = int(c)
+                cts = self.tasks[self.key[c]]
                 cts["waiting_on"].discard(key)
-                if not cts["waiting_on"] and cts["state"] == WAITING:
-                    ready.append(int(c))
+                # duplicate inputs (e.g. submit(fn, f, f)) produce the
+                # same consumer edge twice; waiting_on is a set, so the
+                # second edge sees it already empty — dedupe or the task
+                # is assigned and executed twice
+                if not cts["waiting_on"] and cts["state"] == WAITING \
+                        and c not in woken:
+                    woken.add(c)
+                    ready.append(c)
             assignments.extend(self._assign(ready))
         return assignments
 
@@ -151,6 +264,10 @@ class ObjectReactor:
             self.tasks[self.key[tid]]["worker"] = wid
             self.stats.msgs_out += 2  # steal request + new compute-task
         return moves
+
+    def steal_failed(self, tid: int) -> None:
+        """Runtime feedback: the steal of ``tid`` could not be applied."""
+        self.scheduler.on_steal_failed(int(tid))
 
     # failure handling -------------------------------------------------
     def handle_worker_lost(self, wid: int, running: Iterable[int]

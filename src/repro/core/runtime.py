@@ -18,9 +18,20 @@ server packs a static frame layout *once per batch*
 asymmetry is measured instead of simulated.  Worker-process kill is a
 first-class failure injection (``fail_worker`` sends SIGKILL; the server
 detects the death and resubmits through the reactor's lineage machinery).
+
+Both engines are *persistent servers*: ``start()`` brings up the worker
+pool and server loop, ``submit_tasks()`` ingests a new graph **epoch**
+(an appended dense tid range) without restarting anything,
+``wait_epoch()`` blocks on one epoch's completion, ``release_tasks()``
+drops client-held results, and ``shutdown()`` tears the pool down.  The
+one-shot ``run()`` is a thin wrapper over that lifecycle (start → one
+epoch → wait → shutdown) preserving the original semantics, and the
+user-facing surface lives in :mod:`repro.core.client`
+(``Cluster``/``Client``/``Future``).
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import multiprocessing as mp
@@ -29,11 +40,45 @@ import queue
 import sys
 import threading
 import time
-from typing import Any, Callable
+from typing import Any
 
 from repro.core import messages as msg
 from repro.core import transport as tp
-from repro.core.graph import TaskGraph
+from repro.core.graph import Task, TaskGraph
+
+
+@dataclasses.dataclass
+class EpochStats:
+    """Per-epoch accounting: one record per ``submit_tasks`` call (the
+    one-shot ``run()`` registers a single epoch spanning its graph)."""
+    eid: int
+    n_tasks: int
+    t_submit: float = 0.0          # client-side submission timestamp
+    t_ingest: float = 0.0          # server-side ingestion timestamp
+    t_done: float = 0.0            # all tasks completed at least once
+    lo: int = -1                   # global tid range [lo, hi)
+    hi: int = -1
+    remaining: int = -1
+    server_busy0: float = 0.0      # server_busy snapshot at ingest
+    server_busy1: float = 0.0      # server_busy snapshot at completion
+    error: BaseException | None = None
+    done_evt: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    @property
+    def makespan(self) -> float:
+        """Client-visible per-epoch makespan (submission to completion)."""
+        return max(self.t_done - (self.t_submit or self.t_ingest), 0.0)
+
+    @property
+    def server_busy(self) -> float:
+        return max(self.server_busy1 - self.server_busy0, 0.0)
+
+    def as_dict(self) -> dict:
+        return {"eid": self.eid, "n_tasks": self.n_tasks,
+                "makespan": self.makespan,
+                "server_busy": self.server_busy,
+                "error": repr(self.error) if self.error else None}
 
 
 @dataclasses.dataclass
@@ -44,13 +89,117 @@ class RunResult:
     stats: dict
     results: dict
     timed_out: bool = False
+    epochs: tuple = ()
 
     @property
     def aot(self) -> float:
         return self.makespan / max(self.n_tasks, 1)
 
 
-class ThreadRuntime:
+def _check_epoch_deps(graph: TaskGraph, reactor, tasks) -> None:
+    """Reject an epoch referencing released keys BEFORE any state is
+    mutated: raising from inside ``graph.extend``/``reactor.add_tasks``
+    would leave the persistent graph and reactor half-wired (tasks
+    registered but never runnable, waiter refcounts pinned forever)."""
+    n_known = graph.n_tasks
+    for t in tasks:
+        for d in t.inputs:
+            d = int(d)
+            if d < n_known and reactor.is_released(d):
+                raise ValueError(
+                    f"task {t.tid} depends on released key {d}")
+
+
+class _EpochLedger:
+    """Mixin: per-epoch completion tracking shared by both engines.
+
+    Epochs are contiguous global tid ranges appended in submission order;
+    a task counts as complete on its *first* finished event, so lineage
+    re-execution after a worker loss never un-completes an epoch."""
+
+    def _init_epochs(self) -> None:
+        self._epochs: list[EpochStats] = []
+        self._epoch_lock = threading.Lock()
+        self._completed: set[int] = set()
+        self._range_los: list[int] = []      # parallel to _range_epochs
+        self._range_epochs: list[EpochStats] = []
+
+    def _register_epoch(self, n_tasks: int) -> EpochStats:
+        with self._epoch_lock:
+            e = EpochStats(eid=len(self._epochs), n_tasks=n_tasks,
+                           t_submit=time.perf_counter())
+            self._epochs.append(e)
+        return e
+
+    def _bind_epoch(self, e: EpochStats, lo: int, hi: int) -> None:
+        e.lo, e.hi, e.remaining = lo, hi, hi - lo
+        e.t_ingest = time.perf_counter()
+        e.server_busy0 = self.server_busy
+        self._range_los.append(lo)
+        self._range_epochs.append(e)
+        if e.remaining == 0:
+            self._finish_epoch(e)
+
+    def _finish_epoch(self, e: EpochStats,
+                      error: BaseException | None = None) -> None:
+        if e.done_evt.is_set():
+            return
+        e.error = e.error or error
+        e.t_done = time.perf_counter()
+        e.server_busy1 = self.server_busy
+        e.done_evt.set()
+
+    def _fail_epoch(self, e: EpochStats, error: BaseException) -> None:
+        self._finish_epoch(e, error=error)
+
+    def _quarantine_epoch(self, e: EpochStats, tasks,
+                          exc: BaseException) -> None:
+        """Epoch ingestion failed before (or during) wiring: tids were
+        already allocated client-side, so fill the range with inert
+        released placeholders to keep the dense tid space aligned — one
+        poisoned submission must not brick every later epoch."""
+        try:
+            lo = self.g.n_tasks
+            if tasks and tasks[0].tid == lo:
+                self.g.extend([Task(lo + i, ())
+                               for i in range(len(tasks))])
+                self.reactor.add_poisoned(lo, lo + len(tasks))
+        except BaseException:
+            pass
+        self._fail_epoch(e, exc)
+
+    def _fail_open_epochs(self, error: BaseException) -> None:
+        for e in self._epochs:
+            if not e.done_evt.is_set():
+                self._fail_epoch(e, error)
+
+    def _note_finished(self, tids) -> None:
+        for tid in tids:
+            tid = int(tid)
+            if tid in self._completed:
+                continue
+            self._completed.add(tid)
+            i = bisect.bisect_right(self._range_los, tid) - 1
+            if i < 0:
+                continue
+            e = self._range_epochs[i]
+            if tid < e.hi:
+                e.remaining -= 1
+                if e.remaining <= 0:
+                    self._finish_epoch(e)
+
+    # public epoch surface (used by the Cluster/Client layer) ----------
+    def wait_epoch(self, eid: int, timeout: float | None = None) -> bool:
+        return self._epochs[eid].done_evt.wait(timeout)
+
+    def epoch(self, eid: int) -> EpochStats:
+        return self._epochs[eid]
+
+    def epoch_dicts(self) -> tuple:
+        return tuple(e.as_dict() for e in self._epochs)
+
+
+class ThreadRuntime(_EpochLedger):
     def __init__(self, graph: TaskGraph, reactor, n_workers: int,
                  *, zero_worker: bool = False, simulate_durations=True,
                  balance_interval: float = 0.05, timeout: float = 300.0):
@@ -69,6 +218,13 @@ class ThreadRuntime:
         self.server_busy = 0.0
         self._lock = threading.Lock()
         self._done_evt = threading.Event()
+        self._init_epochs()
+        self._started = False
+        self._shut = False
+        self._run_to_done = False
+        self._stop_requested = False
+        self._timed_out = False
+        self._server: threading.Thread | None = None
 
     # back-compat views onto the transport (trainer / faults poke these)
     @property
@@ -89,9 +245,16 @@ class ThreadRuntime:
             if wid in self.dead:
                 continue
             with self._lock:
-                self.queued.setdefault(wid, [])
-                if tid in self.queued.get(wid, []):
-                    self.queued[wid].remove(tid)
+                q = self.queued.setdefault(wid, [])
+                if tid in q:
+                    q.remove(tid)
+                else:
+                    # retracted: the server stole this task after queuing
+                    # it here (it left queued[wid] under the lock), so
+                    # skip it instead of double-executing — on a warm
+                    # pool a straggler's stale backlog would otherwise
+                    # delay the next epoch
+                    continue
                 self.running[wid] = tid
             if not self.zero_worker:
                 t = self.g.tasks[tid]
@@ -120,57 +283,133 @@ class ThreadRuntime:
             else:
                 self.transport.inject(("lost-route", tid, wid))
 
+    # persistent submission path ---------------------------------------
+    def submit_tasks(self, tasks, retain: bool = True) -> int:
+        """Submit a new graph epoch to the running server loop.  Tasks
+        must carry dense global tids continuing from the current graph;
+        inputs may reference any earlier tid.  Returns the epoch id."""
+        if not self._started or self._shut:
+            raise RuntimeError("runtime is not running (start() first)")
+        e = self._register_epoch(len(tasks))
+        self.transport.inject(("epoch", e.eid, list(tasks), retain))
+        return e.eid
+
+    def release_tasks(self, tids) -> None:
+        """Drop the client hold on ``tids``; released values are purged
+        from ``self.results`` on the server thread."""
+        self.transport.inject(("release", [int(t) for t in tids]))
+
+    def fetch(self, tids, timeout: float | None = None) -> bool:
+        """Results live in-process for the thread engine — nothing to
+        fetch; present for signature parity with ProcessRuntime."""
+        return True
+
+    def _ingest_epoch(self, eid: int, tasks, retain: bool) -> None:
+        e = self._epochs[eid]
+        try:
+            _check_epoch_deps(self.g, self.reactor, tasks)
+            lo, hi = self.g.extend(tasks)
+            t0 = time.perf_counter()
+            out = self.reactor.add_tasks(lo, hi, retain=retain)
+            self.server_busy += time.perf_counter() - t0
+            self._bind_epoch(e, lo, hi)
+            self._send(out)
+        except BaseException as exc:   # surface to the waiting Future
+            self._quarantine_epoch(e, tasks, exc)
+
+    def _do_release(self, tids) -> None:
+        t0 = time.perf_counter()
+        released = self.reactor.release_keys(tids)
+        self.server_busy += time.perf_counter() - t0
+        for tid in released:
+            self.results.pop(tid, None)
+
+    def _apply_moves(self, moves) -> list[tuple[int, int]]:
+        """Apply steal reassignments: retract each task from its source
+        queue under the lock, report failed retractions (task already
+        running) back to the reactor so scheduler load bookkeeping stays
+        balanced, and dispatch the survivors."""
+        real_moves, failed = [], []
+        with self._lock:
+            for tid, nw in moves:
+                src = next((w for w, q in self.queued.items()
+                            if tid in q), None)
+                if src is None:
+                    failed.append(tid)  # already running
+                    continue
+                self.queued[src].remove(tid)
+                real_moves.append((tid, nw))
+        for tid in failed:
+            self.reactor.steal_failed(tid)
+        self._send(real_moves)
+        return real_moves
+
+    # ------------------------------------------------------------------
     def _server_loop(self) -> None:
         last_balance = time.perf_counter()
-        deadline = time.perf_counter() + self.timeout
-        while not self.reactor.done():
-            try:
-                first = self.transport.recv(timeout=0.01)
-            except queue.Empty:
-                if time.perf_counter() > deadline:
+        deadline = (time.perf_counter() + self.timeout
+                    if self._run_to_done else None)
+        try:
+            while not self._stop_requested:
+                if self._run_to_done and self.reactor.done():
+                    break
+                try:
+                    first = self.transport.recv(timeout=0.01)
+                except queue.Empty:
+                    if deadline is not None \
+                            and time.perf_counter() > deadline:
+                        self._timed_out = True
+                        break
+                    continue
+                # drain for batching (RSDS-style batch processing)
+                batch = [first] + self.transport.drain()
+                finished, lost, removed = [], [], []
+                for ev in batch:
+                    kind = ev[0]
+                    if kind == "finished":
+                        finished.append((ev[1], ev[2]))
+                    elif kind == "lost-route":
+                        lost.append((ev[1], ev[2]))
+                    elif kind == "worker-lost":
+                        removed.append((ev[1], ev[2]))
+                    elif kind == "epoch":
+                        self._ingest_epoch(ev[1], ev[2], ev[3])
+                    elif kind == "release":
+                        self._do_release(ev[1])
+                    elif kind == "stop":
+                        self._stop_requested = True
+                t0 = time.perf_counter()
+                out = self.reactor.handle_finished(finished)
+                for tid, wid in lost:
+                    out.extend(self.reactor.handle_worker_lost(wid, [tid]))
+                for wid, tids in removed:
+                    out.extend(self.reactor.handle_worker_lost(wid,
+                                                               list(tids)))
+                self.server_busy += time.perf_counter() - t0
+                self._send(out)
+                for tid in self.reactor.drain_purged():
+                    self.results.pop(tid, None)
+                if finished:
+                    self._note_finished(t for t, _ in finished)
+                nowt = time.perf_counter()
+                if nowt - last_balance > self.balance_interval:
+                    last_balance = nowt
+                    with self._lock:
+                        qbw = {w: list(q) for w, q in self.queued.items()
+                               if q}
+                    t0 = time.perf_counter()
+                    moves = self.reactor.rebalance(qbw)
+                    self.server_busy += time.perf_counter() - t0
+                    self._apply_moves(moves)
+                if deadline is not None and time.perf_counter() > deadline:
                     self._timed_out = True
                     break
-                continue
-            # drain for batching (RSDS-style batch processing)
-            batch = [first] + self.transport.drain()
-            finished, lost, removed = [], [], []
-            for ev in batch:
-                if ev[0] == "finished":
-                    finished.append((ev[1], ev[2]))
-                elif ev[0] == "lost-route":
-                    lost.append((ev[1], ev[2]))
-                elif ev[0] == "worker-lost":
-                    removed.append((ev[1], ev[2]))
-            t0 = time.perf_counter()
-            out = self.reactor.handle_finished(finished)
-            for tid, wid in lost:
-                out.extend(self.reactor.handle_worker_lost(wid, [tid]))
-            for wid, tids in removed:
-                out.extend(self.reactor.handle_worker_lost(wid, list(tids)))
-            self.server_busy += time.perf_counter() - t0
-            self._send(out)
-            nowt = time.perf_counter()
-            if nowt - last_balance > self.balance_interval:
-                last_balance = nowt
-                with self._lock:
-                    qbw = {w: list(q) for w, q in self.queued.items() if q}
-                t0 = time.perf_counter()
-                moves = self.reactor.rebalance(qbw)
-                self.server_busy += time.perf_counter() - t0
-                real_moves = []
-                with self._lock:
-                    for tid, nw in moves:
-                        src = next((w for w, q in self.queued.items()
-                                    if tid in q), None)
-                        if src is None:
-                            continue  # retraction failed (already running)
-                        self.queued[src].remove(tid)
-                        real_moves.append((tid, nw))
-                self._send(real_moves)
-            if time.perf_counter() > deadline:
-                self._timed_out = True
-                break
-        self._done_evt.set()
+        finally:
+            self._fail_open_epochs(
+                TimeoutError("server loop exited")
+                if self._timed_out else
+                RuntimeError("server loop exited"))
+            self._done_evt.set()
 
     # ------------------------------------------------------------------
     def fail_worker(self, wid: int) -> None:
@@ -188,18 +427,58 @@ class ThreadRuntime:
                 lost.append(r)
         self.transport.inject(("worker-lost", wid, tuple(lost)))
 
+    # lifecycle --------------------------------------------------------
+    def _spawn_workers(self) -> None:
+        self._threads = [threading.Thread(target=self._worker_loop,
+                                          args=(w,), daemon=True)
+                         for w in range(self.n_workers)]
+        for t in self._threads:
+            t.start()
+
+    def start(self) -> "ThreadRuntime":
+        """Bring up the persistent worker pool + server loop (no graph
+        required yet; epochs arrive via :meth:`submit_tasks`)."""
+        if self._started:
+            return self
+        self._started = True
+        self._spawn_workers()
+        self._server = threading.Thread(target=self._server_loop,
+                                        daemon=True)
+        t0 = time.perf_counter()
+        init = self.reactor.start()
+        self.server_busy += time.perf_counter() - t0
+        self._server.start()
+        self._send(init)
+        return self
+
+    def shutdown(self, force: bool = False, timeout: float = 10.0) -> None:
+        """Stop the server loop and retire the worker threads.  ``force``
+        is accepted for signature parity with ProcessRuntime (threads
+        cannot be killed; they are daemonic and park on their queues)."""
+        if not self._started or self._shut:
+            return
+        self._shut = True
+        self._stop_requested = True
+        self.transport.inject(("stop",))
+        self._done_evt.wait(timeout)
+        for wid in range(len(self.transport.worker_queues)):
+            self.transport.send(wid, None)
+        if self._server is not None:
+            self._server.join(timeout=timeout)
+
     def run(self) -> RunResult:
         self._timed_out = False
-        threads = [threading.Thread(target=self._worker_loop, args=(w,),
-                                    daemon=True)
-                   for w in range(self.n_workers)]
-        for t in threads:
-            t.start()
+        self._run_to_done = True
+        e = self._register_epoch(self.g.n_tasks)
+        self._started = True
+        self._spawn_workers()
         server = threading.Thread(target=self._server_loop, daemon=True)
+        self._server = server
         t_start = time.perf_counter()
         t0 = time.perf_counter()
         init = self.reactor.start()
         self.server_busy += time.perf_counter() - t0
+        self._bind_epoch(e, 0, self.g.n_tasks)
         server.start()
         self._send(init)
         self._done_evt.wait(timeout=self.timeout + 5)
@@ -209,7 +488,8 @@ class ThreadRuntime:
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
                          server_busy=self.server_busy,
                          stats=self.reactor.stats.as_dict(),
-                         results=self.results, timed_out=self._timed_out)
+                         results=self.results, timed_out=self._timed_out,
+                         epochs=self.epoch_dicts())
 
 
 # ---------------------------------------------------------------------------
@@ -228,10 +508,17 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                  zero_worker: bool, simulate_durations: bool,
                  tasks_table, cleanup_fds) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
-    finished frames.  Mirrors the paper's one-thread-per-worker setup."""
+    finished frames.  Mirrors the paper's one-thread-per-worker setup.
+
+    Persistent-server protocol: ``update-graph`` frames extend the local
+    task table mid-run (incremental epochs), ``release`` frames purge the
+    local result cache (explicit key lifetime), ``gather`` frames re-send
+    cached results."""
     _close_fds(cleanup_fds)
     ep = tp.make_worker_endpoint(endpoint_args)
     wire = msg.make_wire(wire_name)
+    table: dict[int, tuple] = dict(tasks_table or {})
+    cache: dict[int, Any] = {}
     pending: collections.deque = collections.deque()
     retracted: set[int] = set()
     out: list[tuple[int, Any]] = []
@@ -262,6 +549,15 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                     pending.append(
                         (tid, dur,
                          payloads.get(tid) if payloads else None))
+            elif op == msg.OP_UPDATE_GRAPH:
+                if payloads:
+                    table.update(payloads)
+            elif op == msg.OP_RELEASE:
+                for tid in recs:
+                    cache.pop(int(tid), None)
+            elif op == msg.OP_GATHER:
+                out.extend((int(t), cache[int(t)]) for t in recs
+                           if int(t) in cache)
             elif op == msg.OP_RETRACT:
                 retracted.update(int(t) for t in recs)
             elif op == msg.OP_SHUTDOWN:
@@ -277,11 +573,11 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
             continue
         result = msg._NO_RESULT
         if not zero_worker:
-            fn, fargs = (tasks_table[tid] if tasks_table is not None
-                         else (None, ()))
+            fn, fargs = table.get(tid, (None, ()))
             if fn is not None:
                 vals = payload if payload is not None else []
                 result = fn(*vals) if fargs == () else fn(*fargs)
+                cache[tid] = result
             elif simulate_durations and dur > 0:
                 time.sleep(dur)
         out.append((tid, result))
@@ -293,7 +589,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
     ep.close()
 
 
-class ProcessRuntime:
+class ProcessRuntime(_EpochLedger):
     """Drop-in sibling of :class:`ThreadRuntime` with OS-process workers
     behind a byte transport and a selector-based server event loop."""
 
@@ -326,8 +622,18 @@ class ProcessRuntime:
         self.wire_frames = 0
         self.procs: list = []
         self._kill_requests: queue.Queue = queue.Queue()
+        self._submit_q: queue.Queue = queue.Queue()
         self._tp = None
+        self._tasks_table: dict[int, tuple] = {}
         self._timed_out = False
+        self._init_epochs()
+        self._started = False
+        self._shut = False
+        self._run_to_done = False
+        self._stop_requested = False
+        self._t_deadline: float | None = None
+        self._server: threading.Thread | None = None
+        self._loop_exited = threading.Event()
 
     # ------------------------------------------------------------------
     def fail_worker(self, wid: int) -> None:
@@ -344,6 +650,14 @@ class ProcessRuntime:
         self.server_busy += time.perf_counter() - t0
         return out
 
+    def _charge_codec(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        dt = time.perf_counter() - t0
+        self.codec_s += dt
+        self.server_busy += dt
+        return out
+
     def _send_frames(self, wid: int, frames) -> None:
         for frame in frames:
             self.wire_bytes += len(frame)
@@ -353,10 +667,10 @@ class ProcessRuntime:
     def _dispatch(self, assignments) -> None:
         """Encode and send compute frames; reroutes assignments that hit a
         dead worker (may cascade through handle_worker_lost)."""
-        durations = self.g.durations
-        has_fns = self._tasks_table is not None
+        has_fns = bool(self._tasks_table)
         pending = list(assignments)
         while pending:
+            durations = self.g.durations
             by_wid: dict[int, list] = {}
             rerouted: list = []
             for tid, wid in pending:
@@ -373,17 +687,14 @@ class ProcessRuntime:
                 if has_fns:
                     payloads = {}
                     for tid, _ in items:
-                        if self._tasks_table[tid][0] is not None \
-                                and self.g.tasks[tid].args == ():
+                        entry = self._tasks_table.get(tid)
+                        if entry is not None and entry[1] == ():
                             payloads[tid] = [self.results.get(int(d))
                                              for d in self.g.inputs_of(tid)]
                     payloads = payloads or None
-                t0 = time.perf_counter()
-                frames = self.wire.encode_compute_batch(
-                    items, payloads, inputs_of=self.g.inputs_of)
-                dt = time.perf_counter() - t0
-                self.codec_s += dt
-                self.server_busy += dt
+                frames = self._charge_codec(
+                    self.wire.encode_compute_batch, items, payloads,
+                    self.g.inputs_of)
                 self._send_frames(wid, frames)
             pending = rerouted
 
@@ -419,8 +730,106 @@ class ProcessRuntime:
             if wid not in self.dead and not p.is_alive():
                 self._worker_lost(wid)
 
-    # ------------------------------------------------------------------
-    def run(self) -> RunResult:
+    # persistent submission path ---------------------------------------
+    def submit_tasks(self, tasks, retain: bool = True) -> int:
+        """Submit a new graph epoch to the running server loop.  Task
+        definitions (and pickled callables, when present) are shipped to
+        the live workers as ``update-graph`` wire frames — the submission
+        path pays the same codec asymmetry as compute/finished traffic."""
+        if not self._started or self._shut or self._loop_exited.is_set():
+            raise RuntimeError("runtime is not running (start() first)")
+        e = self._register_epoch(len(tasks))
+        self._submit_q.put(("epoch", e.eid, list(tasks), retain))
+        return e.eid
+
+    def release_tasks(self, tids) -> None:
+        self._submit_q.put(("release", [int(t) for t in tids]))
+
+    def fetch(self, tids, timeout: float = 10.0) -> bool:
+        """Ensure ``tids`` results are present server-side, re-fetching
+        worker-cached values over ``gather`` wire frames if needed."""
+        missing = [int(t) for t in tids if int(t) not in self.results]
+        if not missing:
+            return True
+        self._submit_q.put(("gather", missing))
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            if all(t in self.results for t in missing):
+                return True
+            if self._loop_exited.is_set():
+                break
+            time.sleep(0.002)
+        return all(t in self.results for t in missing)
+
+    def _ingest_epoch(self, eid: int, tasks, retain: bool) -> None:
+        e = self._epochs[eid]
+        try:
+            _check_epoch_deps(self.g, self.reactor, tasks)
+            defs = [(t.tid, float(t.duration)) for t in tasks]
+            fns = {t.tid: (t.fn, t.args) for t in tasks
+                   if t.fn is not None}
+            # ship the epoch to the live workers: the Dask wire pays one
+            # update-graph message per key, the static wire one frame per
+            # epoch (the paper's codec asymmetry on the submission path).
+            # Encoded BEFORE any state mutation — an unpicklable callable
+            # must fail the epoch, not desync graph and reactor.
+            frames = self._charge_codec(self.wire.encode_update_graph,
+                                        defs, fns or None)
+            lo, hi = self.g.extend(tasks)
+            self._tasks_table.update(fns)
+            for wid in range(self.n_workers):
+                if wid not in self.dead:
+                    self._send_frames(wid, frames)
+            out = self._charge(self.reactor.add_tasks, lo, hi, retain)
+            self._bind_epoch(e, lo, hi)
+            self._dispatch(out)
+        except BaseException as exc:
+            self._quarantine_epoch(e, tasks, exc)
+
+    def _do_release(self, tids) -> None:
+        self._purge_released(self._charge(self.reactor.release_keys,
+                                          tids))
+
+    def _purge_released(self, released) -> None:
+        """Purge server-side values of reclaimed keys and tell the
+        holding workers to drop their caches (release wire frames)."""
+        by_wid: dict[int, list[int]] = {}
+        for tid in released:
+            self.results.pop(tid, None)
+            for wid in self.reactor.holders_of(tid):
+                if wid not in self.dead:
+                    by_wid.setdefault(wid, []).append(tid)
+        for wid, ts in by_wid.items():
+            frames = self._charge_codec(self.wire.encode_release, ts)
+            self._send_frames(wid, frames)
+
+    def _do_gather(self, tids) -> None:
+        by_wid: dict[int, list[int]] = {}
+        for tid in tids:
+            for wid in self.reactor.holders_of(tid):
+                if wid not in self.dead:
+                    by_wid.setdefault(wid, []).append(tid)
+                    break
+        for wid, ts in by_wid.items():
+            frames = self._charge_codec(self.wire.encode_gather, ts)
+            self._send_frames(wid, frames)
+
+    def _drain_submits(self) -> None:
+        while True:
+            try:
+                item = self._submit_q.get_nowait()
+            except queue.Empty:
+                return
+            kind = item[0]
+            if kind == "epoch":
+                self._ingest_epoch(item[1], item[2], item[3])
+            elif kind == "release":
+                self._do_release(item[1])
+            elif kind == "gather":
+                self._do_gather(item[1])
+
+    # lifecycle --------------------------------------------------------
+    def _start_procs(self) -> None:
         ctx_name = (self.start_method
                     or os.environ.get("REPRO_START_METHOD"))
         if not ctx_name:
@@ -433,9 +842,8 @@ class ProcessRuntime:
         if ctx_name != "fork" and self.transport_kind == "pipe":
             self.transport_kind = "socket"  # raw fds need fork inheritance
         ctx = mp.get_context(ctx_name)
-        self._tasks_table = (
-            [(t.fn, t.args) for t in self.g.tasks]
-            if any(t.fn is not None for t in self.g.tasks) else None)
+        self._tasks_table = {t.tid: (t.fn, t.args) for t in self.g.tasks
+                             if t.fn is not None}
         self._tp = tp.make_server_transport(self.transport_kind,
                                             self.n_workers)
         try:
@@ -444,7 +852,8 @@ class ProcessRuntime:
                     target=_worker_main,
                     args=(wid, self._tp.worker_args(wid),
                           self.reactor.name, self.zero_worker,
-                          self.simulate_durations, self._tasks_table,
+                          self.simulate_durations,
+                          self._tasks_table or None,
                           self._tp.child_cleanup(wid)
                           if ctx_name == "fork" else []),
                     daemon=True)
@@ -455,53 +864,67 @@ class ProcessRuntime:
             for p in self.procs:
                 if p.is_alive():
                     p.kill()
+                p.join(timeout=5.0)
             raise
 
-        t_start = time.perf_counter()
-        deadline = t_start + self.timeout
+    def start(self) -> "ProcessRuntime":
+        """Bring up the persistent worker pool and run the server loop on
+        a background thread; epochs arrive via :meth:`submit_tasks`."""
+        if self._started:
+            return self
+        self._started = True
+        self._start_procs()
         init = self._charge(self.reactor.start)
         self._dispatch(init)
-        last_balance = time.perf_counter()
+        self._server = threading.Thread(target=self._loop_in_thread,
+                                        daemon=True)
+        self._server.start()
+        return self
+
+    def _loop_in_thread(self) -> None:
         try:
-            while not self.reactor.done() and not self._timed_out:
-                now = time.perf_counter()
-                if now > deadline:
-                    self._timed_out = True
-                    break
-                self._drain_kills()
-                events = self._tp.poll(0.01)
-                finished: list[tuple[int, int]] = []
-                for wid, raw in events:
-                    if raw is None:           # EOF: unexpected death
-                        self._worker_lost(wid)
-                        continue
-                    self.wire_bytes += len(raw)
-                    self.wire_frames += 1
-                    t0 = time.perf_counter()
-                    op, recs, payloads = self.wire.decode(raw)
-                    dt = time.perf_counter() - t0
-                    self.codec_s += dt
-                    self.server_busy += dt
-                    if op != msg.OP_FINISHED:
-                        continue
-                    for tid, rw, _nbytes in recs:
-                        if wid in self.dead:
-                            continue  # stale frame from a failed worker
-                        finished.append((int(tid), int(rw)))
-                        self.queued.get(wid, set()).discard(int(tid))
-                    if payloads:
-                        self.results.update(payloads)
-                if finished:
-                    out = self._charge(self.reactor.handle_finished,
-                                       finished)
-                    self._dispatch(out)
-                now = time.perf_counter()
-                if now - last_balance > self.balance_interval:
-                    last_balance = now
-                    self._sweep_dead()
-                    self._do_balance()
+            self._loop()
         finally:
-            self._shutdown()
+            self._fail_open_epochs(
+                TimeoutError("server loop exited")
+                if self._timed_out else
+                RuntimeError("server loop exited"))
+            self._loop_exited.set()
+
+    def shutdown(self, force: bool = False, timeout: float = 10.0) -> None:
+        """Stop the server loop and terminate/join every worker process
+        (no zombies, even after a timeout — ``force`` skips the graceful
+        drain and SIGKILLs immediately)."""
+        if not self._started or self._shut:
+            return
+        self._shut = True
+        self._stop_requested = True
+        if self._server is not None:
+            self._server.join(timeout=timeout)
+            if self._server.is_alive():
+                force = True
+        self._shutdown(force=force)
+
+    # ------------------------------------------------------------------
+    def run(self) -> RunResult:
+        self._run_to_done = True
+        self._started = True
+        e = self._register_epoch(self.g.n_tasks)
+        self._start_procs()
+        t_start = time.perf_counter()
+        self._t_deadline = t_start + self.timeout
+        try:
+            init = self._charge(self.reactor.start)
+            self._bind_epoch(e, 0, self.g.n_tasks)
+            self._dispatch(init)
+            self._loop()
+        finally:
+            self._fail_open_epochs(
+                TimeoutError("run timed out") if self._timed_out
+                else RuntimeError("run exited"))
+            self._loop_exited.set()
+            # a timed-out run force-kills: no zombie worker processes
+            self._shutdown(force=self._timed_out)
         makespan = time.perf_counter() - t_start
         stats = self.reactor.stats.as_dict()
         stats.update(wire_bytes=self.wire_bytes,
@@ -510,7 +933,50 @@ class ProcessRuntime:
                      transport=self.transport_kind)
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
                          server_busy=self.server_busy, stats=stats,
-                         results=self.results, timed_out=self._timed_out)
+                         results=self.results, timed_out=self._timed_out,
+                         epochs=self.epoch_dicts())
+
+    def _loop(self) -> None:
+        last_balance = time.perf_counter()
+        while not self._stop_requested and not self._timed_out:
+            if self._run_to_done and self.reactor.done():
+                break
+            now = time.perf_counter()
+            if self._t_deadline is not None and now > self._t_deadline:
+                self._timed_out = True
+                break
+            self._drain_submits()
+            self._drain_kills()
+            events = self._tp.poll(0.01)
+            finished: list[tuple[int, int]] = []
+            for wid, raw in events:
+                if raw is None:           # EOF: unexpected death
+                    self._worker_lost(wid)
+                    continue
+                self.wire_bytes += len(raw)
+                self.wire_frames += 1
+                op, recs, payloads = self._charge_codec(self.wire.decode,
+                                                        raw)
+                if op != msg.OP_FINISHED:
+                    continue
+                for tid, rw, _nbytes in recs:
+                    if wid in self.dead:
+                        continue  # stale frame from a failed worker
+                    finished.append((int(tid), int(rw)))
+                    self.queued.get(wid, set()).discard(int(tid))
+                if payloads:
+                    self.results.update(payloads)
+            if finished:
+                out = self._charge(self.reactor.handle_finished,
+                                   finished)
+                self._dispatch(out)
+                self._purge_released(self.reactor.drain_purged())
+                self._note_finished(t for t, _ in finished)
+            now = time.perf_counter()
+            if now - last_balance > self.balance_interval:
+                last_balance = now
+                self._sweep_dead()
+                self._do_balance()
 
     def _do_balance(self) -> None:
         qbw = {w: sorted(s) for w, s in self.queued.items()
@@ -524,6 +990,7 @@ class ProcessRuntime:
             src = next((w for w, s in self.queued.items() if tid in s),
                        None)
             if src is None or src == nw:
+                self.reactor.steal_failed(tid)
                 continue
             # optimistic steal: the old worker drops the task if it has
             # not started; a duplicate completion is ignored by the
@@ -532,32 +999,34 @@ class ProcessRuntime:
             retract_by_wid.setdefault(src, []).append(tid)
             real_moves.append((tid, nw))
         for wid, tids in retract_by_wid.items():
-            t0 = time.perf_counter()
-            frames = self.wire.encode_retract(tids)
-            dt = time.perf_counter() - t0
-            self.codec_s += dt
-            self.server_busy += dt
+            frames = self._charge_codec(self.wire.encode_retract, tids)
             self._send_frames(wid, frames)
         self._dispatch(real_moves)
 
-    def _shutdown(self) -> None:
+    def _shutdown(self, force: bool = False) -> None:
         try:
-            bye = self.wire.encode_shutdown()
-            for wid in range(self.n_workers):
-                if wid not in self.dead:
-                    self._tp.send(wid, bye)
-            # give the non-blocking writers a chance to flush
-            for _ in range(50):
-                self._tp.poll(0.01)
-                if all(not p.is_alive() for p in self.procs):
-                    break
+            if not force:
+                bye = self.wire.encode_shutdown()
+                for wid in range(self.n_workers):
+                    if wid not in self.dead:
+                        self._tp.send(wid, bye)
+                # give the non-blocking writers a chance to flush
+                for _ in range(50):
+                    self._tp.poll(0.01)
+                    if all(not p.is_alive() for p in self.procs):
+                        break
+            else:
+                for p in self.procs:
+                    if p.is_alive():
+                        p.kill()
         finally:
-            self._tp.close()
+            if self._tp is not None:
+                self._tp.close()
             for p in self.procs:
                 p.join(timeout=1.0)
                 if p.is_alive():
                     p.kill()
-                    p.join(timeout=1.0)
+                    p.join(timeout=5.0)
 
 
 # ---------------------------------------------------------------------------
@@ -571,20 +1040,26 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     Dask-style server).  runtime="process": OS-process workers behind a
     real byte transport (codec paid on the wire); extra kwargs:
     ``transport="pipe"|"socket"``, ``start_method``.
-    """
-    from repro.core.array_reactor import ArrayReactor
-    from repro.core.reactor import ObjectReactor
-    from repro.core.schedulers import make_scheduler
 
-    sched_name = {"ws": "dask_ws" if server == "dask" else "rsds_ws",
-                  "random": "random", "heft": "heft"}[scheduler]
-    sched = make_scheduler(sched_name)
-    cls = ObjectReactor if server == "dask" else ArrayReactor
-    if runtime == "thread":
-        reactor = cls(graph, sched, n_workers, seed=seed)
-        return ThreadRuntime(graph, reactor, n_workers, **kw).run()
-    if runtime == "process":
-        reactor = cls(graph, sched, n_workers, seed=seed,
-                      simulate_codec=False)
-        return ProcessRuntime(graph, reactor, n_workers, **kw).run()
-    raise ValueError(f"unknown runtime {runtime!r} (want thread|process)")
+    Back-compat wrapper over the persistent Cluster/Client API: spins a
+    one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a
+    single epoch, waits, and tears the pool down — equivalent to::
+
+        with Cluster(...) as c:
+            c.client.submit_graph(graph).result()
+    """
+    from repro.core.client import Cluster
+
+    if runtime not in ("thread", "process"):
+        raise ValueError(f"unknown runtime {runtime!r} (want thread|process)")
+    timeout = kw.get("timeout", 300.0)
+    cluster = Cluster(server=server, scheduler=scheduler,
+                      n_workers=n_workers, runtime=runtime, seed=seed,
+                      name=graph.name, **kw)
+    timed_out = False
+    try:
+        gf = cluster.client.submit_graph(graph)
+        timed_out = not gf.wait(timeout)
+        return cluster.run_result(gf, timed_out=timed_out)
+    finally:
+        cluster.close(force=timed_out)

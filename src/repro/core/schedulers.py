@@ -36,6 +36,7 @@ class SchedulerBase:
         self.placement: dict[int, set[int]] = {}
         self.dead: set[int] = set()
         self.alive = np.arange(n_workers)
+        self._steals: dict[int, tuple[int, int]] = {}  # tid -> (src, tgt)
 
     # -- event feed -----------------------------------------------------
     def on_assigned(self, tid: int, wid: int) -> None:
@@ -44,6 +45,18 @@ class SchedulerBase:
     def on_finished(self, tid: int, wid: int) -> None:
         self.loads[wid] -= 1
         self.placement.setdefault(tid, set()).add(wid)
+        self._steals.pop(tid, None)
+
+    def on_steal_failed(self, tid: int) -> None:
+        """The runtime could not retract ``tid`` (it was already running):
+        revert the load bookkeeping :meth:`balance` did for the move, or a
+        long-lived scheduler accumulates phantom load and stops seeing
+        idle workers."""
+        mv = self._steals.pop(tid, None)
+        if mv is not None:
+            src, tgt = mv
+            self.loads[src] += 1
+            self.loads[tgt] -= 1
 
     def on_placed(self, tid: int, wid: int) -> None:
         self.placement.setdefault(tid, set()).add(wid)
@@ -62,6 +75,11 @@ class SchedulerBase:
                                if w not in self.dead])
         for holders in self.placement.values():
             holders.discard(wid)
+
+    def on_graph_extended(self) -> None:
+        """Tasks were appended to ``self.graph`` (incremental submission).
+        Schedulers that read the graph live need no action; precomputing
+        schedulers (HEFT) override to refresh their plan."""
 
     def _random_alive(self, n: int) -> np.ndarray:
         return self.alive[self.rng.integers(0, len(self.alive), size=n)]
@@ -172,6 +190,7 @@ class DaskWorkStealing(SchedulerBase):
             take = queue[: max(len(queue) // 2, 0)]
             for tid in take:
                 moves.append((int(tid), int(target)))
+                self._steals[int(tid)] = (int(w), int(target))
                 self.loads[w] -= 1
                 self.loads[target] += 1
                 try:
@@ -224,6 +243,7 @@ class RsdsWorkStealing(SchedulerBase):
                 tgt = int(under[ui])
                 ui += 1
                 moves.append((int(tid), tgt))
+                self._steals[int(tid)] = (int(w), tgt)
                 self.loads[w] -= 1
                 self.loads[tgt] += 1
             if ui >= len(under):
@@ -241,7 +261,14 @@ class HeftScheduler(SchedulerBase):
 
     def attach(self, graph, n_workers, workers_per_node=24, seed=0):
         super().attach(graph, n_workers, workers_per_node, seed)
-        g = graph
+        self._recompute()
+
+    def on_graph_extended(self):
+        self._recompute()
+
+    def _recompute(self) -> None:
+        g = self.graph
+        n_workers = self.n_workers
         n = g.n_tasks
         rank = np.zeros(n)
         for tid in range(n - 1, -1, -1):

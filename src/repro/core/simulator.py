@@ -250,7 +250,9 @@ class Simulator:
                     old = w
                     break
             if old is None:
-                continue  # retraction failed: already started (paper §IV-C)
+                # retraction failed: already started (paper §IV-C)
+                self.reactor.steal_failed(tid)
+                continue
             old.queue.remove(tid)
             self.moves += 1
             self._push(td + self.cfg.latency, "assign", (tid, new_wid))

@@ -110,16 +110,7 @@ class StragglerMitigator:
             qbw = {w: list(self.rt.queued.get(w, []))
                    for w in qlens}
             moves = self.rt.reactor.rebalance(qbw)
-            applied = []
-            with self.rt._lock:
-                for tid, nw in moves:
-                    src = next((w for w, q in self.rt.queued.items()
-                                if tid in q), None)
-                    if src is None:
-                        continue
-                    self.rt.queued[src].remove(tid)
-                    applied.append((tid, nw))
-            self.rt._send(applied)
+            applied = self.rt._apply_moves(moves)
             self.interventions += len(applied)
             return len(applied)
         return 0
@@ -128,9 +119,24 @@ class StragglerMitigator:
 class ElasticController:
     """Grows/shrinks a ThreadRuntime's worker pool at runtime.  Growth
     spawns a worker thread and notifies the scheduler; shrink retires the
-    worker gracefully (its queue is rebalanced, not lost)."""
+    worker gracefully (its queue is rebalanced, not lost).
+
+    Thread runtime only: process workers cannot be grown this way (a new
+    OS process would need transport registration and a live handshake),
+    so attaching to a ProcessRuntime — or a process-backed Cluster —
+    raises immediately instead of failing at scale-up time.  Extending
+    elasticity to process pools stays a ROADMAP item."""
 
     def __init__(self, runtime):
+        # accept a Cluster (unwrap to its runtime) or a runtime directly
+        runtime = getattr(runtime, "runtime", runtime)
+        if not hasattr(runtime, "transport") \
+                or not hasattr(runtime.transport, "add_worker"):
+            raise NotImplementedError(
+                "ElasticController supports thread runtimes only; "
+                f"{type(runtime).__name__} workers are OS processes and "
+                "cannot be scaled in-place (see ROADMAP: process-elastic "
+                "support)")
         self.rt = runtime
 
     def scale_up(self, n: int = 1) -> list[int]:

@@ -7,6 +7,12 @@ one batched decode step per iteration for all active slots.  Slots free as
 requests finish, new requests are admitted immediately — vLLM-style
 continuous batching on top of this framework's cache layout (which is the
 same layout the multi-pod dry-run shards).
+
+The compute itself rides the persistent Cluster/Client futures API: the
+engine owns one warm single-executor :class:`repro.core.client.Cluster`
+and submits every prefill and batched decode step to it, so back-to-back
+steps (and back-to-back requests) reuse the warm pool — the same
+long-lived-server shape the paper's RSDS exposes to Dask clients.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.client import Cluster
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 
@@ -72,7 +79,19 @@ class ServingEngine:
 
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+        # warm single-executor pool: every prefill/decode is a client
+        # submission, reused across steps and requests
+        self._cluster = Cluster(server="rsds", scheduler="ws",
+                                n_workers=1, runtime="thread",
+                                name="serving")
         self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def _call(self, fn, *args):
+        """Run one compute on the warm pool and free its key."""
+        fut = self._cluster.client.submit(fn, *args)
+        out = fut.result(timeout=300.0)
+        fut.release()
+        return out
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -81,6 +100,7 @@ class ServingEngine:
     def stop(self) -> None:
         self._stop.set()
         self._thread.join(timeout=10)
+        self._cluster.close()
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: int = -1) -> Request:
@@ -113,8 +133,8 @@ class ServingEngine:
                 toks = np.zeros((1, bucket), np.int32)
                 toks[0, :s - 1] = req.prompt[:-1]  # right-pad
                 one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
-                _, one_cache = self._prefill(self.params, jnp.asarray(toks),
-                                             one_cache)
+                _, one_cache = self._call(self._prefill, self.params,
+                                          jnp.asarray(toks), one_cache)
                 self.cache = jax.tree.map(
                     lambda g, p: g.at[:, slot].set(p[:, 0])
                     if hasattr(g, "at") else g, self.cache, one_cache)
@@ -132,8 +152,8 @@ class ServingEngine:
             tokens = np.zeros((self.max_batch, 1), np.int32)
             for i in live:
                 tokens[i, 0] = self._next_in[i]
-            nxt, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache,
+            nxt, self.cache = self._call(
+                self._decode, self.params, jnp.asarray(tokens), self.cache,
                 jnp.asarray(self.pos))
             nxt = np.asarray(nxt)
             self.n_decode_steps += 1

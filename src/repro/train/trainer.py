@@ -7,14 +7,16 @@ function of step).
 
 :class:`MicrobatchCoordinator` — the paper-integration path: each global
 step becomes a task graph (M microbatch-gradient tasks -> 1 reduce+update
-task) executed by the core runtime across a pool of executors ("pods").
-The work-stealing scheduler rebalances microbatches away from stragglers,
-and executor failure mid-step resubmits the lost microbatches — the
-paper's mechanisms doing real training work.
+task) submitted as an epoch to one persistent :class:`repro.core.client.
+Cluster`, so back-to-back steps reuse the warm executor pool instead of
+restarting it.  The work-stealing scheduler rebalances microbatches away
+from stragglers, and executor failure mid-step resubmits the lost
+microbatches — the paper's mechanisms doing real training work.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable
 
@@ -22,10 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.array_reactor import ArrayReactor
+from repro.core.client import Cluster
 from repro.core.graph import Task, TaskGraph
-from repro.core.runtime import ThreadRuntime
-from repro.core.schedulers import make_scheduler
 from repro.ckpt import checkpoint as ckpt_lib
 from repro.data.pipeline import PrefetchPipeline, SyntheticDataset
 from repro.models import model as model_lib
@@ -123,12 +123,21 @@ class Trainer:
 # ---------------------------------------------------------------------------
 
 class MicrobatchCoordinator:
-    """One training step = one task graph over the core runtime.
+    """One training step = one graph epoch on a persistent Cluster.
 
     Executors are runtime workers (stand-ins for pods); each microbatch
     gradient is a task; the final task averages gradients and applies the
-    optimizer.  ``slow_workers`` makes chosen executors straggle so the
-    work-stealing scheduler's rebalancing is observable.
+    optimizer.  The Cluster outlives the step loop, so the 2nd..Nth step
+    submit onto warm executors (no pool restart between steps — the whole
+    point of the paper's long-lived server).  ``slow_workers`` makes
+    chosen executors straggle so the work-stealing scheduler's
+    rebalancing is observable.
+
+    Because the pool is shared across steps, an executor killed via
+    ``fail_worker`` stays dead for the coordinator's lifetime (later
+    steps run on the surviving executors) — a real long-lived deployment
+    would replace it; elastic replacement of process/thread executors is
+    a ROADMAP item.
     """
 
     def __init__(self, cfg: ModelConfig, *, n_executors: int = 4,
@@ -150,6 +159,60 @@ class MicrobatchCoordinator:
                 lambda q: loss_fn(q, b)[0])(p))
         self.step = 0
         self.steal_count = 0
+        self._cluster: Cluster | None = None
+
+    # ------------------------------------------------------------------
+    def _ensure_cluster(self) -> Cluster:
+        if self._cluster is not None:
+            return self._cluster
+        server = "dask" if self.scheduler_name.startswith("dask") else \
+            "rsds"
+        sched = {"rsds_ws": "ws", "dask_ws": "ws", "ws": "ws",
+                 "random": "random", "heft": "heft"}[self.scheduler_name]
+        c = Cluster(server=server, scheduler=sched,
+                    n_workers=self.n_executors, runtime="thread",
+                    name="microbatch", balance_interval=0.002,
+                    timeout=120.0, autostart=False)
+        rt = c.runtime
+        if self.slow:
+            orig = rt._worker_loop
+
+            def slow_loop(wid):
+                if wid not in self.slow:
+                    return orig(wid)
+                inbox = rt.worker_inbox[wid]
+                while True:
+                    item = inbox.get()
+                    if item is None:
+                        return
+                    if wid in rt.dead:
+                        continue
+                    with rt._lock:
+                        if item in rt.queued.get(wid, []):
+                            rt.queued[wid].remove(item)
+                        else:
+                            # retracted (stolen) while waiting in the
+                            # inbox: skip without paying the straggler
+                            # delay, or ghosts of a previous epoch's
+                            # stolen tasks would stall the next one
+                            continue
+                    time.sleep(self.slow[wid])
+                    t = rt.g.tasks[item]
+                    if t.fn is not None:
+                        args = [rt.results.get(d) for d in t.inputs]
+                        rt.results[item] = t.fn(*args) if t.args == () \
+                            else t.fn(*t.args)
+                    rt.server_inbox.put(("finished", item, wid))
+
+            rt._worker_loop = slow_loop
+        c.start()
+        self._cluster = c
+        return c
+
+    def close(self) -> None:
+        if self._cluster is not None:
+            self._cluster.close()
+            self._cluster = None
 
     def _make_step_graph(self, batch: dict) -> TaskGraph:
         mb = {k: np.array_split(v, self.n_micro) for k, v in batch.items()}
@@ -188,42 +251,19 @@ class MicrobatchCoordinator:
 
     def train_step(self, batch: dict, *, fail_worker: int | None = None
                    ) -> dict:
+        cluster = self._ensure_cluster()
         graph = self._make_step_graph(batch)
-        sched = make_scheduler(self.scheduler_name)
-        reactor = ArrayReactor(graph, sched, self.n_executors)
-        rt = ThreadRuntime(graph, reactor, self.n_executors,
-                           balance_interval=0.002, timeout=120.0)
-        if self.slow:
-            orig = rt._worker_loop
-
-            def slow_loop(wid):
-                if wid in self.slow:
-                    inbox = rt.worker_inbox[wid]
-                    while True:
-                        item = inbox.get()
-                        if item is None:
-                            return
-                        time.sleep(self.slow[wid])
-                        if wid not in rt.dead:
-                            with rt._lock:
-                                if item in rt.queued.get(wid, []):
-                                    rt.queued[wid].remove(item)
-                            t = graph.tasks[item]
-                            if t.fn is not None:
-                                rt.results[item] = t.fn()
-                            rt.server_inbox.put(("finished", item, wid))
-                else:
-                    orig(wid)
-            rt._worker_loop = slow_loop
         if fail_worker is not None:
             def _killer():
                 time.sleep(0.01)
-                rt.fail_worker(fail_worker)
-            import threading
+                cluster.runtime.fail_worker(fail_worker)
             threading.Thread(target=_killer, daemon=True).start()
-        res = rt.run()
+        futs = cluster.client.submit_graph(graph)
+        ok = futs.wait(120.0)
+        epoch = futs.epoch
+        loss = futs.raw_results().get(self.n_micro) if ok else None
+        futs.release()   # per-step values are consumed; free the keys
         self.step += 1
-        loss = res.results.get(self.n_micro)
         return {"step": self.step, "loss": loss,
-                "makespan": res.makespan, "timed_out": res.timed_out,
-                "server_busy": res.server_busy}
+                "makespan": epoch.makespan, "timed_out": not ok,
+                "server_busy": epoch.server_busy}

@@ -53,3 +53,61 @@ def test_critical_path_bounds():
     g = benchgraphs.tree(6)
     cp = g.critical_path_time()
     assert 0 < cp <= g.total_work()
+
+
+# ---------------------------------------------------------------------------
+# incremental graphs: TaskGraph.extend + GraphBuilder
+# ---------------------------------------------------------------------------
+
+def test_extend_appends_epoch_and_rebuilds_csr():
+    g = TaskGraph([Task(0, ()), Task(1, (0,))], name="inc")
+    lo, hi = g.extend([Task(2, (0,)), Task(3, (1, 2))])
+    assert (lo, hi) == (2, 4)
+    assert g.n_tasks == 4 and g.n_deps == 4
+    # consumers CSR reflects cross-epoch edges
+    assert sorted(g.consumers_of(0).tolist()) == [1, 2]
+    assert list(g.inputs_of(3)) == [1, 2]
+
+
+def test_extend_validates_density_and_order():
+    g = TaskGraph([Task(0, ())], name="inc")
+    with pytest.raises(ValueError):
+        g.extend([Task(2, ())])            # tid gap
+    with pytest.raises(ValueError):
+        g.extend([Task(1, (5,))])          # forward/unknown dep
+
+
+def test_graph_builder_out_of_order_keys():
+    from repro.core.graph import GraphBuilder
+
+    gb = GraphBuilder("b")
+    gb.add("sink", inputs=("x", "y"))
+    gb.add("y", inputs=("x",))
+    gb.add("x")
+    tasks, flushed = gb.flush(base=0)
+    assert [t.name for t in tasks] == ["x", "y", "sink"]  # topo order
+    assert flushed == {"x": 0, "y": 1, "sink": 2}
+    assert tasks[2].inputs == (0, 1)
+    # later flush continues the dense tid space from `base`
+    gb.add("z", inputs=("sink",))
+    tasks2, flushed2 = gb.flush(base=3)
+    assert flushed2 == {"z": 3} and tasks2[0].inputs == (2,)
+
+
+def test_graph_builder_buffers_forward_refs_and_builds():
+    from repro.core.graph import GraphBuilder
+
+    gb = GraphBuilder("b")
+    gb.add("late", inputs=("missing",))
+    tasks, flushed = gb.flush()
+    assert tasks == [] and flushed == {} and gb.n_pending == 1
+    gb.add("missing")
+    g = gb.build()
+    assert g.n_tasks == 2 and list(g.inputs_of(1)) == [0]
+    with pytest.raises(ValueError):
+        gb.add("late")                     # duplicate key
+    gb2 = GraphBuilder("cycle")
+    gb2.add("a", inputs=("b",))
+    gb2.add("b", inputs=("a",))
+    with pytest.raises(ValueError, match="unresolved"):
+        gb2.build()

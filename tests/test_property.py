@@ -68,3 +68,70 @@ def test_property_any_dag_completes(case):
                  failures=failures)
     assert not r.timed_out
     assert r.makespan >= g.critical_path_time() * 0.999
+
+
+# ---------------------------------------------------------------------------
+# incremental submission ≡ whole-graph submission (Cluster/Client path)
+# ---------------------------------------------------------------------------
+
+def _node_value(tid, *dep_vals):
+    return (tid * 7 + 13 * sum(dep_vals) + 1) % 1000003
+
+
+@st.composite
+def dag_chunks(draw):
+    """A value-producing random DAG plus a random shuffling of its tasks
+    into random chunks (so chunk order bears no relation to topological
+    order — forward references are the norm, not the exception)."""
+    import functools
+
+    n = draw(st.integers(2, 24))
+    tasks = []
+    for i in range(n):
+        k = draw(st.integers(0, min(i, 3)))
+        deps = tuple(sorted(draw(st.sets(
+            st.integers(0, i - 1), min_size=k, max_size=k)))) if i else ()
+        tasks.append(Task(i, deps, duration=0.0, output_size=64.0,
+                          fn=functools.partial(_node_value, i)))
+    g = TaskGraph(tasks, name="hyp-inc")
+    order = draw(st.permutations(list(range(n))))
+    n_chunks = draw(st.integers(1, min(5, n)))
+    bounds = sorted(draw(st.sets(st.integers(1, n - 1), max_size=n_chunks - 1))) \
+        if n > 1 else []
+    chunks, prev = [], 0
+    for b in bounds + [n]:
+        chunks.append([order[i] for i in range(prev, b)])
+        prev = b
+    server = draw(st.sampled_from(SERVERS))
+    return g, chunks, server
+
+
+@given(dag_chunks())
+@settings(max_examples=20, deadline=None)
+def test_property_chunked_submission_matches_run_graph(case):
+    """Submitting a graph in random chunk order through
+    Client.submit_update/GraphBuilder yields results identical to the
+    whole-graph run_graph baseline."""
+    from repro.core import run_graph
+    from repro.core.client import Cluster
+    from repro.core.graph import GraphBuilder
+
+    g, chunks, server = case
+    base = run_graph(g, server=server, runtime="thread", n_workers=3,
+                     timeout=60.0)
+    assert not base.timed_out
+    assert set(base.results) == set(range(g.n_tasks))
+
+    futs = {}
+    with Cluster(server=server, runtime="thread", n_workers=3,
+                 timeout=60.0) as c:
+        gb = GraphBuilder("hyp-inc")
+        for chunk in chunks:
+            for tid in chunk:
+                t = g.tasks[tid]
+                gb.add(tid, inputs=t.inputs, fn=t.fn)
+            futs.update(c.client.submit_update(gb))
+        assert gb.n_pending == 0          # everything flushed eventually
+        assert set(futs) == set(range(g.n_tasks))
+        got = {tid: f.result(60.0) for tid, f in futs.items()}
+    assert got == base.results

@@ -74,6 +74,56 @@ def test_make_wire():
     assert isinstance(msg.make_wire("rsds"), msg.StaticWire)
 
 
+def _wire_fn(x):
+    return x + 1
+
+
+def test_update_graph_wire_roundtrip():
+    """Incremental submission frames: per-key on the Dask wire, one
+    static frame per epoch on the RSDS wire, pickled callables intact."""
+    defs = [(5, 0.25), (6, 0.0), (7, 0.5)]
+    fns = {6: (_wire_fn, ())}
+
+    dask = msg.DaskWire()
+    frames = dask.encode_update_graph(defs, fns)
+    assert len(frames) == 3                      # per-message
+    op, recs, payloads = dask.decode(frames[0])
+    assert op == msg.OP_UPDATE_GRAPH and recs == [(5, 0.25)]
+    assert payloads is None
+    op, recs, payloads = dask.decode(frames[1])
+    assert recs == [(6, 0.0)]
+    fn, args = payloads[6]
+    assert fn(41) == 42 and args == ()
+
+    static = msg.StaticWire()
+    (frame,) = static.encode_update_graph(defs, fns)   # one frame/epoch
+    op, recs, payloads = static.decode(frame)
+    assert op == msg.OP_UPDATE_GRAPH
+    assert recs == defs
+    fn, args = payloads[6]
+    assert fn(1) == 2 and args == ()
+    # epochs without callables carry no blob at all
+    (bare,) = static.encode_update_graph(defs, None)
+    op, recs, payloads = static.decode(bare)
+    assert recs == defs and payloads is None
+
+
+def test_release_and_gather_wire_roundtrip():
+    dask = msg.DaskWire()
+    frames = dask.encode_release([3, 9])
+    assert len(frames) == 2                      # per-key release
+    assert dask.decode(frames[0]) == (msg.OP_RELEASE, [3], None)
+    assert dask.decode(frames[1]) == (msg.OP_RELEASE, [9], None)
+    (gframe,) = dask.encode_gather([4, 8, 15])
+    assert dask.decode(gframe) == (msg.OP_GATHER, [4, 8, 15], None)
+
+    static = msg.StaticWire()
+    (rframe,) = static.encode_release([3, 9])    # one frame per batch
+    assert static.decode(rframe) == (msg.OP_RELEASE, [3, 9], None)
+    (gframe,) = static.encode_gather([4, 8, 15])
+    assert static.decode(gframe) == (msg.OP_GATHER, [4, 8, 15], None)
+
+
 # ---------------------------------------------------------------------------
 # framing
 # ---------------------------------------------------------------------------
