@@ -24,6 +24,37 @@ from repro.core.client import Cluster
 SERVERS = ("dask", "rsds")
 
 
+def _bench_data_plane(server: str, n_workers: int) -> list[tuple]:
+    """Server-relay vs p2p transfer bytes on a value-carrying reduction
+    graph (process runtime): same graph, same results, measured split of
+    payload bytes between the server data path and direct worker-to-
+    worker fetches."""
+    rows: list[tuple] = []
+    for p2p in (False, True):
+        mode = "p2p" if p2p else "relay"
+        t0 = time.perf_counter()
+        with Cluster(server=server, runtime="process",
+                     n_workers=n_workers, p2p=p2p, timeout=120.0) as c:
+            gf = c.client.submit_graph(
+                benchgraphs.value_reduction(n_leaves=64, fan=4))
+            try:
+                gf.result(120.0)
+            except TimeoutError:
+                rows.append((f"client-process/{server}/data-{mode}",
+                             "", "timeout"))
+                continue
+            gf.fetch_missing()
+            rt = c.runtime
+            ms = (time.perf_counter() - t0) * 1e3
+            rows.append((f"client-process/{server}/data-{mode}",
+                         round(ms, 3),
+                         f"relay_bytes={rt.relay_bytes};"
+                         f"p2p_bytes={rt.p2p_bytes};"
+                         f"gather_bytes={rt.gather_bytes};"
+                         f"p2p_fetches={rt.n_p2p_fetches}"))
+    return rows
+
+
 def _bench_one(server: str, runtime: str, n_graphs: int,
                n_tasks: int, n_workers: int) -> list[tuple]:
     graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_graphs)]
@@ -69,6 +100,8 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
     for server in SERVERS:
         rows.extend(_bench_one(server, runtime, n_graphs, n_tasks,
                                n_workers))
+        if runtime == "process":
+            rows.extend(_bench_data_plane(server, n_workers))
     return rows
 
 

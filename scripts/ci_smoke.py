@@ -34,6 +34,31 @@ def _warm_cluster_case(runtime: str, server: str):
     return types.SimpleNamespace(timed_out=False, n_tasks=total)
 
 
+def _data_plane_case(server: str, p2p: bool):
+    """Value-carrying reduction on the process runtime: checks result
+    correctness AND that payload bytes moved on the expected plane
+    (relay bytes ~0 with p2p on; the transfer split is reported so the
+    CI log tracks the trajectory)."""
+    from repro.core import benchgraphs, run_graph
+
+    n = 12
+    g = benchgraphs.value_reduction(n_leaves=n)
+    r = run_graph(g, server=server, runtime="process", n_workers=3,
+                  p2p=p2p, timeout=30)
+    want = n * (n + 1) // 2
+    if not r.timed_out and r.results.get(n) != want:
+        raise AssertionError(f"bad result {r.results.get(n)} != {want}")
+    relay = r.stats.get("relay_bytes", -1)
+    p2p_b = r.stats.get("p2p_bytes", -1)
+    if not r.timed_out:
+        if p2p and relay != 0:
+            raise AssertionError(f"p2p run relayed {relay} bytes")
+        if not p2p and p2p_b != 0:
+            raise AssertionError(f"relay run moved {p2p_b} p2p bytes")
+    r.detail = f"relay={relay}B p2p={p2p_b}B"
+    return r
+
+
 def _cases():
     from repro.core import benchgraphs, run_graph, simulate
 
@@ -52,6 +77,11 @@ def _cases():
         for server in ("dask", "rsds"):
             yield (f"client/{runtime}/{server}/warm2",
                    lambda r=runtime, s=server: _warm_cluster_case(r, s))
+    for server in ("dask", "rsds"):
+        for p2p in (False, True):
+            mode = "p2p" if p2p else "relay"
+            yield (f"data/{server}/{mode}",
+                   lambda s=server, p=p2p: _data_plane_case(s, p))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:
@@ -75,7 +105,9 @@ def _run_case(name, fn) -> tuple[bool, str]:
     r = box["result"]
     if getattr(r, "timed_out", False):
         return False, f"runtime timeout (wall {wall:.1f}s)"
-    return True, f"ok ({wall:.2f}s, {r.n_tasks} tasks)"
+    extra = getattr(r, "detail", "")
+    return True, f"ok ({wall:.2f}s, {r.n_tasks} tasks" \
+                 + (f", {extra}" if extra else "") + ")"
 
 
 def main() -> int:

@@ -58,6 +58,9 @@ class ArrayReactor:
         # reclaimed values are logged in ``purged`` for the runtime
         self._dropped: set[int] = set()
         self.purged: list[int] = []
+        # every reclaimed key (refcount GC included): drained by the
+        # process runtime to evict worker-side caches
+        self.reclaimed: list[int] = []
 
     # ------------------------------------------------------------------
     def _assign(self, ready: np.ndarray) -> list[tuple[int, int]]:
@@ -147,12 +150,20 @@ class ArrayReactor:
                 self.state[tid] = RELEASED
                 self.stats.releases += 1
                 released.append(tid)
+                self.reclaimed.append(tid)
         return released
 
     def drain_purged(self) -> list[int]:
         """Tids of client-dropped keys reclaimed since the last drain
         (the runtime purges their values)."""
         out, self.purged = self.purged, []
+        return out
+
+    def drain_reclaimed(self) -> list[int]:
+        """Tids of ALL keys reclaimed since the last drain — superset of
+        :meth:`drain_purged` covering plain refcount GC too (worker-cache
+        eviction signal for the process runtime)."""
+        out, self.reclaimed = self.reclaimed, []
         return out
 
     def all_done_in(self, lo: int, hi: int) -> bool:
@@ -209,6 +220,7 @@ class ArrayReactor:
                         & (self.state[dead] == MEMORY)]
             self.state[dead] = RELEASED
             self.stats.releases += len(dead)
+            self.reclaimed.extend(int(d) for d in dead)
             if self._dropped:
                 self.purged.extend(int(d) for d in dead
                                    if int(d) in self._dropped)
@@ -226,6 +238,7 @@ class ArrayReactor:
                 self.state[tid] = RELEASED
                 self.stats.releases += 1
                 self.purged.append(tid)
+                self.reclaimed.append(tid)
 
     def _handle_finished_scalar(self, ev) -> list[tuple[int, int]]:
         """Small-batch fast path: plain int/array indexing without the
@@ -254,6 +267,7 @@ class ArrayReactor:
                 if self.waiter_count[d] == 0 and self.state[d] == MEMORY:
                     self.state[d] = RELEASED
                     self.stats.releases += 1
+                    self.reclaimed.append(d)
                     if d in self._dropped:
                         self.purged.append(d)
         return self._assign(np.asarray(ready_ids, dtype=np.int64))
@@ -279,6 +293,9 @@ class ArrayReactor:
         lost_data = np.flatnonzero((self.primary == wid)
                                    & (self.state == MEMORY)
                                    & (self.waiter_count > 0))
+        # the dead worker holds nothing any more: clear its primary slots
+        # so holders_of never hints a fetch at a lost holder
+        self.primary[self.primary == wid] = -1
         to_rerun = set(int(t) for t in lost_tasks) | set(lost_data.tolist())
         # closure: re-run any RELEASED input of a re-run task (lineage)
         frontier = list(to_rerun)

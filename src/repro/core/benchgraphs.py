@@ -190,6 +190,35 @@ def pipeline(parts: int, stages: int = 4, dur_ms: float = 33.0,
 # The benchmark suite (paper Table I subset used in the evaluation figures)
 # ---------------------------------------------------------------------------
 
+def _vr_leaf(v):
+    return v
+
+
+def _vr_agg(*vals):
+    return sum(vals)
+
+
+def value_reduction(n_leaves: int = 12, fan: int = 0) -> TaskGraph:
+    """Value-carrying reduction for the wall-clock engines (real
+    payloads cross the wire): ``n_leaves`` leaves producing ``i + 1``,
+    an optional partial-sum layer every ``fan`` leaves (``fan=0`` skips
+    it), and a total-sum sink.  The sink's expected value is
+    ``n_leaves * (n_leaves + 1) / 2``."""
+    tasks = [Task(i, (), fn=_vr_leaf, args=(i + 1,))
+             for i in range(n_leaves)]
+    if fan > 0:
+        mids = []
+        for j in range(0, n_leaves, fan):
+            tid = len(tasks)
+            tasks.append(Task(tid, tuple(range(j, min(j + fan, n_leaves))),
+                              fn=_vr_agg))
+            mids.append(tid)
+        tasks.append(Task(len(tasks), tuple(mids), fn=_vr_agg))
+    else:
+        tasks.append(Task(n_leaves, tuple(range(n_leaves)), fn=_vr_agg))
+    return TaskGraph(tasks, name="reduce")
+
+
 def suite(scale: float = 1.0, seed: int = 0) -> list[TaskGraph]:
     """The diverse benchmark set.  ``scale`` < 1 shrinks task counts for CI
     while keeping every structural family."""

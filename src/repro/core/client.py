@@ -81,6 +81,7 @@ class Future:
         c = self._cluster
         if self.tid in c._released:
             raise ReleasedKeyError(self.key)
+        t0 = time.perf_counter()
         e = c.runtime.epoch(self.eid)
         if not e.done_evt.wait(timeout):
             raise TimeoutError(
@@ -90,7 +91,22 @@ class Future:
         rt = c.runtime
         if self.tid not in rt.results \
                 and c.graph.tasks[self.tid].fn is not None:
-            rt.fetch([self.tid])
+            # pass the caller's remaining budget through; None lets the
+            # runtime wait out a busy holder (its own timeout bounds it)
+            left = (max(timeout - (time.perf_counter() - t0), 0.1)
+                    if timeout is not None else None)
+            if not rt.fetch([self.tid], timeout=left) \
+                    and self.tid not in rt.results:
+                if self.tid in getattr(rt, "_gather_failed", ()):
+                    # every holder answered absent or died: fail fast
+                    # instead of silently returning None
+                    raise KeyError(
+                        f"result for {self.key!r} (tid {self.tid}) is "
+                        "unavailable: no live worker holds it")
+                # fetch deadline expired without a definitive absent —
+                # a busy holder, not a missing value; a retry may succeed
+                raise TimeoutError(
+                    f"fetch of {self.key!r} (tid {self.tid}) timed out")
         return rt.results.get(self.tid)
 
     def release(self) -> None:
@@ -134,13 +150,44 @@ class GraphFutures:
         return self._cluster.runtime.wait_epoch(self.eid, timeout)
 
     def result(self, timeout: float | None = None) -> dict[int, Any]:
+        t0 = time.perf_counter()
         if not self.wait(timeout):
             raise TimeoutError(
                 f"graph epoch {self.eid} not done within {timeout}s")
-        e = self._cluster.runtime.epoch(self.eid)
+        rt = self._cluster.runtime
+        e = rt.epoch(self.eid)
         if e.error is not None:
             raise e.error
+        left = (max(timeout - (time.perf_counter() - t0), 0.1)
+                if timeout is not None else None)
+        if not self.fetch_missing(left):
+            failed = getattr(rt, "_gather_failed", set())
+            if any(self._base + i in failed for i in range(self._n)):
+                # a silently partial results dict is the failure mode
+                # this data plane is supposed to eliminate — surface it
+                raise KeyError(
+                    f"graph epoch {self.eid}: some results are "
+                    "unavailable (no live worker holds them)")
+            raise TimeoutError(
+                f"graph epoch {self.eid}: result gather timed out")
         return self.raw_results()
+
+    def fetch_missing(self, timeout: float | None = None) -> bool:
+        """Pull fn-task values still living only in worker caches into
+        the server-side store (p2p data plane: results no longer ride
+        finished frames; they are gathered when the client reads them).
+        Returns False when some value could not be gathered."""
+        c = self._cluster
+        rt = c.runtime
+        need = [self._base + i for i in range(self._n)
+                if c.graph.tasks[self._base + i].fn is not None
+                and self._base + i not in rt.results
+                and self._base + i not in c._released]
+        if not need:
+            return True
+        # timeout=None lets the runtime wait out busy holders (bounded
+        # by its own configured timeout)
+        return rt.fetch(need, timeout=timeout)
 
     def raw_results(self) -> dict[int, Any]:
         """{original tid: value} for every task that produced a value
@@ -334,16 +381,25 @@ class Cluster:
         from the cluster's per-epoch stats (the ``run_graph`` path)."""
         rt = self.runtime
         e = rt.epoch(gf.eid)
+        if e.done_evt.is_set() and not timed_out and e.error is None:
+            makespan = e.makespan
+            # p2p: pull values out of worker caches; a failed gather
+            # must not yield a silently partial results dict — the
+            # legacy RunResult surface reports it as a timed-out run
+            timed_out = not gf.fetch_missing()
+        else:
+            makespan = time.perf_counter() - (e.t_submit or e.t_ingest)
         stats = self.reactor.stats.as_dict()
         if isinstance(rt, ProcessRuntime):
             stats.update(wire_bytes=rt.wire_bytes,
                          wire_frames=rt.wire_frames,
                          codec_s=round(rt.codec_s, 6),
-                         transport=rt.transport_kind)
-        if e.done_evt.is_set() and not timed_out and e.error is None:
-            makespan = e.makespan
-        else:
-            makespan = time.perf_counter() - (e.t_submit or e.t_ingest)
+                         transport=rt.transport_kind,
+                         p2p=rt.p2p,
+                         relay_bytes=rt.relay_bytes,
+                         p2p_bytes=rt.p2p_bytes,
+                         gather_bytes=rt.gather_bytes,
+                         p2p_fetches=rt.n_p2p_fetches)
         return RunResult(makespan=makespan, n_tasks=len(gf),
                          server_busy=rt.server_busy, stats=stats,
                          results=gf.raw_results(),

@@ -25,6 +25,18 @@ epoch on the RSDS wire), ``release`` frames drop worker-cached results
 when a client releases a key, and ``gather`` frames ask a worker to
 re-send retained results — so the codec asymmetry is measured on graph
 submission and key lifetime, not only on compute/finished traffic.
+
+The peer-to-peer data plane adds the worker-to-worker half of the
+protocol to both codecs: compute frames may carry ``who_has`` placement
+hints (dep tid -> holder data-plane address) instead of inlined payloads,
+``fetch``/``fetch-reply`` frames move dependency values directly between
+workers, ``gather-reply`` frames answer gathers explicitly (absent keys
+are marked, never silently dropped), ``fetch-failed`` frames hand a task
+back to the server when its holder died, ``data-addr`` frames register a
+worker's listener, and ``stats`` frames report p2p transfer bytes.  Both
+codecs also meter payload bytes (``take_payload_bytes`` /
+``take_gather_bytes``) so the server-relay vs p2p split is measured, per
+wire, on the data path itself.
 """
 from __future__ import annotations
 
@@ -78,11 +90,38 @@ OP_SHUTDOWN = 4      # server -> worker: drain and exit
 OP_UPDATE_GRAPH = 5  # server -> worker: new task definitions (epoch)
 OP_RELEASE = 6       # server -> worker: drop cached results for these keys
 OP_GATHER = 7        # server -> worker: re-send cached results for keys
+OP_GATHER_REPLY = 8  # worker -> server: gathered values + absent markers
+OP_FETCH = 9         # worker -> worker: request dependency values
+OP_FETCH_REPLY = 10  # worker -> worker: fetched values + absent markers
+OP_FETCH_FAILED = 11  # worker -> server: task deps unfetchable (fallback)
+OP_DATA_ADDR = 12    # worker -> server: my data-plane listener address
+OP_STATS = 13        # worker -> server: p2p transfer-bytes delta
 
 _NO_RESULT = object()   # worker-side marker: task produced no value
 
 
-class DaskWire:
+class _ByteCounters:
+    """Mixin: payload-byte accounting shared by both wire codecs.
+
+    ``payload_bytes`` counts task-dependency data that crossed the server
+    boundary (inlined compute payloads + finished-frame result blobs) —
+    the *server-relay* bytes the p2p data plane eliminates.
+    ``gather_bytes`` counts client-facing gather-reply data separately
+    (fetching a result to the client is not input relay)."""
+
+    _payload_bytes = 0
+    _gather_bytes = 0
+
+    def take_payload_bytes(self) -> int:
+        out, self._payload_bytes = self._payload_bytes, 0
+        return out
+
+    def take_gather_bytes(self) -> int:
+        out, self._gather_bytes = self._gather_bytes, 0
+        return out
+
+
+class DaskWire(_ByteCounters):
     """Per-message msgpack codec: every task and every completion is its
     own dict, packed and unpacked individually (Dask's cost profile)."""
     name = "dask"
@@ -90,14 +129,29 @@ class DaskWire:
 
     def encode_compute_batch(self, items: Sequence[tuple[int, float]],
                              payloads: dict[int, Any] | None = None,
-                             inputs_of=None) -> list[bytes]:
+                             inputs_of=None,
+                             hints: dict[int, dict] | None = None,
+                             deps: dict[int, Sequence[int]] | None = None
+                             ) -> list[bytes]:
+        """``payloads[tid]`` is a ``{dep_tid: value}`` dict of inlined
+        dependency values (server relay); ``hints[tid]`` maps dep tids to
+        the data-plane ``(host, port)`` of a holder (p2p); ``deps`` is
+        redundant on this wire (per-message ``inputs`` carries the
+        ordering already, part of Dask's who_has message cost)."""
         frames = []
         for tid, dur in items:
             m = {"op": OP_COMPUTE, "key": int(tid), "duration": float(dur),
                  "inputs": ([int(i) for i in inputs_of(tid)]
                             if inputs_of is not None else [])}
             if payloads is not None and tid in payloads:
-                m["data"] = pickle.dumps(payloads[tid], protocol=4)
+                blob = pickle.dumps(payloads[tid], protocol=4)
+                m["data"] = blob
+                self._payload_bytes += len(blob)
+            if hints is not None and tid in hints:
+                # string keys: Dask addresses tasks by string key in its
+                # who_has messages (and msgpack maps are strict about it)
+                m["who_has"] = {str(int(d)): [str(a[0]), int(a[1])]
+                                for d, a in hints[tid].items()}
             frames.append(pack(m))
         return frames
 
@@ -144,18 +198,70 @@ class DaskWire:
     def encode_gather(self, tids: Iterable[int]) -> list[bytes]:
         return [pack({"op": OP_GATHER, "keys": [int(t) for t in tids]})]
 
+    def encode_gather_reply(self, present: dict[int, Any],
+                            absent: Iterable[int]) -> list[bytes]:
+        """Single-frame reply (request/response pairing needs one frame
+        per request even on the per-message wire): values for the keys the
+        worker holds plus explicit absent markers for the rest."""
+        m: dict = {"op": OP_GATHER_REPLY,
+                   "absent": [int(t) for t in absent]}
+        if present:
+            m["data"] = pickle.dumps({int(t): v for t, v in present.items()},
+                                     protocol=4)
+        return [pack(m)]
+
+    def encode_fetch(self, tids: Iterable[int]) -> list[bytes]:
+        return [pack({"op": OP_FETCH, "keys": [int(t) for t in tids]})]
+
+    def encode_fetch_reply(self, present: dict[int, Any],
+                           absent: Iterable[int]) -> list[bytes]:
+        m: dict = {"op": OP_FETCH_REPLY,
+                   "absent": [int(t) for t in absent]}
+        if present:
+            m["data"] = pickle.dumps({int(t): v for t, v in present.items()},
+                                     protocol=4)
+        return [pack(m)]
+
+    def encode_fetch_failed(self, tid: int,
+                            missing: Iterable[int]) -> list[bytes]:
+        return [pack({"op": OP_FETCH_FAILED, "key": int(tid),
+                      "missing": [int(d) for d in missing]})]
+
+    def encode_data_addr(self, wid: int, addr) -> list[bytes]:
+        return [pack({"op": OP_DATA_ADDR, "worker": int(wid),
+                      "host": str(addr[0]), "port": int(addr[1])})]
+
+    def encode_stats(self, p2p_bytes: int, n_fetches: int) -> list[bytes]:
+        return [pack({"op": OP_STATS, "p2p_bytes": int(p2p_bytes),
+                      "fetches": int(n_fetches)})]
+
     def decode(self, raw: bytes):
-        """-> (op, records, payloads) with one record per frame."""
+        """-> (op, records, payloads) with one record per frame.  For
+        OP_COMPUTE the third slot is an *extras* dict with optional
+        ``data`` ({tid: {dep: value}} inlined relay payloads), ``deps``
+        ({tid: ordered input tids}) and ``hints`` ({tid: {dep: (host,
+        port)}} p2p placement hints), or None when the frame carries
+        none of them."""
         m = unpack(raw)
         op = m["op"]
         if op == OP_COMPUTE:
-            payloads = None
+            tid = m["key"]
+            extra: dict | None = None
+            if m.get("inputs"):
+                extra = {"deps": {tid: list(m["inputs"])}}
             if "data" in m:
-                payloads = {m["key"]: pickle.loads(m["data"])}
-            return op, [(m["key"], m["duration"])], payloads
+                self._payload_bytes += len(m["data"])
+                extra = extra or {}
+                extra["data"] = {tid: pickle.loads(m["data"])}
+            if "who_has" in m:
+                extra = extra or {}
+                extra["hints"] = {tid: {int(d): (a[0], int(a[1]))
+                                        for d, a in m["who_has"].items()}}
+            return op, [(tid, m["duration"])], extra
         if op == OP_FINISHED:
             payloads = None
             if "data" in m:
+                self._payload_bytes += len(m["data"])
                 payloads = {m["key"]: pickle.loads(m["data"])}
             return op, [(m["key"], m["worker"], m.get("nbytes", 0.0))], \
                 payloads
@@ -170,17 +276,36 @@ class DaskWire:
             return op, [m["key"]], None
         if op == OP_GATHER:
             return op, list(m["keys"]), None
+        if op in (OP_GATHER_REPLY, OP_FETCH_REPLY):
+            payloads = None
+            if "data" in m:
+                if op == OP_GATHER_REPLY:
+                    self._gather_bytes += len(m["data"])
+                payloads = pickle.loads(m["data"])
+            return op, list(m["absent"]), payloads
+        if op == OP_FETCH:
+            return op, list(m["keys"]), None
+        if op == OP_FETCH_FAILED:
+            return op, [(m["key"], tuple(m["missing"]))], None
+        if op == OP_DATA_ADDR:
+            return op, [m["worker"]], (m["host"], m["port"])
+        if op == OP_STATS:
+            return op, [(m["p2p_bytes"], m["fetches"])], None
         return op, [], None
 
 
-class StaticWire:
+class StaticWire(_ByteCounters):
     """RSDS-style static frame layout, one encode/decode per batch.
 
     header  = op:u8  has_blob:u8  count:u32
     compute  record = tid:i64  duration:f64
     finished record = tid:i64  wid:i32  nbytes:f64
-    retract  record = tid:i64
-    blob (optional) = pickled {tid: value} payload section
+    retract  record = tid:i64  (also release/gather/fetch/fetch-failed)
+    stats    record = p2p_bytes:i64  fetches:i64
+    blob (optional) = pickled dynamic section; for compute frames a
+    ``{"data": …, "deps": …, "hints": …}`` extras dict, for
+    finished/gather-reply/fetch-reply frames a ``{tid: value}`` dict
+    (the static hot path — duration-model tasks — carries no blob)
     """
     name = "static"
     batched = True
@@ -189,13 +314,30 @@ class StaticWire:
     _COMPUTE = struct.Struct("<qd")
     _FINISHED = struct.Struct("<qid")
     _RETRACT = struct.Struct("<q")
+    _STATS = struct.Struct("<qq")
 
     def encode_compute_batch(self, items: Sequence[tuple[int, float]],
                              payloads: dict[int, Any] | None = None,
-                             inputs_of=None) -> list[bytes]:
+                             inputs_of=None,
+                             hints: dict[int, dict] | None = None,
+                             deps: dict[int, Sequence[int]] | None = None
+                             ) -> list[bytes]:
         body = b"".join(self._COMPUTE.pack(int(t), float(d))
                         for t, d in items)
-        blob = pickle.dumps(payloads, protocol=4) if payloads else b""
+        extra = {}
+        if payloads:
+            # pre-pickle the payload section once: the same bytes are
+            # the relay meter AND the wire content (nested as bytes in
+            # the extras dict; decode unpickles the inner blob)
+            data_blob = pickle.dumps(payloads, protocol=4)
+            extra["data"] = data_blob
+            self._payload_bytes += len(data_blob)
+        if deps:
+            extra["deps"] = {int(t): [int(d) for d in ds]
+                             for t, ds in deps.items()}
+        if hints:
+            extra["hints"] = hints
+        blob = pickle.dumps(extra, protocol=4) if extra else b""
         return [self._HDR.pack(OP_COMPUTE, 1 if blob else 0, len(items))
                 + body + blob]
 
@@ -242,6 +384,43 @@ class StaticWire:
         body = b"".join(self._RETRACT.pack(int(t)) for t in tids)
         return [self._HDR.pack(OP_GATHER, 0, len(tids)) + body]
 
+    def _encode_reply(self, op: int, present: dict[int, Any],
+                      absent: Iterable[int]) -> list[bytes]:
+        absent = list(absent)
+        body = b"".join(self._RETRACT.pack(int(t)) for t in absent)
+        blob = (pickle.dumps({int(t): v for t, v in present.items()},
+                             protocol=4) if present else b"")
+        return [self._HDR.pack(op, 1 if blob else 0, len(absent))
+                + body + blob]
+
+    def encode_gather_reply(self, present: dict[int, Any],
+                            absent: Iterable[int]) -> list[bytes]:
+        return self._encode_reply(OP_GATHER_REPLY, present, absent)
+
+    def encode_fetch(self, tids: Iterable[int]) -> list[bytes]:
+        tids = list(tids)
+        body = b"".join(self._RETRACT.pack(int(t)) for t in tids)
+        return [self._HDR.pack(OP_FETCH, 0, len(tids)) + body]
+
+    def encode_fetch_reply(self, present: dict[int, Any],
+                           absent: Iterable[int]) -> list[bytes]:
+        return self._encode_reply(OP_FETCH_REPLY, present, absent)
+
+    def encode_fetch_failed(self, tid: int,
+                            missing: Iterable[int]) -> list[bytes]:
+        ids = [int(tid)] + [int(d) for d in missing]
+        body = b"".join(self._RETRACT.pack(t) for t in ids)
+        return [self._HDR.pack(OP_FETCH_FAILED, 0, len(ids)) + body]
+
+    def encode_data_addr(self, wid: int, addr) -> list[bytes]:
+        body = self._RETRACT.pack(int(wid))
+        blob = pickle.dumps((str(addr[0]), int(addr[1])), protocol=4)
+        return [self._HDR.pack(OP_DATA_ADDR, 1, 1) + body + blob]
+
+    def encode_stats(self, p2p_bytes: int, n_fetches: int) -> list[bytes]:
+        body = self._STATS.pack(int(p2p_bytes), int(n_fetches))
+        return [self._HDR.pack(OP_STATS, 0, 1) + body]
+
     def decode(self, raw: bytes):
         op, has_blob, count = self._HDR.unpack_from(raw)
         off = self._HDR.size
@@ -255,7 +434,14 @@ class StaticWire:
             for i in range(count):
                 recs.append(rec.unpack_from(raw, off + i * rec.size))
             off += count * rec.size
-        elif op in (OP_RETRACT, OP_RELEASE, OP_GATHER):
+        elif op == OP_STATS:
+            rec = self._STATS
+            recs = [rec.unpack_from(raw, off + i * rec.size)
+                    for i in range(count)]
+            off += count * rec.size
+        elif op in (OP_RETRACT, OP_RELEASE, OP_GATHER, OP_GATHER_REPLY,
+                    OP_FETCH, OP_FETCH_REPLY, OP_FETCH_FAILED,
+                    OP_DATA_ADDR):
             rec = self._RETRACT
             recs = [rec.unpack_from(raw, off + i * rec.size)[0]
                     for i in range(count)]
@@ -263,6 +449,17 @@ class StaticWire:
         else:
             recs = []
         payloads = pickle.loads(raw[off:]) if has_blob else None
+        if op == OP_COMPUTE and payloads is not None \
+                and isinstance(payloads.get("data"), bytes):
+            payloads["data"] = pickle.loads(payloads["data"])
+        if op == OP_FINISHED and payloads is not None:
+            self._payload_bytes += len(raw) - off
+        elif op == OP_GATHER_REPLY and payloads is not None:
+            self._gather_bytes += len(raw) - off
+        elif op == OP_FETCH_FAILED:
+            recs = [(recs[0], tuple(recs[1:]))] if recs else []
+        elif op == OP_DATA_ADDR:
+            recs = [int(recs[0])] if recs else []
         return op, recs, payloads
 
 

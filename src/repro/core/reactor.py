@@ -70,6 +70,11 @@ class ObjectReactor:
         # value too, so the tids are logged in ``purged``
         self._dropped: set[int] = set()
         self.purged: list[int] = []
+        # EVERY key whose data was reclaimed (refcount GC included, not
+        # just client-dropped ones): the process runtime drains this to
+        # evict worker-side caches, or values that are neither client-held
+        # nor consumed downstream pin worker memory forever
+        self.reclaimed: list[int] = []
         self.tasks = {}
         for t in graph.tasks:
             self.tasks[self.key[t.tid]] = {
@@ -178,12 +183,21 @@ class ObjectReactor:
                 self.stats.releases += 1
                 self.stats.msgs_out += len(ts["who_has"])
                 released.append(tid)
+                self.reclaimed.append(tid)
         return released
 
     def drain_purged(self) -> list[int]:
         """Tids of client-dropped keys reclaimed since the last drain
         (the runtime purges their values)."""
         out, self.purged = self.purged, []
+        return out
+
+    def drain_reclaimed(self) -> list[int]:
+        """Tids of ALL keys reclaimed since the last drain — superset of
+        :meth:`drain_purged` that also covers plain refcount GC.  The
+        process runtime sends release frames for these so worker caches
+        shed values nobody can ever ask for again."""
+        out, self.reclaimed = self.reclaimed, []
         return out
 
     def all_done_in(self, lo: int, hi: int) -> bool:
@@ -226,6 +240,7 @@ class ObjectReactor:
                 ts["state"] = RELEASED
                 self.stats.releases += 1
                 self.purged.append(tid)
+                self.reclaimed.append(tid)
             # refcount GC: inputs of tid lose a waiter
             ready = []
             for d in self.graph.inputs_of(tid):
@@ -236,6 +251,7 @@ class ObjectReactor:
                     dts["state"] = RELEASED
                     self.stats.releases += 1
                     self.stats.msgs_out += len(dts["who_has"])
+                    self.reclaimed.append(d)
                     if d in self._dropped:
                         self.purged.append(d)
             woken: set[int] = set()

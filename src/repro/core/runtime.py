@@ -61,6 +61,10 @@ class EpochStats:
     remaining: int = -1
     server_busy0: float = 0.0      # server_busy snapshot at ingest
     server_busy1: float = 0.0      # server_busy snapshot at completion
+    relay_bytes0: int = 0          # server-relayed payload-byte snapshots
+    relay_bytes1: int = 0
+    p2p_bytes0: int = 0            # direct worker↔worker payload bytes
+    p2p_bytes1: int = 0
     error: BaseException | None = None
     done_evt: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -74,10 +78,24 @@ class EpochStats:
     def server_busy(self) -> float:
         return max(self.server_busy1 - self.server_busy0, 0.0)
 
+    @property
+    def relay_bytes(self) -> int:
+        """Task payload bytes that rode through the server while this
+        epoch was in flight (~0 on the p2p data plane)."""
+        return max(self.relay_bytes1 - self.relay_bytes0, 0)
+
+    @property
+    def p2p_bytes(self) -> int:
+        """Payload bytes moved worker-to-worker while this epoch was in
+        flight (0 on the server-mediated data plane)."""
+        return max(self.p2p_bytes1 - self.p2p_bytes0, 0)
+
     def as_dict(self) -> dict:
         return {"eid": self.eid, "n_tasks": self.n_tasks,
                 "makespan": self.makespan,
                 "server_busy": self.server_busy,
+                "relay_bytes": self.relay_bytes,
+                "p2p_bytes": self.p2p_bytes,
                 "error": repr(self.error) if self.error else None}
 
 
@@ -135,6 +153,8 @@ class _EpochLedger:
         e.lo, e.hi, e.remaining = lo, hi, hi - lo
         e.t_ingest = time.perf_counter()
         e.server_busy0 = self.server_busy
+        e.relay_bytes0 = getattr(self, "relay_bytes", 0)
+        e.p2p_bytes0 = getattr(self, "p2p_bytes", 0)
         self._range_los.append(lo)
         self._range_epochs.append(e)
         if e.remaining == 0:
@@ -147,6 +167,8 @@ class _EpochLedger:
         e.error = e.error or error
         e.t_done = time.perf_counter()
         e.server_busy1 = self.server_busy
+        e.relay_bytes1 = getattr(self, "relay_bytes", 0)
+        e.p2p_bytes1 = getattr(self, "p2p_bytes", 0)
         e.done_evt.set()
 
     def _fail_epoch(self, e: EpochStats, error: BaseException) -> None:
@@ -216,6 +238,8 @@ class ThreadRuntime(_EpochLedger):
         self.running: dict[int, int] = {}   # wid -> tid
         self.dead: set[int] = set()
         self.server_busy = 0.0
+        self.relay_bytes = 0    # in-process: no payload ever crosses a wire
+        self.p2p_bytes = 0
         self._lock = threading.Lock()
         self._done_evt = threading.Event()
         self._init_epochs()
@@ -389,6 +413,9 @@ class ThreadRuntime(_EpochLedger):
                 self._send(out)
                 for tid in self.reactor.drain_purged():
                     self.results.pop(tid, None)
+                # no worker caches in-process; drop the eviction log so a
+                # long-lived thread Cluster doesn't accumulate it forever
+                self.reactor.drain_reclaimed()
                 if finished:
                     self._note_finished(t for t, _ in finished)
                 nowt = time.perf_counter()
@@ -504,31 +531,126 @@ def _close_fds(fds) -> None:
             pass
 
 
+_MISS = object()    # cache-lookup sentinel
+
+
 def _worker_main(wid: int, endpoint_args, wire_name: str,
                  zero_worker: bool, simulate_durations: bool,
-                 tasks_table, cleanup_fds) -> None:
+                 tasks_table, cleanup_fds, p2p: bool = False) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
     finished frames.  Mirrors the paper's one-thread-per-worker setup.
 
     Persistent-server protocol: ``update-graph`` frames extend the local
     task table mid-run (incremental epochs), ``release`` frames purge the
     local result cache (explicit key lifetime), ``gather`` frames re-send
-    cached results."""
+    cached results as explicit gather-reply frames (absent keys are
+    marked, never silently dropped).
+
+    With ``p2p`` the worker is a node on the peer-to-peer data plane: a
+    :class:`repro.core.transport.DataPlaneListener` serves this worker's
+    cached values to peers on a background thread, compute frames carry
+    ``who_has`` placement hints instead of inlined payloads, and
+    dependency values are dialed directly from the holder's cache —
+    finished frames carry no result data (the server fetches on demand
+    over gather frames).  A dependency that cannot be fetched (holder
+    died) is reported via a fetch-failed frame and the server re-routes
+    or relays."""
     _close_fds(cleanup_fds)
     ep = tp.make_worker_endpoint(endpoint_args)
     wire = msg.make_wire(wire_name)
     table: dict[int, tuple] = dict(tasks_table or {})
     cache: dict[int, Any] = {}
+    cache_lock = threading.Lock()
     pending: collections.deque = collections.deque()
     retracted: set[int] = set()
     out: list[tuple[int, Any]] = []
+    peers: dict[tuple, tp.PeerChannel] = {}
+    xfer = {"bytes": 0, "fetches": 0, "bytes_sent": 0, "fetches_sent": 0}
     alive = True
+
+    listener = None
+    if p2p:
+        # the listener thread uses its OWN codec instance: the wire
+        # objects keep per-instance byte counters and are not thread-safe
+        dp_wire = msg.make_wire(wire_name)
+
+        def serve_fetch(frame: bytes) -> bytes:
+            op, recs, _ = dp_wire.decode(frame)
+            present, absent = {}, []
+            with cache_lock:
+                for t in recs:
+                    t = int(t)
+                    if t in cache:
+                        present[t] = cache[t]
+                    else:
+                        absent.append(t)
+            (reply,) = dp_wire.encode_fetch_reply(present, absent)
+            return reply
+
+        listener = tp.DataPlaneListener(serve_fetch)
+        for frame in wire.encode_data_addr(wid, listener.addr):
+            ep.send(frame)
+
+    def resolve_deps(deps, data, hints) -> tuple[list, list[int]]:
+        """Dependency values for one task, in input order: inlined
+        payloads first, then the local cache, then a direct fetch from
+        the hinted holder.  Returns ``(values, missing_tids)`` —
+        non-empty ``missing`` means the task cannot run here yet."""
+        got: dict[int, Any] = {}
+        to_fetch: dict[tuple, list[int]] = {}
+        for d in deps:
+            d = int(d)
+            if d in got:
+                continue
+            if data is not None and d in data:
+                got[d] = data[d]
+                continue
+            if d not in table:
+                # duration-model dep (no callable): it produces no value
+                # anywhere — same None the thread runtime passes
+                got[d] = None
+                continue
+            with cache_lock:
+                v = cache.get(d, _MISS)
+            if v is not _MISS:
+                got[d] = v
+            elif hints is not None and d in hints:
+                to_fetch.setdefault(tuple(hints[d]), []).append(d)
+        for addr, ds in to_fetch.items():
+            try:
+                ch = peers.get(addr)
+                if ch is None:
+                    ch = peers[addr] = tp.PeerChannel(addr)
+                (req,) = wire.encode_fetch(ds)
+                raw = ch.request(req)
+                xfer["bytes"] += len(req) + len(raw)
+                xfer["fetches"] += 1
+                _, _absent, payload = wire.decode(raw)
+                if payload:
+                    with cache_lock:
+                        cache.update(payload)
+                    got.update(payload)
+            except tp.TransportClosed:
+                ch = peers.pop(addr, None)
+                if ch is not None:
+                    ch.close()
+        missing = sorted({int(d) for d in deps if int(d) not in got})
+        if missing:
+            return [], missing
+        return [got[int(d)] for d in deps], []
 
     def flush() -> None:
         if out:
             for frame in wire.encode_finished_batch(wid, out):
                 ep.send(frame)
             out.clear()
+        if xfer["bytes"] > xfer["bytes_sent"]:
+            for frame in wire.encode_stats(
+                    xfer["bytes"] - xfer["bytes_sent"],
+                    xfer["fetches"] - xfer["fetches_sent"]):
+                ep.send(frame)
+            xfer["bytes_sent"] = xfer["bytes"]
+            xfer["fetches_sent"] = xfer["fetches"]
 
     while alive or pending:
         block = alive and not pending
@@ -545,19 +667,31 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                 break
             op, recs, payloads = wire.decode(raw)
             if op == msg.OP_COMPUTE:
+                extra = payloads or {}
+                data = extra.get("data") or {}
+                deps = extra.get("deps") or {}
+                hints = extra.get("hints") or {}
                 for tid, dur in recs:
-                    pending.append(
-                        (tid, dur,
-                         payloads.get(tid) if payloads else None))
+                    pending.append((tid, dur, data.get(tid),
+                                    deps.get(tid), hints.get(tid)))
             elif op == msg.OP_UPDATE_GRAPH:
                 if payloads:
                     table.update(payloads)
             elif op == msg.OP_RELEASE:
-                for tid in recs:
-                    cache.pop(int(tid), None)
+                with cache_lock:
+                    for tid in recs:
+                        cache.pop(int(tid), None)
             elif op == msg.OP_GATHER:
-                out.extend((int(t), cache[int(t)]) for t in recs
-                           if int(t) in cache)
+                present, absent = {}, []
+                with cache_lock:
+                    for t in recs:
+                        t = int(t)
+                        if t in cache:
+                            present[t] = cache[t]
+                        else:
+                            absent.append(t)
+                for frame in wire.encode_gather_reply(present, absent):
+                    ep.send(frame)
             elif op == msg.OP_RETRACT:
                 retracted.update(int(t) for t in recs)
             elif op == msg.OP_SHUTDOWN:
@@ -567,7 +701,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
             if not alive:
                 break
             continue
-        tid, dur, payload = pending.popleft()
+        tid, dur, data, deps, hints = pending.popleft()
         if tid in retracted:
             retracted.discard(tid)
             continue
@@ -575,17 +709,34 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         if not zero_worker:
             fn, fargs = table.get(tid, (None, ()))
             if fn is not None:
-                vals = payload if payload is not None else []
-                result = fn(*vals) if fargs == () else fn(*fargs)
-                cache[tid] = result
+                if fargs == ():
+                    vals, missing = resolve_deps(deps or (), data, hints)
+                    if missing:
+                        # holder unreachable: hand the task back instead
+                        # of wedging — the server re-routes or relays
+                        for frame in wire.encode_fetch_failed(tid,
+                                                              missing):
+                            ep.send(frame)
+                        continue
+                    result = fn(*vals)
+                else:
+                    result = fn(*fargs)
+                with cache_lock:
+                    cache[tid] = result
             elif simulate_durations and dur > 0:
                 time.sleep(dur)
-        out.append((tid, result))
+        # p2p: results stay in the worker cache; the finished frame is a
+        # pure completion event (the server gathers on demand)
+        out.append((tid, msg._NO_RESULT if p2p else result))
         # dask wire is per-message anyway; for the static wire, batch up
         # completions while more work is queued (RSDS batching)
         if not wire.batched or not pending or len(out) >= 64:
             flush()
     flush()
+    if listener is not None:
+        listener.close()
+    for ch in peers.values():
+        ch.close()
     ep.close()
 
 
@@ -597,7 +748,7 @@ class ProcessRuntime(_EpochLedger):
                  *, transport: str = "pipe", zero_worker: bool = False,
                  simulate_durations: bool = True,
                  balance_interval: float = 0.05, timeout: float = 300.0,
-                 start_method: str | None = None):
+                 start_method: str | None = None, p2p: bool = True):
         if getattr(reactor, "simulate_codec", False):
             raise ValueError(
                 "ProcessRuntime needs a reactor with simulate_codec=False: "
@@ -611,6 +762,10 @@ class ProcessRuntime(_EpochLedger):
         self.balance_interval = balance_interval
         self.timeout = timeout
         self.start_method = start_method
+        # p2p: dependency values move worker-to-worker over who_has hints
+        # + direct fetch (Dask/RSDS-faithful data plane); off = every
+        # payload rides compute/finished frames through the server
+        self.p2p = p2p
         self.wire = msg.make_wire(reactor.name)
         self.results: dict[int, Any] = {}
         self.queued: dict[int, set[int]] = {w: set()
@@ -620,6 +775,21 @@ class ProcessRuntime(_EpochLedger):
         self.codec_s = 0.0
         self.wire_bytes = 0
         self.wire_frames = 0
+        self.relay_bytes = 0          # payload bytes relayed via server
+        self.p2p_bytes = 0            # payload bytes moved peer-to-peer
+        self.gather_bytes = 0         # client-facing gather-reply bytes
+        self.n_p2p_fetches = 0
+        self._data_addrs: dict[int, tuple] = {}    # wid -> (host, port)
+        # wid sets that hold fetched COPIES of a key (beyond the
+        # reactor's holders): release frames must reach these too
+        self._replicas: dict[int, set[int]] = {}
+        # in-flight gathers: tid -> {"wid": current target, "tried": set}
+        self._gather_state: dict[int, dict] = {}
+        self._gather_failed: set[int] = set()
+        # tasks a worker handed back because a dependency fetch failed:
+        # tid -> {"wid": assigned worker, "missing": set, "tried": set}
+        self._parked: dict[int, dict] = {}
+        self._park_dirty = False
         self.procs: list = []
         self._kill_requests: queue.Queue = queue.Queue()
         self._submit_q: queue.Queue = queue.Queue()
@@ -664,10 +834,66 @@ class ProcessRuntime(_EpochLedger):
             self.wire_frames += 1
             self._tp.send(wid, frame)
 
+    def _holders(self, tid: int) -> list[int]:
+        """Workers believed to hold ``tid``'s value: the reactor's
+        completion holders plus fetch-replicas inferred from finished
+        tasks that consumed it."""
+        hs = [int(w) for w in self.reactor.holders_of(tid)]
+        for w in self._replicas.get(int(tid), ()):
+            if w not in hs:
+                hs.append(w)
+        return hs
+
+    def _compute_extras(self, wid: int, items,
+                        tried: dict[int, set] | None = None):
+        """The dynamic sections of one compute batch for worker ``wid``:
+        ``deps`` (ordered input tids per fn-task), ``hints`` (dep ->
+        holder data-plane address, p2p) and ``data`` (dep -> value inlined
+        from the server store — the relay path: everything when p2p is
+        off, only holderless deps as a fallback when it is on)."""
+        if not self._tasks_table:
+            return None, None, None
+        data: dict[int, dict] = {}
+        deps: dict[int, list[int]] = {}
+        hints: dict[int, dict] = {}
+        for tid, _ in items:
+            entry = self._tasks_table.get(tid)
+            if entry is None or entry[1] != ():
+                continue
+            dlist = [int(d) for d in self.g.inputs_of(tid)]
+            if not dlist:
+                continue
+            deps[tid] = dlist
+            for d in dlist:
+                if d not in self._tasks_table:
+                    # duration-model dep: no value exists to ship or
+                    # hint at (the worker passes None, as the thread
+                    # runtime does)
+                    continue
+                if not self.p2p:
+                    data.setdefault(tid, {})[d] = self.results.get(d)
+                    continue
+                holders = self._holders(d)
+                if wid in holders:
+                    continue    # already in the target worker's cache
+                skip = tried.get(d, ()) if tried else ()
+                addr = next((self._data_addrs[h] for h in holders
+                             if h not in self.dead
+                             and h in self._data_addrs
+                             and h not in skip), None)
+                if addr is not None:
+                    hints.setdefault(tid, {})[d] = addr
+                elif d in self.results:
+                    # no live holder: relay the server's copy
+                    data.setdefault(tid, {})[d] = self.results[d]
+                # else: value is gone everywhere; the worker reports
+                # fetch-failed and the task parks until lineage
+                # re-execution materializes the dep again
+        return data or None, deps or None, hints or None
+
     def _dispatch(self, assignments) -> None:
         """Encode and send compute frames; reroutes assignments that hit a
         dead worker (may cascade through handle_worker_lost)."""
-        has_fns = bool(self._tasks_table)
         pending = list(assignments)
         while pending:
             durations = self.g.durations
@@ -683,18 +909,10 @@ class ProcessRuntime(_EpochLedger):
                 by_wid.setdefault(wid, []).append(
                     (tid, float(durations[tid])))
             for wid, items in by_wid.items():
-                payloads = None
-                if has_fns:
-                    payloads = {}
-                    for tid, _ in items:
-                        entry = self._tasks_table.get(tid)
-                        if entry is not None and entry[1] == ():
-                            payloads[tid] = [self.results.get(int(d))
-                                             for d in self.g.inputs_of(tid)]
-                    payloads = payloads or None
+                data, deps, hints = self._compute_extras(wid, items)
                 frames = self._charge_codec(
-                    self.wire.encode_compute_batch, items, payloads,
-                    self.g.inputs_of)
+                    self.wire.encode_compute_batch, items, data,
+                    self.g.inputs_of, hints, deps)
                 self._send_frames(wid, frames)
             pending = rerouted
 
@@ -703,6 +921,9 @@ class ProcessRuntime(_EpochLedger):
             return
         self.dead.add(wid)
         self._tp.drop(wid)
+        self._data_addrs.pop(wid, None)
+        for reps in self._replicas.values():
+            reps.discard(wid)
         if len(self.dead) >= self.n_workers:
             # no capacity left to resubmit onto: the run cannot finish
             self._timed_out = True
@@ -710,6 +931,13 @@ class ProcessRuntime(_EpochLedger):
         lost = sorted(self.queued.pop(wid, set()))
         out = self._charge(self.reactor.handle_worker_lost, wid, lost)
         self._dispatch(out)
+        # a gather in flight against the dead worker would never be
+        # answered: re-issue it against a surviving holder
+        retry = [tid for tid, st in self._gather_state.items()
+                 if st["wid"] == wid]
+        if retry:
+            self._do_gather(retry, fresh=False)
+        self._park_dirty = True
 
     def _drain_kills(self) -> None:
         while True:
@@ -745,17 +973,30 @@ class ProcessRuntime(_EpochLedger):
     def release_tasks(self, tids) -> None:
         self._submit_q.put(("release", [int(t) for t in tids]))
 
-    def fetch(self, tids, timeout: float = 10.0) -> bool:
+    def fetch(self, tids, timeout: float | None = None) -> bool:
         """Ensure ``tids`` results are present server-side, re-fetching
-        worker-cached values over ``gather`` wire frames if needed."""
+        worker-cached values over ``gather`` wire frames if needed.
+        ``timeout=None`` waits up to the runtime's own timeout (a busy
+        single-threaded holder answers gathers only between tasks);
+        definitively-absent keys still fail fast — False returns before
+        the deadline once every holder answered absent or died."""
+        if timeout is None:
+            timeout = self.timeout
         missing = [int(t) for t in tids if int(t) not in self.results]
         if not missing:
             return True
+        # stale failure markers from an earlier fetch must not fail this
+        # one before the server even processes it (the fresh gather
+        # resets the tried-holder memory server-side)
+        self._gather_failed.difference_update(missing)
         self._submit_q.put(("gather", missing))
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
             if all(t in self.results for t in missing):
                 return True
+            if any(t in self._gather_failed and t not in self.results
+                   for t in missing):
+                return False
             if self._loop_exited.is_set():
                 break
             time.sleep(0.002)
@@ -787,32 +1028,148 @@ class ProcessRuntime(_EpochLedger):
             self._quarantine_epoch(e, tasks, exc)
 
     def _do_release(self, tids) -> None:
-        self._purge_released(self._charge(self.reactor.release_keys,
-                                          tids))
-
-    def _purge_released(self, released) -> None:
-        """Purge server-side values of reclaimed keys and tell the
-        holding workers to drop their caches (release wire frames)."""
-        by_wid: dict[int, list[int]] = {}
+        released = self._charge(self.reactor.release_keys, tids)
         for tid in released:
             self.results.pop(tid, None)
-            for wid in self.reactor.holders_of(tid):
+        # drain the reclaim log (it contains ``released``) so the same
+        # keys are not evicted a second time by the loop's drain
+        self._evict_workers(self.reactor.drain_reclaimed())
+
+    def _purge_released(self, released) -> None:
+        """Purge server-side values of client-reclaimed keys (the worker
+        caches are evicted separately via :meth:`_evict_workers` on the
+        full reclaim log)."""
+        for tid in released:
+            self.results.pop(tid, None)
+
+    def _evict_workers(self, reclaimed) -> None:
+        """Release frames for every reclaimed key to every worker that
+        holds a copy (computing holder AND fetch replicas), so a
+        long-lived pool sheds values nobody can ask for again."""
+        by_wid: dict[int, list[int]] = {}
+        for tid in reclaimed:
+            tid = int(tid)
+            for wid in self._holders(tid):
                 if wid not in self.dead:
                     by_wid.setdefault(wid, []).append(tid)
+            self._replicas.pop(tid, None)
+            self._gather_state.pop(tid, None)
+            self._gather_failed.discard(tid)
         for wid, ts in by_wid.items():
             frames = self._charge_codec(self.wire.encode_release, ts)
             self._send_frames(wid, frames)
 
-    def _do_gather(self, tids) -> None:
+    def _do_gather(self, tids, fresh: bool = True) -> None:
+        """Ask a live holder for each missing result.  ``fresh`` resets
+        the tried-holder memory (a new client fetch); re-issues after an
+        absent reply or a holder death keep it, so every holder is tried
+        at most once before the gather fails fast."""
         by_wid: dict[int, list[int]] = {}
         for tid in tids:
-            for wid in self.reactor.holders_of(tid):
-                if wid not in self.dead:
-                    by_wid.setdefault(wid, []).append(tid)
-                    break
+            tid = int(tid)
+            if tid in self.results:
+                self._gather_state.pop(tid, None)
+                continue
+            st = self._gather_state.get(tid)
+            if st is None or fresh:
+                st = self._gather_state[tid] = {"wid": -1, "tried": set()}
+                self._gather_failed.discard(tid)
+            wid = next((w for w in self._holders(tid)
+                        if w not in self.dead and w not in st["tried"]),
+                       None)
+            if wid is None:
+                if not self.reactor.all_done_in(tid, tid + 1):
+                    # lineage re-execution is rematerializing the value
+                    # (holder died): keep the gather pending; it is
+                    # re-issued when the task re-finishes
+                    st["wid"] = -1
+                    continue
+                # done but absent on every holder (never cached /
+                # evicted): fail fast instead of letting the client
+                # spin out its whole timeout
+                self._gather_state.pop(tid, None)
+                self._gather_failed.add(tid)
+                continue
+            st["wid"] = wid
+            st["tried"].add(wid)
+            by_wid.setdefault(wid, []).append(tid)
         for wid, ts in by_wid.items():
             frames = self._charge_codec(self.wire.encode_gather, ts)
             self._send_frames(wid, frames)
+
+    def _on_gather_reply(self, wid: int, absent, payloads) -> None:
+        """Gather replies are explicit frames — they never re-enter the
+        finished path, so completion/epoch accounting cannot be double
+        counted by a re-sent result."""
+        if payloads:
+            self.results.update(payloads)
+            for tid in payloads:
+                self._gather_state.pop(int(tid), None)
+                self._gather_failed.discard(int(tid))
+            self._park_dirty = True
+        if absent:
+            # the holder no longer has it (evicted/restarted): re-route
+            # to the next untried holder or fail fast
+            self._do_gather([int(t) for t in absent], fresh=False)
+
+    def _on_fetch_failed(self, wid: int, tid: int, missing) -> None:
+        """A worker could not fetch ``tid``'s dependencies from the
+        hinted holder: park the task; it is re-dispatched (fresh hints or
+        server relay) once the deps are materialized again."""
+        if wid in self.dead or tid in self.results:
+            return
+        st = self._parked.setdefault(
+            int(tid), {"wid": wid, "missing": set(), "tried": {}})
+        st["wid"] = wid
+        st["missing"] = {int(d) for d in missing}
+        self._park_dirty = True
+
+    def _resolve_parked(self) -> None:
+        """Re-dispatch parked tasks whose missing deps are available
+        again — from a fresh holder (p2p) or the server store (relay
+        fallback).  Runs only when placement state changed (a finish,
+        a worker loss, a gather reply), so a dead hint cannot busy-loop."""
+        if not self._park_dirty or not self._parked:
+            self._park_dirty = False
+            return
+        self._park_dirty = False
+        for tid, st in list(self._parked.items()):
+            wid = st["wid"]
+            if wid in self.dead or tid not in self.queued.get(wid, set()):
+                # the task was (or will be) re-routed by worker-lost or a
+                # steal; whoever owns it now got fresh hints already
+                self._parked.pop(tid)
+                continue
+            if not st["missing"]:
+                continue    # re-dispatched; awaiting execute/fetch-failed
+            ok = True
+            for d in st["missing"]:
+                skip = st["tried"].get(d, set())
+                has_holder = any(
+                    h not in self.dead and h in self._data_addrs
+                    and h not in skip
+                    for h in self._holders(d))
+                if not has_holder and d not in self.results:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            durations = self.g.durations
+            items = [(tid, float(durations[tid]))]
+            data, deps, hints = self._compute_extras(
+                wid, items, tried=st["tried"])
+            for d, addr in (hints or {}).get(tid, {}).items():
+                holder = next((h for h in self._holders(d)
+                               if self._data_addrs.get(h) == addr), None)
+                if holder is not None:
+                    st["tried"].setdefault(d, set()).add(holder)
+            frames = self._charge_codec(
+                self.wire.encode_compute_batch, items, data,
+                self.g.inputs_of, hints, deps)
+            self._send_frames(wid, frames)
+            # keep the entry (with its tried-holder memory) until the
+            # task finishes or fails its fetch again
+            st["missing"] = set()
 
     def _drain_submits(self) -> None:
         while True:
@@ -855,7 +1212,8 @@ class ProcessRuntime(_EpochLedger):
                           self.simulate_durations,
                           self._tasks_table or None,
                           self._tp.child_cleanup(wid)
-                          if ctx_name == "fork" else []),
+                          if ctx_name == "fork" else [],
+                          self.p2p),
                     daemon=True)
                 p.start()
                 self.procs.append(p)
@@ -930,11 +1288,68 @@ class ProcessRuntime(_EpochLedger):
         stats.update(wire_bytes=self.wire_bytes,
                      wire_frames=self.wire_frames,
                      codec_s=round(self.codec_s, 6),
-                     transport=self.transport_kind)
+                     transport=self.transport_kind,
+                     p2p=self.p2p,
+                     relay_bytes=self.relay_bytes,
+                     p2p_bytes=self.p2p_bytes,
+                     gather_bytes=self.gather_bytes,
+                     p2p_fetches=self.n_p2p_fetches)
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
                          server_busy=self.server_busy, stats=stats,
                          results=self.results, timed_out=self._timed_out,
                          epochs=self.epoch_dicts())
+
+    def _collect_results(self, timeout: float = 15.0) -> None:
+        """One-shot ``run()`` epilogue for the p2p data plane: results
+        live in worker caches, so gather every fn-task value the client
+        will read from ``RunResult.results`` before tearing down."""
+        want = [int(t) for t in self._tasks_table
+                if int(t) not in self.results
+                and not self.reactor.is_released(int(t))]
+        if not want:
+            return
+        self._do_gather(want)
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline and not self._timed_out:
+            if all(t in self.results or t in self._gather_failed
+                   for t in want):
+                break
+            for wid, raw in self._tp.poll(0.01):
+                if raw is None:
+                    self._worker_lost(wid)   # re-issues in-flight gathers
+                    continue
+                self.wire_bytes += len(raw)
+                self.wire_frames += 1
+                op, recs, payloads = self._charge_codec(
+                    self.wire.decode, raw)
+                if wid in self.dead:
+                    continue
+                if op == msg.OP_GATHER_REPLY:
+                    self._on_gather_reply(wid, recs, payloads)
+                elif op == msg.OP_FINISHED:
+                    # lineage re-execution after a holder died mid-
+                    # epilogue: process it, or pending gathers waiting
+                    # on the re-finish are never re-issued
+                    fin = [(int(t), int(w)) for t, w, _ in recs]
+                    for t, _ in fin:
+                        self.queued.get(wid, set()).discard(t)
+                    if payloads:
+                        self.results.update(payloads)
+                    out = self._charge(self.reactor.handle_finished, fin)
+                    self._dispatch(out)
+                    self._note_finished(t for t, _ in fin)
+                    regather = [t for t, _ in fin
+                                if t in self._gather_state]
+                    if regather:
+                        self._do_gather(regather, fresh=True)
+                elif op == msg.OP_STATS:
+                    for nbytes, nfetch in recs:
+                        self.p2p_bytes += int(nbytes)
+                        self.n_p2p_fetches += int(nfetch)
+        self.gather_bytes += self.wire.take_gather_bytes()
+        # relay-fallback frames dispatched during the epilogue (holder
+        # died mid-gather) must land in the relay metric too
+        self.relay_bytes += self.wire.take_payload_bytes()
 
     def _loop(self) -> None:
         last_balance = time.perf_counter()
@@ -957,26 +1372,77 @@ class ProcessRuntime(_EpochLedger):
                 self.wire_frames += 1
                 op, recs, payloads = self._charge_codec(self.wire.decode,
                                                         raw)
-                if op != msg.OP_FINISHED:
-                    continue
-                for tid, rw, _nbytes in recs:
-                    if wid in self.dead:
-                        continue  # stale frame from a failed worker
-                    finished.append((int(tid), int(rw)))
-                    self.queued.get(wid, set()).discard(int(tid))
-                if payloads:
-                    self.results.update(payloads)
+                if wid in self.dead:
+                    continue      # stale frame from a failed worker
+                if op == msg.OP_FINISHED:
+                    for tid, rw, _nbytes in recs:
+                        finished.append((int(tid), int(rw)))
+                        self.queued.get(wid, set()).discard(int(tid))
+                    if payloads:
+                        self.results.update(payloads)
+                elif op == msg.OP_GATHER_REPLY:
+                    self._on_gather_reply(wid, recs, payloads)
+                elif op == msg.OP_FETCH_FAILED:
+                    for tid, missing in recs:
+                        self._on_fetch_failed(wid, int(tid), missing)
+                elif op == msg.OP_DATA_ADDR:
+                    self._data_addrs[int(recs[0])] = tuple(payloads)
+                elif op == msg.OP_STATS:
+                    for nbytes, nfetch in recs:
+                        self.p2p_bytes += int(nbytes)
+                        self.n_p2p_fetches += int(nfetch)
             if finished:
                 out = self._charge(self.reactor.handle_finished,
                                    finished)
+                if self.p2p:
+                    # a finished fn-task implies its worker now holds all
+                    # of its inputs (it fetched them): feed the replica
+                    # placement back so scheduling + gather see it
+                    for tid, wid in finished:
+                        if wid in self.dead:
+                            continue
+                        entry = self._tasks_table.get(tid)
+                        if entry is None or entry[1] != ():
+                            continue
+                        for d in self.g.inputs_of(tid):
+                            d = int(d)
+                            if d not in self._tasks_table:
+                                continue    # duration dep: no value held
+                            # register the replica even when this very
+                            # completion refcount-GC'd the dep — the
+                            # eviction pass below must reach the fetched
+                            # copy, or it leaks in the worker cache
+                            self._replicas.setdefault(d, set()).add(wid)
+                            if not self.reactor.is_released(d):
+                                self.reactor.handle_placed(d, wid)
+                for tid, _ in finished:
+                    self._parked.pop(tid, None)
+                # a pending gather whose task just (re-)finished has a
+                # live holder again: re-issue it now
+                regather = [t for t, _ in finished
+                            if t in self._gather_state]
+                if regather:
+                    # fresh=True: the re-finished task's holder set is new
+                    # — a previously-absent worker may hold it now
+                    self._do_gather(regather, fresh=True)
                 self._dispatch(out)
                 self._purge_released(self.reactor.drain_purged())
+                self._evict_workers(self.reactor.drain_reclaimed())
                 self._note_finished(t for t, _ in finished)
+                self._park_dirty = True
+            # payload-byte accounting lives on the codec (it sees the
+            # blob sizes); drain it into the runtime counters
+            self.relay_bytes += self.wire.take_payload_bytes()
+            self.gather_bytes += self.wire.take_gather_bytes()
+            self._resolve_parked()
             now = time.perf_counter()
             if now - last_balance > self.balance_interval:
                 last_balance = now
                 self._sweep_dead()
                 self._do_balance()
+        if self.p2p and self._run_to_done and not self._timed_out \
+                and not self._stop_requested:
+            self._collect_results()
 
     def _do_balance(self) -> None:
         qbw = {w: sorted(s) for w, s in self.queued.items()
@@ -1039,7 +1505,9 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     runtime="thread": in-process worker threads (codec simulated for the
     Dask-style server).  runtime="process": OS-process workers behind a
     real byte transport (codec paid on the wire); extra kwargs:
-    ``transport="pipe"|"socket"``, ``start_method``.
+    ``transport="pipe"|"socket"``, ``start_method``, and ``p2p`` (default
+    True: dependency values move worker-to-worker over who_has hints +
+    direct fetch; False: every payload is relayed through the server).
 
     Back-compat wrapper over the persistent Cluster/Client API: spins a
     one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a

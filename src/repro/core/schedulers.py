@@ -226,27 +226,41 @@ class RsdsWorkStealing(SchedulerBase):
         pass
 
     def balance(self, queued_by_worker):
-        """Move tasks from loaded workers to under-loaded ones (<1 task)."""
+        """Move tasks from loaded workers to under-loaded ones (<1 task).
+
+        Target choice is locality-aware: among the idle workers, prefer
+        the one already holding the most input bytes for the stolen task
+        (completion holders + fetch replicas reported via ``on_placed``),
+        so a steal does not create a transfer the p2p data plane then has
+        to pay for.  The queue snapshot is consumed task by task — the
+        old per-iteration rebuild could nominate the same tid for several
+        targets, corrupting load bookkeeping when the duplicate steal
+        failed."""
         moves = []
-        under = np.array([w for w in np.flatnonzero(self.loads == 0)
-                          if w not in self.dead], dtype=np.int64)
-        if len(under) == 0:
+        under = [int(w) for w in np.flatnonzero(self.loads == 0)
+                 if w not in self.dead]
+        if not under:
             return moves
         order = np.argsort(self.loads)[::-1]
-        ui = 0
         for w in order:
-            while self.loads[w] > 1 and ui < len(under):
-                queue = list(queued_by_worker.get(int(w), ()))
-                if not queue:
-                    break
-                tid = queue.pop()
-                tgt = int(under[ui])
-                ui += 1
-                moves.append((int(tid), tgt))
-                self._steals[int(tid)] = (int(w), tgt)
+            if self.loads[w] <= 1:
+                break
+            queue = list(queued_by_worker.get(int(w), ()))
+            while self.loads[w] > 1 and under and queue:
+                tid = int(queue.pop())
+                best_i, best_local = 0, -1.0
+                for i, u in enumerate(under):
+                    local = sum(float(self.graph.sizes[int(d)])
+                                for d in self.graph.inputs_of(tid)
+                                if u in self.placement.get(int(d), ()))
+                    if local > best_local:
+                        best_i, best_local = i, local
+                tgt = under.pop(best_i)
+                moves.append((tid, tgt))
+                self._steals[tid] = (int(w), tgt)
                 self.loads[w] -= 1
                 self.loads[tgt] += 1
-            if ui >= len(under):
+            if not under:
                 break
         return moves
 

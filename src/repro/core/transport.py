@@ -30,6 +30,7 @@ import queue
 import selectors
 import socket
 import struct
+import threading
 import time
 
 _LEN = struct.Struct("<I")
@@ -451,6 +452,151 @@ class _SocketWorkerEndpoint(WorkerEndpoint):
 
     def send(self, data: bytes) -> None:
         self.sock.sendall(_LEN.pack(len(data)) + data)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Worker-to-worker data plane (p2p dependency fetch)
+# ---------------------------------------------------------------------------
+
+class DataPlaneListener:
+    """Per-worker data-plane server: peers dial in and each inbound frame
+    is answered with ``handler(frame) -> reply_frame``.
+
+    Runs on a daemon thread inside the worker process so fetch requests
+    are served while the (single-threaded) compute loop is busy — the
+    same shape as Dask's worker, which serves data over its event loop
+    concurrently with task execution.  Wire content is the caller's
+    business (the handler decodes/encodes via :mod:`repro.core.messages`);
+    this class only moves frames, like the rest of the module.
+    """
+
+    def __init__(self, handler, host: str = "127.0.0.1"):
+        self._handler = handler
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(64)
+        self._listener.setblocking(False)
+        self.addr = self._listener.getsockname()
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._listener, selectors.EVENT_READ, None)
+        self._bufs: dict[socket.socket, bytearray] = {}
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            for key, _ in self._sel.select(0.1):
+                if key.data is None:            # listener: new peer
+                    try:
+                        conn, _ = self._listener.accept()
+                    except OSError:
+                        continue
+                    conn.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                    conn.setblocking(False)
+                    self._bufs[conn] = bytearray()
+                    self._sel.register(conn, selectors.EVENT_READ, conn)
+                    continue
+                conn = key.data
+                buf = self._bufs[conn]
+                closed = False
+                while True:
+                    try:
+                        chunk = conn.recv(1 << 16)
+                    except (BlockingIOError, InterruptedError):
+                        break
+                    except OSError:
+                        chunk = b""
+                    if not chunk:
+                        closed = True
+                        break
+                    buf += chunk
+                for frame in _split_frames(buf):
+                    try:
+                        reply = self._handler(frame)
+                    except Exception:
+                        # a broken request must not kill the data plane;
+                        # dropping the connection surfaces the failure to
+                        # the peer as TransportClosed (it falls back)
+                        closed = True
+                        break
+                    try:
+                        conn.setblocking(True)
+                        conn.sendall(_LEN.pack(len(reply)) + reply)
+                        conn.setblocking(False)
+                    except OSError:
+                        closed = True
+                        break
+                if closed:
+                    self._drop_conn(conn)
+
+    def _drop_conn(self, conn: socket.socket) -> None:
+        self._bufs.pop(conn, None)
+        try:
+            self._sel.unregister(conn)
+        except (KeyError, ValueError):
+            pass
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        for conn in list(self._bufs):
+            self._drop_conn(conn)
+        try:
+            self._sel.unregister(self._listener)
+        except (KeyError, ValueError):
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        self._sel.close()
+
+
+class PeerChannel:
+    """Blocking client side of a worker↔worker data channel: dial once,
+    then frame-per-request / frame-per-reply.  Raises
+    :class:`TransportClosed` when the peer hangs up (holder death — the
+    caller falls back to the server relay path)."""
+
+    def __init__(self, addr, connect_timeout: float = 5.0):
+        try:
+            self.sock = socket.create_connection(
+                tuple(addr), timeout=connect_timeout)
+        except OSError as exc:
+            raise TransportClosed(f"peer {addr} unreachable: {exc}")
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.buf = bytearray()
+        self.frames: collections.deque[bytes] = collections.deque()
+
+    def request(self, frame: bytes, timeout: float = 10.0) -> bytes:
+        """One round-trip: send ``frame``, block for exactly one reply."""
+        try:
+            self.sock.settimeout(timeout)
+            self.sock.sendall(_LEN.pack(len(frame)) + frame)
+            while not self.frames:
+                chunk = self.sock.recv(1 << 16)
+                if not chunk:
+                    raise TransportClosed("peer closed data channel")
+                self.buf += chunk
+                self.frames.extend(_split_frames(self.buf))
+        except socket.timeout:
+            raise TransportClosed("peer fetch timed out")
+        except OSError as exc:
+            raise TransportClosed(f"peer fetch failed: {exc}")
+        return self.frames.popleft()
 
     def close(self) -> None:
         try:

@@ -1,0 +1,257 @@
+"""Peer-to-peer data plane (who_has + direct worker fetch).
+
+Covers the PR-3 tentpole and its satellite bugfixes:
+
+* parity matrix (process x pipe/socket x dask/rsds wire, vs thread):
+  identical results with server-relay bytes ~0 when p2p is on,
+* holder-death fetch fallback (kill the only holder; the consumer task
+  parks, lineage recomputes the dep, the task re-dispatches and
+  completes),
+* gather fail-fast for never-cached keys (the old silent drop made the
+  client spin its whole timeout),
+* gather retry when the targeted holder dies before delivery,
+* epoch accounting guarded against double-completion on gather replies,
+* worker-cache eviction of keys that are neither client-held nor
+  consumed downstream (refcount-GC reclaim signal reaches workers).
+"""
+import time
+
+import pytest
+
+from repro.core import benchgraphs, run_graph
+from repro.core.client import Cluster
+from repro.core.graph import Task, TaskGraph
+
+SERVERS = ["dask", "rsds"]
+
+
+def _leaf(v):
+    return v
+
+
+def _agg(*vals):
+    return sum(vals)
+
+
+def _sq(x):
+    return x * x
+
+
+def _plus1(x):
+    return x + 1
+
+
+def _want(n_leaves: int = 12, fan: int = 3) -> dict:
+    want = {i: i + 1 for i in range(n_leaves)}
+    tid = n_leaves
+    mids = []
+    for j in range(0, n_leaves, fan):
+        want[tid] = sum(want[i] for i in range(j, min(j + fan, n_leaves)))
+        mids.append(tid)
+        tid += 1
+    want[tid] = sum(want[m] for m in mids)
+    return want
+
+
+# ---------------------------------------------------------------------------
+# acceptance: parity matrix, relay bytes ~0 with p2p on
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport", ["pipe", "socket"])
+@pytest.mark.parametrize("server", SERVERS)
+def test_p2p_parity_and_relay_bytes(server, transport):
+    """p2p and server-mediated data planes produce bit-for-bit identical
+    results on both wire codecs and both transports; with p2p on, no
+    payload byte rides through the server while dependency data moves
+    worker-to-worker."""
+    # the same reduction shape the CI gate exercises (shared builder)
+    g = benchgraphs.value_reduction(12, fan=3)
+    want = _want()
+
+    rt = run_graph(g, server=server, runtime="thread", n_workers=3,
+                   timeout=60.0)
+    assert not rt.timed_out and rt.results == want
+
+    relay = run_graph(g, server=server, runtime="process", n_workers=3,
+                      transport=transport, start_method="fork",
+                      p2p=False, timeout=60.0)
+    p2p = run_graph(g, server=server, runtime="process", n_workers=3,
+                    transport=transport, start_method="fork",
+                    p2p=True, timeout=60.0)
+    assert not relay.timed_out and not p2p.timed_out
+    assert relay.results == p2p.results == want      # bit-for-bit
+    # server-mediated: every dependency byte relayed, nothing p2p
+    assert relay.stats["relay_bytes"] > 0
+    assert relay.stats["p2p_bytes"] == 0
+    # p2p: payloads left the server's data path entirely
+    assert p2p.stats["relay_bytes"] == 0
+    assert p2p.stats["p2p_bytes"] > 0
+    assert p2p.stats["p2p_fetches"] > 0
+    # per-epoch accounting carries the split too
+    assert p2p.epochs[0]["p2p_bytes"] > 0
+    assert p2p.epochs[0]["relay_bytes"] == 0
+
+
+def _maybe(v):
+    return 0 if v is None else v
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_p2p_fn_task_with_duration_dep_completes(server):
+    """A callable task depending on a duration-model task (which
+    produces no value anywhere) must run with None for that input —
+    thread-runtime semantics — not park forever waiting for a fetch
+    that can never succeed."""
+    g = TaskGraph([Task(0, (), duration=0.001),
+                   Task(1, (0,), fn=_maybe)], name="mixed")
+    rt = run_graph(g, server=server, runtime="thread", n_workers=2,
+                   timeout=30.0)
+    rp = run_graph(g, server=server, runtime="process", n_workers=2,
+                   p2p=True, timeout=30.0)
+    assert not rt.timed_out and not rp.timed_out
+    assert rt.results == rp.results == {1: 0}
+
+
+# ---------------------------------------------------------------------------
+# tentpole fallback: forced holder kill mid-graph
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_fetch_fallback_on_holder_death(server):
+    """Kill the only holder of a dependency after its consumer may have
+    been hinted at it: the consumer parks via fetch-failed, lineage
+    recomputes the dep, and the task completes with the right value."""
+    with Cluster(server=server, runtime="process", n_workers=3,
+                 transport="socket", timeout=60.0) as c:
+        f = c.client.submit(_leaf, 123)
+        assert f.result(30.0) == 123
+        holders = c.runtime._holders(f.tid)
+        assert holders
+        # drop the server-side copy so the fallback cannot shortcut
+        # through results, then kill the holder
+        c.runtime.results.pop(f.tid, None)
+        c.runtime.fail_worker(holders[0])
+        g = c.client.submit(_plus1, f)
+        assert g.result(30.0) == 124
+        # the dep was rematerialized by lineage on a surviving worker
+        assert any(w != holders[0] for w in c.runtime._holders(f.tid))
+
+
+# ---------------------------------------------------------------------------
+# satellite: gather for a never-cached key fails fast (silent-drop fix)
+# ---------------------------------------------------------------------------
+
+def test_gather_never_cached_key_fails_fast():
+    """Duration-model tasks cache no value: a gather for one must come
+    back as an explicit absent marker and fail the fetch quickly, not
+    spin the client's full timeout (the old worker silently dropped
+    unknown keys from its gather reply)."""
+    g = benchgraphs.merge(20, dur_ms=0.0)
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 transport="socket", simulate_durations=False,
+                 timeout=60.0) as c:
+        futs = c.client.submit_graph(g)
+        assert futs.wait(30.0)
+        t0 = time.perf_counter()
+        ok = c.runtime.fetch([futs[0].tid], timeout=10.0)
+        dt = time.perf_counter() - t0
+        assert not ok
+        assert dt < 5.0, f"fetch took {dt:.1f}s (spun the timeout)"
+
+
+def test_p2p_gather_refetches_from_worker_cache():
+    """p2p mode: results never ride finished frames, so Future.result
+    after a server-side drop must round-trip a gather to the worker
+    cache (the explicit gather-reply path)."""
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 transport="socket", timeout=60.0) as c:
+        f = c.client.submit(_sq, 6)
+        assert f.result(30.0) == 36
+        c.runtime.results.pop(f.tid)
+        assert f.result(30.0) == 36          # re-gathered over the wire
+        assert c.runtime.gather_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: gather retried when the chosen holder dies before delivery
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_gather_retries_after_holder_death(server):
+    """The gather targets one holder; if that worker dies before
+    delivering, the pending gather is re-issued (after lineage
+    recomputes the value) instead of hanging forever."""
+    with Cluster(server=server, runtime="process", n_workers=2,
+                 transport="socket", timeout=60.0) as c:
+        f = c.client.submit(_sq, 7)
+        assert f.result(30.0) == 49
+        holders = c.runtime._holders(f.tid)
+        c.runtime.results.pop(f.tid, None)
+        c.runtime.fail_worker(holders[0])
+        # whatever the interleaving (gather already in flight to the
+        # dying worker, or issued after), the client must get the value
+        assert f.result(30.0) == 49
+
+
+# ---------------------------------------------------------------------------
+# satellite: gather replies never re-enter completion accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_gather_reply_no_double_completion(server):
+    """Re-sent results (gather replies) must not flow through the
+    finished path: epoch counters stay exact and scheduler load
+    bookkeeping stays balanced after repeated re-fetches."""
+    with Cluster(server=server, runtime="process", n_workers=2,
+                 transport="socket", timeout=60.0) as c:
+        f = c.client.submit(_sq, 5)
+        assert f.result(30.0) == 25
+        for _ in range(3):
+            c.runtime.results.pop(f.tid)
+            assert f.result(30.0) == 25      # gather re-sends the value
+        e = c.runtime.epoch(f.eid)
+        assert e.remaining == 0              # exactly complete, never < 0
+        # completion ledger saw the task exactly once
+        assert f.tid in c.runtime._completed
+        deadline = time.perf_counter() + 5.0
+        sched = c.reactor.scheduler
+        while time.perf_counter() < deadline and any(sched.loads):
+            time.sleep(0.01)
+        assert not any(sched.loads), sched.loads
+
+
+# ---------------------------------------------------------------------------
+# satellite: worker caches shed refcount-GC'd keys
+# ---------------------------------------------------------------------------
+
+def test_worker_cache_evicts_unheld_keys():
+    """Keys that are neither client-held nor consumed downstream are
+    reclaimed by refcount GC server-side; the same signal must evict the
+    worker-side caches, or a long-lived pool retains every intermediate
+    forever.  Observable: a later gather for the evicted key answers
+    absent (fail-fast) while a still-held key gathers fine."""
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 transport="socket", timeout=60.0) as c:
+        rt = c.runtime
+        with c._lock:
+            base = c._next_tid
+            # leaf -> sink, submitted WITHOUT a client hold: once the
+            # sink finishes, the leaf has no waiters and is reclaimed
+            eid = rt.submit_tasks(
+                [Task(base, (), fn=_leaf, args=(11,)),
+                 Task(base + 1, (base,), fn=_plus1)], retain=False)
+            c._next_tid += 2
+        assert rt.wait_epoch(eid, 30.0)
+        # leaf reclaim + eviction frames are processed on the server
+        # loop right after the sink's completion; give them a beat
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline \
+                and not rt.reactor.is_released(base):
+            time.sleep(0.01)
+        assert rt.reactor.is_released(base)
+        rt.results.pop(base, None)
+        assert not rt.fetch([base], timeout=5.0)        # evicted
+        # the sink (no consumers, still MEMORY) is still gatherable
+        rt.results.pop(base + 1, None)
+        assert rt.fetch([base + 1], timeout=10.0)
+        assert rt.results[base + 1] == 12

@@ -53,14 +53,17 @@ def test_overhead_grows_with_tasks_not_scheduler():
 
 def test_workstealing_overhead_grows_with_workers():
     """Paper Fig. 8 (bottom): ws server cost rises with workers; random
-    stays ~flat."""
+    stays ~flat.  server_busy is a wall-clock measurement and scheduling
+    noise is strictly additive, so take the best of a few repetitions —
+    a single run is noisy enough to flip the ratio under machine load."""
     g = benchgraphs.merge(4000)
     busy = {}
     for w in (24, 336):
         for sched in ("ws", "random"):
-            r = simulate(g, server="dask", scheduler=sched, n_workers=w,
-                         zero_worker=True)
-            busy[(w, sched)] = r.server_busy
+            busy[(w, sched)] = min(
+                simulate(g, server="dask", scheduler=sched,
+                         n_workers=w, zero_worker=True).server_busy
+                for _ in range(4))
     grow_ws = busy[(336, "ws")] / busy[(24, "ws")]
     grow_rnd = busy[(336, "random")] / busy[(24, "random")]
     assert grow_ws > grow_rnd * 0.9  # ws grows at least as fast as random

@@ -15,14 +15,16 @@ from repro.core import transport as tp
 def test_dask_wire_roundtrip():
     wire = msg.DaskWire()
     frames = wire.encode_compute_batch([(3, 0.5), (7, 0.0)],
-                                       payloads={3: [1, 2]},
+                                       payloads={3: {0: 1, 1: 2}},
                                        inputs_of=lambda t: [0, 1])
     assert len(frames) == 2  # per-message
-    op, recs, payloads = wire.decode(frames[0])
+    op, recs, extra = wire.decode(frames[0])
     assert op == msg.OP_COMPUTE and recs == [(3, 0.5)]
-    assert payloads == {3: [1, 2]}
-    op, recs, payloads = wire.decode(frames[1])
-    assert recs == [(7, 0.0)] and payloads is None
+    assert extra["data"] == {3: {0: 1, 1: 2}}
+    assert extra["deps"] == {3: [0, 1]}     # ordered input tids
+    op, recs, extra = wire.decode(frames[1])
+    assert recs == [(7, 0.0)] and "data" not in (extra or {})
+    assert wire.take_payload_bytes() > 0    # relay data was coded twice
 
     fins = wire.encode_finished_batch(2, [(3, 42), (7, msg._NO_RESULT)])
     assert len(fins) == 2
@@ -106,6 +108,70 @@ def test_update_graph_wire_roundtrip():
     (bare,) = static.encode_update_graph(defs, None)
     op, recs, payloads = static.decode(bare)
     assert recs == defs and payloads is None
+
+
+@pytest.mark.parametrize("wire_name", ["dask", "rsds"])
+def test_p2p_wire_roundtrips(wire_name):
+    """Data-plane frames on both codecs: placement hints in compute
+    frames, fetch/fetch-reply, gather-reply with absent markers,
+    fetch-failed, data-addr registration and transfer-stats frames."""
+    wire = msg.make_wire(wire_name)
+
+    hints = {5: {2: ("127.0.0.1", 4242)}}
+    frames = wire.encode_compute_batch([(5, 0.0)], None,
+                                       inputs_of=lambda t: [2],
+                                       hints=hints, deps={5: [2]})
+    op, recs, extra = wire.decode(frames[0])
+    assert op == msg.OP_COMPUTE and recs == [(5, 0.0)]
+    assert extra["deps"][5] == [2]
+    assert tuple(extra["hints"][5][2]) == ("127.0.0.1", 4242)
+    assert "data" not in extra              # hinted, not inlined
+
+    (fframe,) = wire.encode_fetch([2, 9])
+    assert wire.decode(fframe) == (msg.OP_FETCH, [2, 9], None)
+
+    (rframe,) = wire.encode_fetch_reply({2: "val"}, [9])
+    op, absent, payload = wire.decode(rframe)
+    assert op == msg.OP_FETCH_REPLY
+    assert absent == [9] and payload == {2: "val"}
+
+    (gframe,) = wire.encode_gather_reply({}, [4])
+    op, absent, payload = wire.decode(gframe)
+    assert op == msg.OP_GATHER_REPLY
+    assert absent == [4] and payload is None   # explicit absent marker
+
+    (xframe,) = wire.encode_fetch_failed(7, [2, 3])
+    op, recs, _ = wire.decode(xframe)
+    assert op == msg.OP_FETCH_FAILED and recs == [(7, (2, 3))]
+
+    (aframe,) = wire.encode_data_addr(1, ("127.0.0.1", 9999))
+    op, recs, addr = wire.decode(aframe)
+    assert op == msg.OP_DATA_ADDR and recs == [1]
+    assert tuple(addr) == ("127.0.0.1", 9999)
+
+    (sframe,) = wire.encode_stats(4096, 3)
+    op, recs, _ = wire.decode(sframe)
+    assert op == msg.OP_STATS and recs == [(4096, 3)]
+
+
+def test_data_plane_listener_and_peer_channel():
+    """A DataPlaneListener answers framed requests from PeerChannels;
+    a dead listener surfaces as TransportClosed on the dialing side."""
+    served = []
+
+    def handler(frame: bytes) -> bytes:
+        served.append(frame)
+        return b"re:" + frame
+
+    listener = tp.DataPlaneListener(handler)
+    ch = tp.PeerChannel(listener.addr)
+    assert ch.request(b"abc", timeout=5.0) == b"re:abc"
+    assert ch.request(b"xyz", timeout=5.0) == b"re:xyz"
+    assert served == [b"abc", b"xyz"]
+    ch.close()
+    listener.close()
+    with pytest.raises(tp.TransportClosed):
+        tp.PeerChannel(listener.addr, connect_timeout=0.5)
 
 
 def test_release_and_gather_wire_roundtrip():
