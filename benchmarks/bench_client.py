@@ -24,6 +24,37 @@ from repro.core.client import Cluster
 SERVERS = ("dask", "rsds")
 
 
+def _bench_ingest(n_epochs: int = 40, m: int = 200) -> list[tuple]:
+    """Amortized ingestion: per-task extend+add_tasks cost on a warm
+    graph/reactor across many epochs.  With doubling-capacity buffers
+    the late epochs cost the same as the early ones (late/early ~1);
+    the old full-array np.concatenate/np.insert growth made this ratio
+    climb with total graph size."""
+    from repro.core.array_reactor import ArrayReactor
+    from repro.core.graph import Task, TaskGraph
+    from repro.core.schedulers import make_scheduler
+
+    g = TaskGraph([], name="ingest")
+    r = ArrayReactor(g, make_scheduler("rsds_ws"), 8,
+                     simulate_codec=False)
+    times = []
+    base = 0
+    for _ in range(n_epochs):
+        tasks = [Task(base + i, (base + i - 1,) if i else (), 0.0, 64.0)
+                 for i in range(m)]
+        t0 = time.perf_counter()
+        lo, hi = g.extend(tasks)
+        r.add_tasks(lo, hi, retain=True)
+        times.append(time.perf_counter() - t0)
+        base += m
+    early = float(np.mean(times[1:6])) * 1e6 / m
+    late = float(np.mean(times[-5:])) * 1e6 / m
+    return [("client/ingest-growth/per-task-us", round(late, 3),
+             f"early_us={early:.3f};late_us={late:.3f};"
+             f"late/early={late / max(early, 1e-9):.2f};"
+             f"epochs={n_epochs};tasks_per_epoch={m}")]
+
+
 def _bench_data_plane(server: str, n_workers: int) -> list[tuple]:
     """Server-relay vs p2p transfer bytes on a value-carrying reduction
     graph (process runtime): same graph, same results, measured split of
@@ -102,6 +133,7 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
                                n_workers))
         if runtime == "process":
             rows.extend(_bench_data_plane(server, n_workers))
+    rows.extend(_bench_ingest())
     return rows
 
 

@@ -4,13 +4,44 @@ Dask-style server, with work-stealing and with the random scheduler.
 ``run(runtime="thread"|"process")`` repeats the comparison on the
 wall-clock engines (small worker counts, instant tasks) where, for the
 process runtime, the two servers pay their real codec cost over an OS
-transport."""
+transport.  The process runtime additionally sweeps the
+server-architecture axis (blocking-selector vs asyncio event loop, same
+wire and scheduler) — the Dask-like-Python-server vs tight-loop-server
+comparison the paper's Dask-vs-rsds measurements hinge on."""
 from __future__ import annotations
 
 import argparse
 import sys
 
 from benchmarks.common import bench_suite, geomean, run_avg
+
+DRIVERS = ("selector", "asyncio")
+
+
+def _driver_axis(scale, n_workers: int = 4) -> list[tuple]:
+    """selector-vs-asyncio on each wire: same graph, same scheduler,
+    same workers — only the server's event loop changes."""
+    from repro.core import benchgraphs
+
+    rows = []
+    g = benchgraphs.merge(max(int(3000 * (scale or 0.04)), 60))
+    for server in ("dask", "rsds"):
+        per = {}
+        for driver in DRIVERS:
+            mk, _ = run_avg(g, server=server, scheduler="ws",
+                            n_workers=n_workers, runtime="process",
+                            reps=1, driver=driver,
+                            simulate_durations=False, timeout=120.0)
+            per[driver] = mk
+            rows.append((
+                f"server-arch/{server}/{driver}/{g.name}/w{n_workers}",
+                round(mk * 1e6 / g.n_tasks, 3) if mk else "",
+                "timeout" if mk is None else "driver-axis"))
+        if per.get("selector") and per.get("asyncio"):
+            rows.append((
+                f"server-arch/{server}/selector-vs-asyncio/w{n_workers}",
+                "", f"asyncio_speedup={per['selector'] / per['asyncio']:.3f}"))
+    return rows
 
 
 def run(scale=None, runtime: str = "sim") -> list[tuple]:
@@ -46,6 +77,8 @@ def run(scale=None, runtime: str = "sim") -> list[tuple]:
                      f"geomean_speedup={geomean(sp_ws):.3f}"))
         rows.append((f"table2{tag}/rsds_random_geomean/w{workers}", "",
                      f"geomean_speedup={geomean(sp_rnd):.3f}"))
+    if runtime == "process":
+        rows.extend(_driver_axis(scale))
     return rows
 
 

@@ -1,10 +1,11 @@
 """CI hang-catcher: one tiny graph end-to-end on EVERY runtime.
 
 Runs merge+tree graphs through the simulator, the thread runtime and the
-process runtime (both servers each), plus a warm persistent Cluster
-submitting back-to-back epochs on each runtime, each under a short
-watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
-seconds instead of waiting out the 300 s benchmark timeout.
+process runtime (both servers, both server drivers — blocking selector
+AND the asyncio event loop), plus a warm persistent Cluster submitting
+back-to-back epochs on each runtime, each under a short watchdog, and
+exits nonzero on any timeout/hang/error — so CI fails in seconds instead
+of waiting out the 300 s benchmark timeout.
 
     PYTHONPATH=src python scripts/ci_smoke.py
 """
@@ -19,22 +20,23 @@ import types
 WATCHDOG_S = 60.0   # per-case hard limit (process spawn included)
 
 
-def _warm_cluster_case(runtime: str, server: str):
+def _warm_cluster_case(runtime: str, server: str, driver: str = None):
     """Two graph epochs back-to-back on one persistent Cluster."""
     from repro.core import benchgraphs
     from repro.core.client import Cluster
 
     graphs = [benchgraphs.merge(60), benchgraphs.tree(5)]
     total = 0
+    kw = {"driver": driver} if driver else {}
     with Cluster(server=server, runtime=runtime, n_workers=3,
-                 simulate_durations=False, timeout=30) as c:
+                 simulate_durations=False, timeout=30, **kw) as c:
         for g in graphs:
             c.client.submit_graph(g).result(30)
             total += g.n_tasks
     return types.SimpleNamespace(timed_out=False, n_tasks=total)
 
 
-def _data_plane_case(server: str, p2p: bool):
+def _data_plane_case(server: str, p2p: bool, driver: str = "selector"):
     """Value-carrying reduction on the process runtime: checks result
     correctness AND that payload bytes moved on the expected plane
     (relay bytes ~0 with p2p on; the transfer split is reported so the
@@ -44,7 +46,7 @@ def _data_plane_case(server: str, p2p: bool):
     n = 12
     g = benchgraphs.value_reduction(n_leaves=n)
     r = run_graph(g, server=server, runtime="process", n_workers=3,
-                  p2p=p2p, timeout=30)
+                  p2p=p2p, driver=driver, timeout=30)
     want = n * (n + 1) // 2
     if not r.timed_out and r.results.get(n) != want:
         raise AssertionError(f"bad result {r.results.get(n)} != {want}")
@@ -73,15 +75,26 @@ def _cases():
                        lambda g=g, s=server, r=runtime: run_graph(
                            g, server=s, runtime=r, n_workers=3,
                            simulate_durations=False, timeout=30))
+    # server-architecture axis: the same graphs on the asyncio driver
+    for server in ("dask", "rsds"):
+        yield (f"asyncio/{server}/merge",
+               lambda s=server: run_graph(
+                   benchgraphs.merge(60), server=s, runtime="process",
+                   driver="asyncio", n_workers=3,
+                   simulate_durations=False, timeout=30))
     for runtime in ("thread", "process"):
         for server in ("dask", "rsds"):
             yield (f"client/{runtime}/{server}/warm2",
                    lambda r=runtime, s=server: _warm_cluster_case(r, s))
+    yield ("client/asyncio/rsds/warm2",
+           lambda: _warm_cluster_case("process", "rsds", "asyncio"))
     for server in ("dask", "rsds"):
         for p2p in (False, True):
             mode = "p2p" if p2p else "relay"
             yield (f"data/{server}/{mode}",
                    lambda s=server, p=p2p: _data_plane_case(s, p))
+    yield ("data/rsds/p2p-asyncio",
+           lambda: _data_plane_case("rsds", True, driver="asyncio"))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

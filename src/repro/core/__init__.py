@@ -9,6 +9,7 @@ from repro.core.graph import GraphBuilder, Task, TaskGraph
 from repro.core.reactor import ObjectReactor
 from repro.core.runtime import ProcessRuntime, RunResult, ThreadRuntime, \
     run_graph
+from repro.core.server import Driver, EpochStats, ServerCore
 from repro.core.schedulers import (DaskWorkStealing, HeftScheduler,
                                    RandomScheduler, RsdsWorkStealing,
                                    make_scheduler)

@@ -13,23 +13,13 @@ from typing import Iterable
 
 import numpy as np
 
-from repro.core.graph import TaskGraph
+from repro.core.graph import TaskGraph, csr_gather, grow_to
 from repro.core.reactor import (MEMORY, READY, RELEASED, WAITING,
                                 ReactorStats)
 from repro.core.schedulers import SchedulerBase
 
-
-def _csr_gather(indptr: np.ndarray, data: np.ndarray,
-                tids: np.ndarray) -> np.ndarray:
-    """Vectorized concatenation of CSR rows (no per-row Python loop)."""
-    starts = indptr[tids]
-    lens = (indptr[tids + 1] - starts).astype(np.int64)
-    total = int(lens.sum())
-    if total == 0:
-        return np.zeros(0, dtype=data.dtype)
-    offs = np.repeat(starts - np.concatenate(
-        ([0], np.cumsum(lens)[:-1])), lens)
-    return data[np.arange(total, dtype=np.int64) + offs]
+# back-compat alias (the CSR gather moved next to the CSR owner)
+_csr_gather = csr_gather
 
 
 class ArrayReactor:
@@ -48,11 +38,16 @@ class ArrayReactor:
         self.stats = ReactorStats()
         scheduler.attach(graph, n_workers, workers_per_node, seed)
         n = graph.n_tasks
-        self.state = np.full(n, WAITING, dtype=np.int8)
-        self.waiting_count = graph.in_degree.copy()
-        self.waiter_count = np.diff(graph.consumers_indptr).astype(np.int32)
-        self.primary = np.full(n, -1, dtype=np.int32)  # first data location
-        self.assigned = np.full(n, -1, dtype=np.int32)
+        # doubling-capacity buffers: the public arrays are views of the
+        # used prefix, so a warm epoch grows in amortized O(new)
+        self._state_buf = np.full(n, WAITING, dtype=np.int8)
+        self._waiting_buf = graph.in_degree.astype(np.int32)  # astype copies
+        self._waiter_buf = np.diff(
+            graph.consumers_indptr).astype(np.int32)
+        self._primary_buf = np.full(n, -1, dtype=np.int32)
+        self._assigned_buf = np.full(n, -1, dtype=np.int32)
+        self._n = n
+        self._refresh_views()
         self.n_done = 0
         # keys whose client hold was explicitly dropped (Client.release);
         # reclaimed values are logged in ``purged`` for the runtime
@@ -61,6 +56,30 @@ class ArrayReactor:
         # every reclaimed key (refcount GC included): drained by the
         # process runtime to evict worker-side caches
         self.reclaimed: list[int] = []
+
+    def _refresh_views(self) -> None:
+        n = self._n
+        self.state = self._state_buf[:n]
+        self.waiting_count = self._waiting_buf[:n]
+        self.waiter_count = self._waiter_buf[:n]
+        self.primary = self._primary_buf[:n]
+        self.assigned = self._assigned_buf[:n]
+
+    def _grow(self, n_new: int, state_fill: int = WAITING) -> None:
+        """Append ``n_new`` task slots (amortized-doubling buffers)."""
+        n_old, n = self._n, self._n + n_new
+        self._state_buf = grow_to(self._state_buf, n_old, n)
+        self._state_buf[n_old:n] = state_fill
+        self._waiting_buf = grow_to(self._waiting_buf, n_old, n)
+        self._waiting_buf[n_old:n] = 0
+        self._waiter_buf = grow_to(self._waiter_buf, n_old, n)
+        self._waiter_buf[n_old:n] = 0
+        self._primary_buf = grow_to(self._primary_buf, n_old, n)
+        self._primary_buf[n_old:n] = -1
+        self._assigned_buf = grow_to(self._assigned_buf, n_old, n)
+        self._assigned_buf[n_old:n] = -1
+        self._n = n
+        self._refresh_views()
 
     # ------------------------------------------------------------------
     def _assign(self, ready: np.ndarray) -> list[tuple[int, int]]:
@@ -88,17 +107,7 @@ class ArrayReactor:
         (released via :meth:`release_keys`)."""
         self.scheduler.on_graph_extended()
         g = self.graph
-        n_new = hi - lo
-        self.state = np.concatenate(
-            [self.state, np.full(n_new, WAITING, dtype=np.int8)])
-        self.waiting_count = np.concatenate(
-            [self.waiting_count, np.zeros(n_new, dtype=np.int32)])
-        self.waiter_count = np.concatenate(
-            [self.waiter_count, np.zeros(n_new, dtype=np.int32)])
-        self.primary = np.concatenate(
-            [self.primary, np.full(n_new, -1, dtype=np.int32)])
-        self.assigned = np.concatenate(
-            [self.assigned, np.full(n_new, -1, dtype=np.int32)])
+        self._grow(hi - lo, WAITING)
         ready = []
         for tid in range(lo, hi):
             missing = 0
@@ -122,18 +131,8 @@ class ArrayReactor:
         for a failed epoch, keeping reactor and graph tid spaces
         aligned so later epochs stay submittable."""
         self.scheduler.on_graph_extended()
-        n_new = hi - lo
-        self.state = np.concatenate(
-            [self.state, np.full(n_new, RELEASED, dtype=np.int8)])
-        self.waiting_count = np.concatenate(
-            [self.waiting_count, np.zeros(n_new, dtype=np.int32)])
-        self.waiter_count = np.concatenate(
-            [self.waiter_count, np.zeros(n_new, dtype=np.int32)])
-        self.primary = np.concatenate(
-            [self.primary, np.full(n_new, -1, dtype=np.int32)])
-        self.assigned = np.concatenate(
-            [self.assigned, np.full(n_new, -1, dtype=np.int32)])
-        self.n_done += n_new   # they never run; keep done() consistent
+        self._grow(hi - lo, RELEASED)
+        self.n_done += hi - lo   # they never run; keep done() consistent
 
     def release_keys(self, tids) -> list[int]:
         """Drop the client hold on ``tids``; returns the tids whose data
@@ -202,8 +201,9 @@ class ArrayReactor:
         self._reclaim_dropped(tids)
 
         g = self.graph
-        # consumers of all finished tasks (CSR gather, vectorized)
-        cons = _csr_gather(g.consumers_indptr, g.consumers, tids)
+        # consumers of all finished tasks (CSR gather, vectorized;
+        # overflow-tolerant so it never forces an O(total) compaction)
+        cons = g.consumers_of_many(tids)
         if len(cons):
             np.subtract.at(self.waiting_count, cons, 1)
             cand = np.unique(cons)
@@ -212,7 +212,7 @@ class ArrayReactor:
         else:
             ready = np.zeros(0, dtype=np.int64)
         # refcount GC on the inputs of finished tasks
-        deps = _csr_gather(g.inputs_indptr, g.inputs_flat, tids)
+        deps = csr_gather(g.inputs_indptr, g.inputs_flat, tids)
         if len(deps):
             np.subtract.at(self.waiter_count, deps, 1)
             dead = np.unique(deps)

@@ -329,6 +329,15 @@ class Cluster:
         from repro.core.reactor import ObjectReactor
         from repro.core.schedulers import make_scheduler
 
+        # server-architecture axis: server="selector"|"asyncio" is
+        # shorthand for the RSDS wire on that event-loop driver (forces
+        # the process runtime); driver= composes with any wire flavour
+        driver = kw.pop("driver", None)
+        if server in ("selector", "asyncio"):
+            driver = driver or server
+            server = "rsds"
+        if driver is not None and driver != "inproc":
+            runtime = "process"
         sched_name = {"ws": "dask_ws" if server == "dask" else "rsds_ws",
                       "random": "random", "heft": "heft"}[scheduler]
         sched = make_scheduler(sched_name)
@@ -345,10 +354,13 @@ class Cluster:
             self.reactor = cls(self.graph, sched, n_workers, seed=seed,
                                simulate_codec=False)
             self.runtime = ProcessRuntime(self.graph, self.reactor,
-                                          n_workers, **kw)
+                                          n_workers,
+                                          driver=driver or "selector",
+                                          **kw)
         else:
             raise ValueError(
                 f"unknown runtime {runtime!r} (want thread|process)")
+        self.server_driver = self.runtime.driver.name
         self._lock = threading.RLock()
         self._next_tid = 0
         self._released: set[int] = set()
@@ -389,17 +401,7 @@ class Cluster:
             timed_out = not gf.fetch_missing()
         else:
             makespan = time.perf_counter() - (e.t_submit or e.t_ingest)
-        stats = self.reactor.stats.as_dict()
-        if isinstance(rt, ProcessRuntime):
-            stats.update(wire_bytes=rt.wire_bytes,
-                         wire_frames=rt.wire_frames,
-                         codec_s=round(rt.codec_s, 6),
-                         transport=rt.transport_kind,
-                         p2p=rt.p2p,
-                         relay_bytes=rt.relay_bytes,
-                         p2p_bytes=rt.p2p_bytes,
-                         gather_bytes=rt.gather_bytes,
-                         p2p_fetches=rt.n_p2p_fetches)
+        stats = rt.run_stats()     # reactor + driver wire/codec meters
         return RunResult(makespan=makespan, n_tasks=len(gf),
                          server_busy=rt.server_busy, stats=stats,
                          results=gf.raw_results(),

@@ -14,6 +14,14 @@ code never has to produce dense topologically-ordered tids by hand —
 :class:`GraphBuilder` accepts tasks under arbitrary hashable keys, in any
 order (forward references buffer until their dependencies arrive), and
 assigns dense tids at flush time.
+
+Storage is amortized for fine-grained submitters: every per-task column
+lives in a doubling-capacity buffer (the public arrays are views of the
+used prefix), and the consumers CSR absorbs new epoch edges into an
+overflow side table that is merged back in bulk only when it has grown to
+a constant fraction of the merged part — so a warm ``submit_graph`` epoch
+costs O(new tasks) amortized instead of the old full-array
+``np.concatenate``/``np.insert`` O(total) rebuild.
 """
 from __future__ import annotations
 
@@ -22,6 +30,31 @@ import dataclasses
 from typing import Any, Callable, Sequence
 
 import numpy as np
+
+_EMPTY_I32 = np.zeros(0, dtype=np.int32)
+
+
+def grow_to(buf: np.ndarray, used: int, need: int) -> np.ndarray:
+    """Amortized-doubling capacity buffer: a buffer with room for ``need``
+    entries, copying only the ``used`` prefix when reallocation is due."""
+    if need <= len(buf):
+        return buf
+    out = np.empty(max(need, 2 * len(buf), 16), dtype=buf.dtype)
+    out[:used] = buf[:used]
+    return out
+
+
+def csr_gather(indptr: np.ndarray, data: np.ndarray,
+               tids: np.ndarray) -> np.ndarray:
+    """Vectorized concatenation of CSR rows (no per-row Python loop)."""
+    starts = indptr[tids]
+    lens = (indptr[tids + 1] - starts).astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=data.dtype)
+    offs = np.repeat(starts - np.concatenate(
+        ([0], np.cumsum(lens)[:-1])), lens)
+    return data[np.arange(total, dtype=np.int64) + offs]
 
 
 @dataclasses.dataclass
@@ -57,11 +90,11 @@ class TaskGraph:
         ``n_tasks``; inputs may reference any earlier tid, including prior
         epochs).  Returns the appended ``(lo, hi)`` tid range.
 
-        Incremental: Python-level work is O(new tasks); array growth is
-        vectorized appends, and the consumers CSR is merged in place (a
-        memcpy-bound ``np.insert`` when new edges land in old rows, a pure
-        append when they do not), so a long-lived Cluster ingesting many
-        epochs never pays a per-task Python rebuild of the whole graph."""
+        Incremental and amortized: Python-level work is O(new tasks),
+        array growth rides the doubling-capacity buffers, and new
+        consumer edges land in an overflow side table merged back in
+        bulk on a doubling schedule — a long-lived Cluster ingesting
+        many epochs pays O(new) per epoch, not O(total)."""
         tasks = list(tasks)
         lo = len(self.tasks)
         self._validate(tasks, lo)
@@ -71,67 +104,116 @@ class TaskGraph:
 
     def _build_arrays(self) -> None:
         self.n_tasks = 0
-        self.durations = np.zeros(0, dtype=np.float64)
-        self.sizes = np.zeros(0, dtype=np.float64)
-        self.in_degree = np.zeros(0, dtype=np.int32)
         self.n_deps = 0
-        self.inputs_indptr = np.zeros(1, dtype=np.int64)
-        self.inputs_flat = np.zeros(0, dtype=np.int32)
-        self.consumers_indptr = np.zeros(1, dtype=np.int64)
-        self.consumers = np.zeros(0, dtype=np.int32)
+        self._dur_buf = np.zeros(0, dtype=np.float64)
+        self._siz_buf = np.zeros(0, dtype=np.float64)
+        self._deg_buf = np.zeros(0, dtype=np.int32)
+        self._iflat_buf = np.zeros(0, dtype=np.int32)
+        self._iptr_buf = np.zeros(1, dtype=np.int64)
+        # consumers CSR: merged part + per-row overflow lists for edges
+        # appended since the last compaction
+        self._cons_buf = np.zeros(0, dtype=np.int32)
+        self._cons_ptr_buf = np.zeros(1, dtype=np.int64)
+        self._cons_rows = 0          # rows covered by the merged part
+        self._cons_used = 0          # edges in the merged part
+        self._extra_cons: dict[int, list[int]] = {}
+        self._n_extra = 0
+        self._refresh_views()
         if self.tasks:
             self._append_arrays(self.tasks)
 
-    def _append_arrays(self, new: Sequence[Task]) -> None:
-        self.n_tasks = len(self.tasks)
+    def _refresh_views(self) -> None:
         n = self.n_tasks
-        self.durations = np.concatenate(
-            [self.durations,
-             np.array([t.duration for t in new], dtype=np.float64)])
-        self.sizes = np.concatenate(
-            [self.sizes,
-             np.array([t.output_size for t in new], dtype=np.float64)])
-        new_deg = np.array([len(t.inputs) for t in new], dtype=np.int32)
-        self.in_degree = np.concatenate([self.in_degree, new_deg])
-        self.n_deps = int(self.n_deps + new_deg.sum())
-        # inputs CSR: rows are appended in tid order, so flat inputs and
-        # the indptr just grow
-        new_flat = (np.concatenate(
-            [np.asarray(t.inputs, dtype=np.int32) for t in new])
-            if new_deg.sum() else np.zeros(0, dtype=np.int32))
-        self.inputs_flat = np.concatenate([self.inputs_flat, new_flat])
-        self.inputs_indptr = np.concatenate(
-            [self.inputs_indptr,
-             self.inputs_indptr[-1] + np.cumsum(new_deg, dtype=np.int64)])
-        # consumers CSR: merge the epoch's edges in place.  Edge k is
-        # (src=new_flat[k], dst=owning task); each edge lands at the END
-        # of its src row (new dsts are larger than every existing one),
-        # so a stable src-sort of the NEW edges + one np.insert keeps
-        # rows in ascending-consumer order without re-sorting old edges.
-        old_indptr = self.consumers_indptr
-        old_n = n - len(new)
-        if len(new_flat):
-            new_dst = np.repeat(np.arange(old_n, n, dtype=np.int32),
-                                new_deg)
-            order = np.argsort(new_flat, kind="stable")
-            src_sorted = new_flat[order]
-            pos = np.where(
-                src_sorted < old_n,
-                old_indptr[np.minimum(src_sorted + 1, old_n)],
-                len(self.consumers))
-            self.consumers = np.insert(self.consumers, pos,
-                                       new_dst[order])
-            counts = np.concatenate(
-                [np.diff(old_indptr),
-                 np.zeros(len(new), dtype=np.int64)])
-            counts += np.bincount(new_flat, minlength=n)
-            self.consumers_indptr = np.zeros(n + 1, dtype=np.int64)
-            np.cumsum(counts, out=self.consumers_indptr[1:])
-        else:
-            # no new edges: old rows untouched, new rows are empty
-            self.consumers_indptr = np.concatenate(
-                [old_indptr,
-                 np.full(len(new), old_indptr[-1], dtype=np.int64)])
+        self.durations = self._dur_buf[:n]
+        self.sizes = self._siz_buf[:n]
+        self.in_degree = self._deg_buf[:n]
+        self.inputs_flat = self._iflat_buf[:self.n_deps]
+        self.inputs_indptr = self._iptr_buf[:n + 1]
+
+    def _append_arrays(self, new: Sequence[Task]) -> None:
+        n_old = self.n_tasks
+        n_new = len(new)
+        n = n_old + n_new
+        self._dur_buf = grow_to(self._dur_buf, n_old, n)
+        self._dur_buf[n_old:n] = [t.duration for t in new]
+        self._siz_buf = grow_to(self._siz_buf, n_old, n)
+        self._siz_buf[n_old:n] = [t.output_size for t in new]
+        new_deg = np.fromiter((len(t.inputs) for t in new),
+                              dtype=np.int32, count=n_new)
+        self._deg_buf = grow_to(self._deg_buf, n_old, n)
+        self._deg_buf[n_old:n] = new_deg
+        tot_new = int(new_deg.sum())
+        # inputs CSR: rows arrive in tid order, so flat inputs and the
+        # indptr are pure appends into the capacity buffers
+        if tot_new:
+            new_flat = np.concatenate(
+                [np.asarray(t.inputs, dtype=np.int32) for t in new])
+            self._iflat_buf = grow_to(self._iflat_buf, self.n_deps,
+                                      self.n_deps + tot_new)
+            self._iflat_buf[self.n_deps:self.n_deps + tot_new] = new_flat
+        self._iptr_buf = grow_to(self._iptr_buf, n_old + 1, n + 1)
+        self._iptr_buf[n_old + 1:n + 1] = \
+            self._iptr_buf[n_old] + np.cumsum(new_deg, dtype=np.int64)
+        self.n_deps += tot_new
+        # consumers CSR: new edges go to the overflow side table (new
+        # dsts are larger than every existing consumer, so merged row +
+        # overflow stays in ascending order); bulk-merge on a doubling
+        # schedule keeps the amortized cost O(1) per edge
+        if tot_new:
+            extra = self._extra_cons
+            for t in new:
+                for d in t.inputs:
+                    extra.setdefault(int(d), []).append(t.tid)
+            self._n_extra += tot_new
+        self.n_tasks = n
+        self._refresh_views()
+        if self._n_extra >= max(64, self._cons_used):
+            self._compact_consumers()
+
+    def _compact_consumers(self) -> None:
+        """Merge overflow consumer edges into the contiguous CSR (one
+        vectorized pass over the merged part, O(new) Python over rows
+        that gained edges)."""
+        n = self.n_tasks
+        m = self._cons_rows
+        used = self._cons_used
+        mptr = self._cons_ptr_buf[:m + 1]
+        counts = np.zeros(n, dtype=np.int64)
+        mlen = np.diff(mptr)
+        counts[:m] = mlen
+        for t, v in self._extra_cons.items():
+            counts[t] += len(v)
+        new_ptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(counts, out=new_ptr[1:])
+        total = int(new_ptr[-1])
+        new_dat = np.empty(total, dtype=np.int32)
+        if used:
+            idx = np.arange(used, dtype=np.int64) + \
+                np.repeat(new_ptr[:m] - mptr[:-1], mlen)
+            new_dat[idx] = self._cons_buf[:used]
+        for t, v in self._extra_cons.items():
+            s = int(new_ptr[t] + (mlen[t] if t < m else 0))
+            new_dat[s:s + len(v)] = v
+        self._cons_buf = new_dat
+        self._cons_ptr_buf = new_ptr
+        self._cons_rows = n
+        self._cons_used = total
+        self._extra_cons = {}
+        self._n_extra = 0
+
+    @property
+    def consumers(self) -> np.ndarray:
+        """Contiguous consumers CSR data (compacts pending overflow
+        edges first — hot paths use :meth:`consumers_of_many` instead)."""
+        if self._n_extra or self._cons_rows != self.n_tasks:
+            self._compact_consumers()
+        return self._cons_buf[:self._cons_used]
+
+    @property
+    def consumers_indptr(self) -> np.ndarray:
+        if self._n_extra or self._cons_rows != self.n_tasks:
+            self._compact_consumers()
+        return self._cons_ptr_buf[:self.n_tasks + 1]
 
     # ------------------------------------------------------------------
     # Properties matching the paper's Table I columns
@@ -165,8 +247,39 @@ class TaskGraph:
         return float(self.durations.sum())
 
     def consumers_of(self, tid: int) -> np.ndarray:
-        return self.consumers[self.consumers_indptr[tid]:
-                              self.consumers_indptr[tid + 1]]
+        tid = int(tid)
+        base = (self._cons_buf[self._cons_ptr_buf[tid]:
+                               self._cons_ptr_buf[tid + 1]]
+                if tid < self._cons_rows else _EMPTY_I32)
+        extra = self._extra_cons.get(tid)
+        if not extra:
+            return base
+        return np.concatenate([base, np.asarray(extra, dtype=np.int32)])
+
+    def consumers_of_many(self, tids: np.ndarray) -> np.ndarray:
+        """Concatenated consumers of ``tids`` (order unspecified): the
+        reactor's hot-path gather, tolerant of not-yet-compacted epoch
+        edges so it never forces an O(total) merge."""
+        tids = np.asarray(tids, dtype=np.int64)
+        m = self._cons_rows
+        ptr = self._cons_ptr_buf[:m + 1]
+        if self._n_extra == 0 and m == self.n_tasks:
+            return csr_gather(ptr, self._cons_buf, tids)
+        parts = []
+        inb = tids[tids < m]
+        if len(inb):
+            parts.append(csr_gather(ptr, self._cons_buf, inb))
+        if self._extra_cons:
+            flat: list[int] = []
+            for t in tids.tolist():
+                v = self._extra_cons.get(int(t))
+                if v:
+                    flat.extend(v)
+            if flat:
+                parts.append(np.asarray(flat, dtype=np.int32))
+        if not parts:
+            return _EMPTY_I32
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
     def inputs_of(self, tid: int) -> np.ndarray:
         return self.inputs_flat[self.inputs_indptr[tid]:

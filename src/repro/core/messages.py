@@ -467,3 +467,26 @@ def make_wire(server_name: str):
     """Wire codec for a reactor flavour: dask -> per-message msgpack,
     rsds -> static batched frames."""
     return DaskWire() if server_name == "dask" else StaticWire()
+
+
+def frame_event(op: int, wid: int, recs, payloads):
+    """Normalize one decoded worker frame into the
+    :class:`repro.core.server.ServerCore` event vocabulary.
+
+    This is the codec hook every server driver shares (selector and
+    asyncio alike): the driver decodes with its wire codec — paying that
+    codec's cost profile — and hands the core uniform events, so protocol
+    handling never forks per driver.  Returns ``None`` for ops the server
+    ignores."""
+    if op == OP_FINISHED:
+        return ("finished", [(int(t), int(w)) for t, w, _ in recs],
+                payloads)
+    if op == OP_GATHER_REPLY:
+        return ("gather-reply", wid, recs, payloads)
+    if op == OP_FETCH_FAILED:
+        return ("fetch-failed", wid, recs)
+    if op == OP_DATA_ADDR:
+        return ("data-addr", int(recs[0]), tuple(payloads))
+    if op == OP_STATS:
+        return ("stats", recs)
+    return None

@@ -1,39 +1,35 @@
-"""Real-time (wall-clock) execution engines.
+"""Real-time (wall-clock) execution engines: drivers + engine shells.
 
-:class:`ThreadRuntime` — server thread + worker threads connected by an
-:class:`repro.core.transport.InprocTransport`.  Tasks are real Python
-callables (or calibrated sleeps, or zero-worker instant completions), the
-server is a real event loop around a reactor, and the measured makespan
-includes every genuine runtime overhead.  Workers are threads — the GIL is
-released during sleeps and numpy/JAX work, matching the paper's
-single-threaded-worker setup.  Also the substrate for the framework
-integration: the trainer/serving engine submit task graphs here.
+The protocol state machine lives ONCE in
+:class:`repro.core.server.ServerCore`; this module supplies the execution
+drivers that plug into it — how bytes move, how workers live, and which
+event-loop architecture the server runs on (the axis the paper's
+Dask-vs-rsds comparison is really about):
 
-:class:`ProcessRuntime` — the same contract with workers as separate OS
-processes behind a pluggable byte transport (pipe or localhost socket).
-Task payloads and completions cross the transport as real bytes: the
-Dask-style server pays msgpack encode/decode *per message*, the RSDS-style
-server packs a static frame layout *once per batch*
-(:mod:`repro.core.messages` wire codecs), so the paper's codec-overhead
-asymmetry is measured instead of simulated.  Worker-process kill is a
-first-class failure injection (``fail_worker`` sends SIGKILL; the server
-detects the death and resubmits through the reactor's lineage machinery).
+* :class:`InprocDriver` — worker *threads* over object queues
+  (:class:`repro.core.transport.InprocTransport`); no codec is paid on
+  the channel (the Dask-style reactor keeps simulating it).
+* :class:`SelectorDriver` — worker *processes* behind a byte transport
+  (pipe or localhost socket) served by a blocking-selector loop; frames
+  pay the real wire codec (:mod:`repro.core.messages`).
+* :class:`AsyncioDriver` — the same worker processes and wire codecs,
+  served by an **asyncio** event loop with StreamReader/StreamWriter
+  endpoints — the Dask-like-Python-server architecture, selectable as
+  ``run_graph(..., server="asyncio")`` / ``Cluster(server="asyncio")`` or
+  per-engine via ``ProcessRuntime(driver="asyncio")``, so
+  selector-vs-asyncio becomes a measurable axis.
 
-Both engines are *persistent servers*: ``start()`` brings up the worker
-pool and server loop, ``submit_tasks()`` ingests a new graph **epoch**
-(an appended dense tid range) without restarting anything,
-``wait_epoch()`` blocks on one epoch's completion, ``release_tasks()``
-drops client-held results, and ``shutdown()`` tears the pool down.  The
-one-shot ``run()`` is a thin wrapper over that lifecycle (start → one
-epoch → wait → shutdown) preserving the original semantics, and the
-user-facing surface lives in :mod:`repro.core.client`
-(``Cluster``/``Client``/``Future``).
+:class:`ThreadRuntime` and :class:`ProcessRuntime` are thin shells over
+:class:`~repro.core.server.ServerCore` preserving the original public
+surface (``start``/``submit_tasks``/``wait_epoch``/``fetch``/
+``fail_worker``/``run``/``shutdown``, plus the attributes the fault/
+elasticity utilities poke).  The one-shot ``run()`` wraps the persistent
+lifecycle; the user-facing surface lives in :mod:`repro.core.client`.
 """
 from __future__ import annotations
 
-import bisect
+import asyncio
 import collections
-import dataclasses
 import multiprocessing as mp
 import os
 import queue
@@ -44,483 +40,139 @@ from typing import Any
 
 from repro.core import messages as msg
 from repro.core import transport as tp
-from repro.core.graph import Task, TaskGraph
+from repro.core.graph import TaskGraph
+from repro.core.server import Driver, EpochStats, RunResult, ServerCore
+
+__all__ = ["EpochStats", "RunResult", "ServerCore", "Driver",
+           "InprocDriver", "SelectorDriver", "AsyncioDriver",
+           "ThreadRuntime", "ProcessRuntime", "run_graph"]
 
 
-@dataclasses.dataclass
-class EpochStats:
-    """Per-epoch accounting: one record per ``submit_tasks`` call (the
-    one-shot ``run()`` registers a single epoch spanning its graph)."""
-    eid: int
-    n_tasks: int
-    t_submit: float = 0.0          # client-side submission timestamp
-    t_ingest: float = 0.0          # server-side ingestion timestamp
-    t_done: float = 0.0            # all tasks completed at least once
-    lo: int = -1                   # global tid range [lo, hi)
-    hi: int = -1
-    remaining: int = -1
-    server_busy0: float = 0.0      # server_busy snapshot at ingest
-    server_busy1: float = 0.0      # server_busy snapshot at completion
-    relay_bytes0: int = 0          # server-relayed payload-byte snapshots
-    relay_bytes1: int = 0
-    p2p_bytes0: int = 0            # direct worker↔worker payload bytes
-    p2p_bytes1: int = 0
-    error: BaseException | None = None
-    done_evt: threading.Event = dataclasses.field(
-        default_factory=threading.Event)
+# ---------------------------------------------------------------------------
+# In-process driver (thread workers)
+# ---------------------------------------------------------------------------
 
-    @property
-    def makespan(self) -> float:
-        """Client-visible per-epoch makespan (submission to completion)."""
-        return max(self.t_done - (self.t_submit or self.t_ingest), 0.0)
+class InprocDriver(Driver):
+    """Thread workers over object queues.  No wire, no worker caches:
+    results land directly in ``core.results``, so the remote half of the
+    protocol (gather/update-graph/release frames) stays inert."""
 
-    @property
-    def server_busy(self) -> float:
-        return max(self.server_busy1 - self.server_busy0, 0.0)
+    name = "inproc"
+    remote_results = False
+    transport_kind = "inproc"
+    transport: tp.InprocTransport    # wired by the ThreadRuntime shell
 
-    @property
-    def relay_bytes(self) -> int:
-        """Task payload bytes that rode through the server while this
-        epoch was in flight (~0 on the p2p data plane)."""
-        return max(self.relay_bytes1 - self.relay_bytes0, 0)
+    def start_workers(self) -> None:
+        core = self.core
+        for w in range(core.n_workers):
+            threading.Thread(target=core._worker_loop, args=(w,),
+                             daemon=True).start()
 
-    @property
-    def p2p_bytes(self) -> int:
-        """Payload bytes moved worker-to-worker while this epoch was in
-        flight (0 on the server-mediated data plane)."""
-        return max(self.p2p_bytes1 - self.p2p_bytes0, 0)
-
-    def as_dict(self) -> dict:
-        return {"eid": self.eid, "n_tasks": self.n_tasks,
-                "makespan": self.makespan,
-                "server_busy": self.server_busy,
-                "relay_bytes": self.relay_bytes,
-                "p2p_bytes": self.p2p_bytes,
-                "error": repr(self.error) if self.error else None}
-
-
-@dataclasses.dataclass
-class RunResult:
-    makespan: float
-    n_tasks: int
-    server_busy: float
-    stats: dict
-    results: dict
-    timed_out: bool = False
-    epochs: tuple = ()
-
-    @property
-    def aot(self) -> float:
-        return self.makespan / max(self.n_tasks, 1)
-
-
-def _check_epoch_deps(graph: TaskGraph, reactor, tasks) -> None:
-    """Reject an epoch referencing released keys BEFORE any state is
-    mutated: raising from inside ``graph.extend``/``reactor.add_tasks``
-    would leave the persistent graph and reactor half-wired (tasks
-    registered but never runnable, waiter refcounts pinned forever)."""
-    n_known = graph.n_tasks
-    for t in tasks:
-        for d in t.inputs:
-            d = int(d)
-            if d < n_known and reactor.is_released(d):
-                raise ValueError(
-                    f"task {t.tid} depends on released key {d}")
-
-
-class _EpochLedger:
-    """Mixin: per-epoch completion tracking shared by both engines.
-
-    Epochs are contiguous global tid ranges appended in submission order;
-    a task counts as complete on its *first* finished event, so lineage
-    re-execution after a worker loss never un-completes an epoch."""
-
-    def _init_epochs(self) -> None:
-        self._epochs: list[EpochStats] = []
-        self._epoch_lock = threading.Lock()
-        self._completed: set[int] = set()
-        self._range_los: list[int] = []      # parallel to _range_epochs
-        self._range_epochs: list[EpochStats] = []
-
-    def _register_epoch(self, n_tasks: int) -> EpochStats:
-        with self._epoch_lock:
-            e = EpochStats(eid=len(self._epochs), n_tasks=n_tasks,
-                           t_submit=time.perf_counter())
-            self._epochs.append(e)
-        return e
-
-    def _bind_epoch(self, e: EpochStats, lo: int, hi: int) -> None:
-        e.lo, e.hi, e.remaining = lo, hi, hi - lo
-        e.t_ingest = time.perf_counter()
-        e.server_busy0 = self.server_busy
-        e.relay_bytes0 = getattr(self, "relay_bytes", 0)
-        e.p2p_bytes0 = getattr(self, "p2p_bytes", 0)
-        self._range_los.append(lo)
-        self._range_epochs.append(e)
-        if e.remaining == 0:
-            self._finish_epoch(e)
-
-    def _finish_epoch(self, e: EpochStats,
-                      error: BaseException | None = None) -> None:
-        if e.done_evt.is_set():
-            return
-        e.error = e.error or error
-        e.t_done = time.perf_counter()
-        e.server_busy1 = self.server_busy
-        e.relay_bytes1 = getattr(self, "relay_bytes", 0)
-        e.p2p_bytes1 = getattr(self, "p2p_bytes", 0)
-        e.done_evt.set()
-
-    def _fail_epoch(self, e: EpochStats, error: BaseException) -> None:
-        self._finish_epoch(e, error=error)
-
-    def _quarantine_epoch(self, e: EpochStats, tasks,
-                          exc: BaseException) -> None:
-        """Epoch ingestion failed before (or during) wiring: tids were
-        already allocated client-side, so fill the range with inert
-        released placeholders to keep the dense tid space aligned — one
-        poisoned submission must not brick every later epoch."""
+    def poll(self, timeout: float) -> list[tuple]:
+        core = self.core
         try:
-            lo = self.g.n_tasks
-            if tasks and tasks[0].tid == lo:
-                self.g.extend([Task(lo + i, ())
-                               for i in range(len(tasks))])
-                self.reactor.add_poisoned(lo, lo + len(tasks))
-        except BaseException:
-            pass
-        self._fail_epoch(e, exc)
+            first = self.transport.recv(timeout=timeout)
+        except queue.Empty:
+            return []
+        # drain for batching (RSDS-style batch processing)
+        batch = [first] + self.transport.drain()
+        events: list[tuple] = []
+        fins: list[tuple[int, int]] = []
+        for ev in batch:
+            kind = ev[0]
+            if kind == "finished":
+                fins.append((int(ev[1]), int(ev[2])))
+            elif kind == "worker-lost":
+                events.append(("lost", ev[1], list(ev[2])))
+            elif kind == "lost-route":
+                events.append(("lost", ev[2], [ev[1]]))
+            elif kind == "stop":
+                core._stop_requested = True
+            elif kind in ("epoch", "release"):
+                core._submit_q.put(ev)     # legacy injection path
+        if fins:
+            events.append(("finished", fins, None))
+        return events
 
-    def _fail_open_epochs(self, error: BaseException) -> None:
-        for e in self._epochs:
-            if not e.done_evt.is_set():
-                self._fail_epoch(e, error)
+    def wake(self) -> None:
+        self.transport.inject(("wake",))
 
-    def _note_finished(self, tids) -> None:
-        for tid in tids:
-            tid = int(tid)
-            if tid in self._completed:
-                continue
-            self._completed.add(tid)
-            i = bisect.bisect_right(self._range_los, tid) - 1
-            if i < 0:
-                continue
-            e = self._range_epochs[i]
-            if tid < e.hi:
-                e.remaining -= 1
-                if e.remaining <= 0:
-                    self._finish_epoch(e)
+    # -- queue accounting: dict-of-lists guarded by the runtime lock
+    # (worker threads dequeue under the same lock; fail_worker snapshots
+    # it from any thread) --------------------------------------------------
 
-    # public epoch surface (used by the Cluster/Client layer) ----------
-    def wait_epoch(self, eid: int, timeout: float | None = None) -> bool:
-        return self._epochs[eid].done_evt.wait(timeout)
-
-    def epoch(self, eid: int) -> EpochStats:
-        return self._epochs[eid]
-
-    def epoch_dicts(self) -> tuple:
-        return tuple(e.as_dict() for e in self._epochs)
-
-
-class ThreadRuntime(_EpochLedger):
-    def __init__(self, graph: TaskGraph, reactor, n_workers: int,
-                 *, zero_worker: bool = False, simulate_durations=True,
-                 balance_interval: float = 0.05, timeout: float = 300.0):
-        self.g = graph
-        self.reactor = reactor
-        self.n_workers = n_workers
-        self.zero_worker = zero_worker
-        self.simulate_durations = simulate_durations
-        self.balance_interval = balance_interval
-        self.timeout = timeout
-        self.transport = tp.InprocTransport(n_workers)
-        self.results: dict[int, Any] = {}
-        self.queued: dict[int, list[int]] = {}
-        self.running: dict[int, int] = {}   # wid -> tid
-        self.dead: set[int] = set()
-        self.server_busy = 0.0
-        self.relay_bytes = 0    # in-process: no payload ever crosses a wire
-        self.p2p_bytes = 0
-        self._lock = threading.Lock()
-        self._done_evt = threading.Event()
-        self._init_epochs()
-        self._started = False
-        self._shut = False
-        self._run_to_done = False
-        self._stop_requested = False
-        self._timed_out = False
-        self._server: threading.Thread | None = None
-
-    # back-compat views onto the transport (trainer / faults poke these)
-    @property
-    def server_inbox(self) -> queue.Queue:
-        return self.transport.inbox
-
-    @property
-    def worker_inbox(self) -> list[queue.Queue]:
-        return self.transport.worker_queues
-
-    # ------------------------------------------------------------------
-    def _worker_loop(self, wid: int) -> None:
-        while True:
-            item = self.transport.worker_recv(wid)
-            if item is None:
-                return
-            tid = item
-            if wid in self.dead:
-                continue
-            with self._lock:
-                q = self.queued.setdefault(wid, [])
-                if tid in q:
-                    q.remove(tid)
-                else:
-                    # retracted: the server stole this task after queuing
-                    # it here (it left queued[wid] under the lock), so
-                    # skip it instead of double-executing — on a warm
-                    # pool a straggler's stale backlog would otherwise
-                    # delay the next epoch
-                    continue
-                self.running[wid] = tid
-            if not self.zero_worker:
-                t = self.g.tasks[tid]
-                if t.fn is not None:
-                    args = [self.results.get(d) for d in t.inputs]
-                    self.results[tid] = t.fn(*args) if t.args == () \
-                        else t.fn(*t.args)
-                elif self.simulate_durations and t.duration > 0:
-                    time.sleep(t.duration)
-            with self._lock:
-                self.running.pop(wid, None)
-            self.transport.worker_send(wid, ("finished", tid, wid))
-
-    def _send(self, assignments) -> None:
-        for tid, wid in assignments:
-            # dead-check and queue append under ONE lock: fail_worker's
-            # snapshot of queued[wid] happens under the same lock, so a
-            # task is always either captured by the snapshot or routed
-            # here as lost — never silently stranded in between
-            with self._lock:
-                alive = wid not in self.dead
-                if alive:
-                    self.queued.setdefault(wid, []).append(tid)
-            if alive:
-                self.transport.send(wid, tid)
-            else:
-                self.transport.inject(("lost-route", tid, wid))
-
-    # persistent submission path ---------------------------------------
-    def submit_tasks(self, tasks, retain: bool = True) -> int:
-        """Submit a new graph epoch to the running server loop.  Tasks
-        must carry dense global tids continuing from the current graph;
-        inputs may reference any earlier tid.  Returns the epoch id."""
-        if not self._started or self._shut:
-            raise RuntimeError("runtime is not running (start() first)")
-        e = self._register_epoch(len(tasks))
-        self.transport.inject(("epoch", e.eid, list(tasks), retain))
-        return e.eid
-
-    def release_tasks(self, tids) -> None:
-        """Drop the client hold on ``tids``; released values are purged
-        from ``self.results`` on the server thread."""
-        self.transport.inject(("release", [int(t) for t in tids]))
-
-    def fetch(self, tids, timeout: float | None = None) -> bool:
-        """Results live in-process for the thread engine — nothing to
-        fetch; present for signature parity with ProcessRuntime."""
+    def queue_push(self, wid: int, tid: int) -> bool:
+        # dead-check and queue append under ONE lock: fail_worker's
+        # snapshot of queued[wid] happens under the same lock, so a task
+        # is always either captured by the snapshot or rerouted as lost
+        # by the core — never silently stranded in between
+        core = self.core
+        with core._lock:
+            if wid in core.dead:
+                return False
+            core.queued.setdefault(wid, []).append(tid)
         return True
 
-    def _ingest_epoch(self, eid: int, tasks, retain: bool) -> None:
-        e = self._epochs[eid]
-        try:
-            _check_epoch_deps(self.g, self.reactor, tasks)
-            lo, hi = self.g.extend(tasks)
-            t0 = time.perf_counter()
-            out = self.reactor.add_tasks(lo, hi, retain=retain)
-            self.server_busy += time.perf_counter() - t0
-            self._bind_epoch(e, lo, hi)
-            self._send(out)
-        except BaseException as exc:   # surface to the waiting Future
-            self._quarantine_epoch(e, tasks, exc)
+    def queue_discard(self, wid: int, tid: int) -> None:
+        pass    # the worker dequeues at execution start (retraction check)
 
-    def _do_release(self, tids) -> None:
-        t0 = time.perf_counter()
-        released = self.reactor.release_keys(tids)
-        self.server_busy += time.perf_counter() - t0
-        for tid in released:
-            self.results.pop(tid, None)
+    def queue_pop(self, wid: int) -> list[int]:
+        with self.core._lock:
+            return list(self.core.queued.pop(wid, []))
 
-    def _apply_moves(self, moves) -> list[tuple[int, int]]:
-        """Apply steal reassignments: retract each task from its source
-        queue under the lock, report failed retractions (task already
-        running) back to the reactor so scheduler load bookkeeping stays
-        balanced, and dispatch the survivors."""
-        real_moves, failed = [], []
-        with self._lock:
+    def queue_snapshot(self) -> dict[int, list[int]]:
+        with self.core._lock:
+            return {w: list(q) for w, q in self.core.queued.items() if q}
+
+    def queue_contains(self, wid: int, tid: int) -> bool:
+        with self.core._lock:
+            return tid in self.core.queued.get(wid, ())
+
+    def retract_moves(self, moves):
+        """Definitive retraction: the task is removed from its source
+        queue under the lock, so a moved task can never double-execute."""
+        core = self.core
+        real, failed = [], []
+        with core._lock:
             for tid, nw in moves:
-                src = next((w for w, q in self.queued.items()
+                src = next((w for w, q in core.queued.items()
                             if tid in q), None)
                 if src is None:
                     failed.append(tid)  # already running
                     continue
-                self.queued[src].remove(tid)
-                real_moves.append((tid, nw))
-        for tid in failed:
-            self.reactor.steal_failed(tid)
-        self._send(real_moves)
-        return real_moves
+                core.queued[src].remove(tid)
+                real.append((tid, nw))
+        return real, failed
 
-    # ------------------------------------------------------------------
-    def _server_loop(self) -> None:
-        last_balance = time.perf_counter()
-        deadline = (time.perf_counter() + self.timeout
-                    if self._run_to_done else None)
-        try:
-            while not self._stop_requested:
-                if self._run_to_done and self.reactor.done():
-                    break
-                try:
-                    first = self.transport.recv(timeout=0.01)
-                except queue.Empty:
-                    if deadline is not None \
-                            and time.perf_counter() > deadline:
-                        self._timed_out = True
-                        break
-                    continue
-                # drain for batching (RSDS-style batch processing)
-                batch = [first] + self.transport.drain()
-                finished, lost, removed = [], [], []
-                for ev in batch:
-                    kind = ev[0]
-                    if kind == "finished":
-                        finished.append((ev[1], ev[2]))
-                    elif kind == "lost-route":
-                        lost.append((ev[1], ev[2]))
-                    elif kind == "worker-lost":
-                        removed.append((ev[1], ev[2]))
-                    elif kind == "epoch":
-                        self._ingest_epoch(ev[1], ev[2], ev[3])
-                    elif kind == "release":
-                        self._do_release(ev[1])
-                    elif kind == "stop":
-                        self._stop_requested = True
-                t0 = time.perf_counter()
-                out = self.reactor.handle_finished(finished)
-                for tid, wid in lost:
-                    out.extend(self.reactor.handle_worker_lost(wid, [tid]))
-                for wid, tids in removed:
-                    out.extend(self.reactor.handle_worker_lost(wid,
-                                                               list(tids)))
-                self.server_busy += time.perf_counter() - t0
-                self._send(out)
-                for tid in self.reactor.drain_purged():
-                    self.results.pop(tid, None)
-                # no worker caches in-process; drop the eviction log so a
-                # long-lived thread Cluster doesn't accumulate it forever
-                self.reactor.drain_reclaimed()
-                if finished:
-                    self._note_finished(t for t, _ in finished)
-                nowt = time.perf_counter()
-                if nowt - last_balance > self.balance_interval:
-                    last_balance = nowt
-                    with self._lock:
-                        qbw = {w: list(q) for w, q in self.queued.items()
-                               if q}
-                    t0 = time.perf_counter()
-                    moves = self.reactor.rebalance(qbw)
-                    self.server_busy += time.perf_counter() - t0
-                    self._apply_moves(moves)
-                if deadline is not None and time.perf_counter() > deadline:
-                    self._timed_out = True
-                    break
-        finally:
-            self._fail_open_epochs(
-                TimeoutError("server loop exited")
-                if self._timed_out else
-                RuntimeError("server loop exited"))
-            self._done_evt.set()
+    # -- sends ----------------------------------------------------------
 
-    # ------------------------------------------------------------------
+    def send_compute(self, wid: int, items, data=None, deps=None,
+                     hints=None) -> None:
+        for tid, _dur in items:
+            self.transport.send(wid, tid)
+
+    # -- failure injection ----------------------------------------------
+
     def fail_worker(self, wid: int) -> None:
-        """Failure injection: worker stops responding; server resubmits.
-
-        Safe to call from any thread: the reactor is only ever touched by
-        the server loop, so the loss is routed through the server inbox as
-        a ``("worker-lost", wid, lost)`` event instead of being handled
-        here (the old in-place handling raced ``handle_finished``)."""
-        with self._lock:
-            self.dead.add(wid)
-            lost = list(self.queued.pop(wid, []))
-            r = self.running.get(wid)
+        """Worker stops responding; the loss is routed through the server
+        inbox as a ``("worker-lost", wid, lost)`` event so the reactor is
+        only ever touched by the server loop (safe from any thread)."""
+        core = self.core
+        with core._lock:
+            core.dead.add(wid)
+            lost = list(core.queued.pop(wid, []))
+            r = core.running.get(wid)
             if r is not None:
                 lost.append(r)
         self.transport.inject(("worker-lost", wid, tuple(lost)))
 
-    # lifecycle --------------------------------------------------------
-    def _spawn_workers(self) -> None:
-        self._threads = [threading.Thread(target=self._worker_loop,
-                                          args=(w,), daemon=True)
-                         for w in range(self.n_workers)]
-        for t in self._threads:
-            t.start()
-
-    def start(self) -> "ThreadRuntime":
-        """Bring up the persistent worker pool + server loop (no graph
-        required yet; epochs arrive via :meth:`submit_tasks`)."""
-        if self._started:
-            return self
-        self._started = True
-        self._spawn_workers()
-        self._server = threading.Thread(target=self._server_loop,
-                                        daemon=True)
-        t0 = time.perf_counter()
-        init = self.reactor.start()
-        self.server_busy += time.perf_counter() - t0
-        self._server.start()
-        self._send(init)
-        return self
-
-    def shutdown(self, force: bool = False, timeout: float = 10.0) -> None:
-        """Stop the server loop and retire the worker threads.  ``force``
-        is accepted for signature parity with ProcessRuntime (threads
-        cannot be killed; they are daemonic and park on their queues)."""
-        if not self._started or self._shut:
-            return
-        self._shut = True
-        self._stop_requested = True
-        self.transport.inject(("stop",))
-        self._done_evt.wait(timeout)
+    def finalize(self, force: bool) -> None:
         for wid in range(len(self.transport.worker_queues)):
             self.transport.send(wid, None)
-        if self._server is not None:
-            self._server.join(timeout=timeout)
-
-    def run(self) -> RunResult:
-        self._timed_out = False
-        self._run_to_done = True
-        e = self._register_epoch(self.g.n_tasks)
-        self._started = True
-        self._spawn_workers()
-        server = threading.Thread(target=self._server_loop, daemon=True)
-        self._server = server
-        t_start = time.perf_counter()
-        t0 = time.perf_counter()
-        init = self.reactor.start()
-        self.server_busy += time.perf_counter() - t0
-        self._bind_epoch(e, 0, self.g.n_tasks)
-        server.start()
-        self._send(init)
-        self._done_evt.wait(timeout=self.timeout + 5)
-        makespan = time.perf_counter() - t_start
-        for wid in range(len(self.transport.worker_queues)):
-            self.transport.send(wid, None)
-        return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
-                         server_busy=self.server_busy,
-                         stats=self.reactor.stats.as_dict(),
-                         results=self.results, timed_out=self._timed_out,
-                         epochs=self.epoch_dicts())
 
 
 # ---------------------------------------------------------------------------
-# Multi-process runtime
+# Worker process body (shared by the selector and asyncio drivers)
 # ---------------------------------------------------------------------------
 
 def _close_fds(fds) -> None:
@@ -538,7 +190,9 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                  zero_worker: bool, simulate_durations: bool,
                  tasks_table, cleanup_fds, p2p: bool = False) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
-    finished frames.  Mirrors the paper's one-thread-per-worker setup.
+    finished frames.  Mirrors the paper's one-thread-per-worker setup —
+    and is identical under every server driver (the architecture axis is
+    a server-side variable only).
 
     Persistent-server protocol: ``update-graph`` frames extend the local
     task table mid-run (incremental epochs), ``release`` frames purge the
@@ -740,453 +394,42 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
     ep.close()
 
 
-class ProcessRuntime(_EpochLedger):
-    """Drop-in sibling of :class:`ThreadRuntime` with OS-process workers
-    behind a byte transport and a selector-based server event loop."""
+# ---------------------------------------------------------------------------
+# Process drivers (selector + asyncio share pool/wire mechanics)
+# ---------------------------------------------------------------------------
 
-    def __init__(self, graph: TaskGraph, reactor, n_workers: int,
-                 *, transport: str = "pipe", zero_worker: bool = False,
-                 simulate_durations: bool = True,
-                 balance_interval: float = 0.05, timeout: float = 300.0,
-                 start_method: str | None = None, p2p: bool = True):
-        if getattr(reactor, "simulate_codec", False):
-            raise ValueError(
-                "ProcessRuntime needs a reactor with simulate_codec=False: "
-                "the wire pays the real codec cost")
-        self.g = graph
-        self.reactor = reactor
-        self.n_workers = n_workers
+class _ProcessDriver(Driver):
+    """Shared mechanics of the OS-process drivers: pool spawn/kill/join,
+    wire codec accounting, worker-queue sets, frame->event normalization
+    (via :func:`repro.core.messages.frame_event`)."""
+
+    remote_results = True
+
+    def __init__(self, *, transport: str = "pipe",
+                 start_method: str | None = None,
+                 zero_worker: bool = False,
+                 simulate_durations: bool = True):
         self.transport_kind = transport
+        self.start_method = start_method
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
-        self.balance_interval = balance_interval
-        self.timeout = timeout
-        self.start_method = start_method
-        # p2p: dependency values move worker-to-worker over who_has hints
-        # + direct fetch (Dask/RSDS-faithful data plane); off = every
-        # payload rides compute/finished frames through the server
-        self.p2p = p2p
-        self.wire = msg.make_wire(reactor.name)
-        self.results: dict[int, Any] = {}
-        self.queued: dict[int, set[int]] = {w: set()
-                                            for w in range(n_workers)}
-        self.dead: set[int] = set()
-        self.server_busy = 0.0
-        self.codec_s = 0.0
-        self.wire_bytes = 0
-        self.wire_frames = 0
-        self.relay_bytes = 0          # payload bytes relayed via server
-        self.p2p_bytes = 0            # payload bytes moved peer-to-peer
-        self.gather_bytes = 0         # client-facing gather-reply bytes
-        self.n_p2p_fetches = 0
-        self._data_addrs: dict[int, tuple] = {}    # wid -> (host, port)
-        # wid sets that hold fetched COPIES of a key (beyond the
-        # reactor's holders): release frames must reach these too
-        self._replicas: dict[int, set[int]] = {}
-        # in-flight gathers: tid -> {"wid": current target, "tried": set}
-        self._gather_state: dict[int, dict] = {}
-        self._gather_failed: set[int] = set()
-        # tasks a worker handed back because a dependency fetch failed:
-        # tid -> {"wid": assigned worker, "missing": set, "tried": set}
-        self._parked: dict[int, dict] = {}
-        self._park_dirty = False
+        self.wire = None
         self.procs: list = []
-        self._kill_requests: queue.Queue = queue.Queue()
-        self._submit_q: queue.Queue = queue.Queue()
         self._tp = None
-        self._tasks_table: dict[int, tuple] = {}
-        self._timed_out = False
-        self._init_epochs()
-        self._started = False
-        self._shut = False
-        self._run_to_done = False
-        self._stop_requested = False
-        self._t_deadline: float | None = None
-        self._server: threading.Thread | None = None
-        self._loop_exited = threading.Event()
+        self._kill_requests: queue.Queue = queue.Queue()
+        self._tp_closed = False
 
-    # ------------------------------------------------------------------
-    def fail_worker(self, wid: int) -> None:
-        """First-class failure injection: SIGKILL the worker process.
+    def bind(self, core) -> None:
+        super().bind(core)
+        self.wire = msg.make_wire(core.reactor.name)
 
-        Processed on the server loop (kill + worker-lost handling), so it
-        is safe to call from any thread."""
-        self._kill_requests.put(wid)
+    def _make_transport(self, n_workers: int):
+        raise NotImplementedError
 
-    # ------------------------------------------------------------------
-    def _charge(self, fn, *args):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        self.server_busy += time.perf_counter() - t0
-        return out
+    # -- worker pool ----------------------------------------------------
 
-    def _charge_codec(self, fn, *args):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        dt = time.perf_counter() - t0
-        self.codec_s += dt
-        self.server_busy += dt
-        return out
-
-    def _send_frames(self, wid: int, frames) -> None:
-        for frame in frames:
-            self.wire_bytes += len(frame)
-            self.wire_frames += 1
-            self._tp.send(wid, frame)
-
-    def _holders(self, tid: int) -> list[int]:
-        """Workers believed to hold ``tid``'s value: the reactor's
-        completion holders plus fetch-replicas inferred from finished
-        tasks that consumed it."""
-        hs = [int(w) for w in self.reactor.holders_of(tid)]
-        for w in self._replicas.get(int(tid), ()):
-            if w not in hs:
-                hs.append(w)
-        return hs
-
-    def _compute_extras(self, wid: int, items,
-                        tried: dict[int, set] | None = None):
-        """The dynamic sections of one compute batch for worker ``wid``:
-        ``deps`` (ordered input tids per fn-task), ``hints`` (dep ->
-        holder data-plane address, p2p) and ``data`` (dep -> value inlined
-        from the server store — the relay path: everything when p2p is
-        off, only holderless deps as a fallback when it is on)."""
-        if not self._tasks_table:
-            return None, None, None
-        data: dict[int, dict] = {}
-        deps: dict[int, list[int]] = {}
-        hints: dict[int, dict] = {}
-        for tid, _ in items:
-            entry = self._tasks_table.get(tid)
-            if entry is None or entry[1] != ():
-                continue
-            dlist = [int(d) for d in self.g.inputs_of(tid)]
-            if not dlist:
-                continue
-            deps[tid] = dlist
-            for d in dlist:
-                if d not in self._tasks_table:
-                    # duration-model dep: no value exists to ship or
-                    # hint at (the worker passes None, as the thread
-                    # runtime does)
-                    continue
-                if not self.p2p:
-                    data.setdefault(tid, {})[d] = self.results.get(d)
-                    continue
-                holders = self._holders(d)
-                if wid in holders:
-                    continue    # already in the target worker's cache
-                skip = tried.get(d, ()) if tried else ()
-                addr = next((self._data_addrs[h] for h in holders
-                             if h not in self.dead
-                             and h in self._data_addrs
-                             and h not in skip), None)
-                if addr is not None:
-                    hints.setdefault(tid, {})[d] = addr
-                elif d in self.results:
-                    # no live holder: relay the server's copy
-                    data.setdefault(tid, {})[d] = self.results[d]
-                # else: value is gone everywhere; the worker reports
-                # fetch-failed and the task parks until lineage
-                # re-execution materializes the dep again
-        return data or None, deps or None, hints or None
-
-    def _dispatch(self, assignments) -> None:
-        """Encode and send compute frames; reroutes assignments that hit a
-        dead worker (may cascade through handle_worker_lost)."""
-        pending = list(assignments)
-        while pending:
-            durations = self.g.durations
-            by_wid: dict[int, list] = {}
-            rerouted: list = []
-            for tid, wid in pending:
-                if wid in self.dead:
-                    out = self._charge(self.reactor.handle_worker_lost,
-                                       wid, [tid])
-                    rerouted.extend(out)
-                    continue
-                self.queued[wid].add(tid)
-                by_wid.setdefault(wid, []).append(
-                    (tid, float(durations[tid])))
-            for wid, items in by_wid.items():
-                data, deps, hints = self._compute_extras(wid, items)
-                frames = self._charge_codec(
-                    self.wire.encode_compute_batch, items, data,
-                    self.g.inputs_of, hints, deps)
-                self._send_frames(wid, frames)
-            pending = rerouted
-
-    def _worker_lost(self, wid: int) -> None:
-        if wid in self.dead:
-            return
-        self.dead.add(wid)
-        self._tp.drop(wid)
-        self._data_addrs.pop(wid, None)
-        for reps in self._replicas.values():
-            reps.discard(wid)
-        if len(self.dead) >= self.n_workers:
-            # no capacity left to resubmit onto: the run cannot finish
-            self._timed_out = True
-            return
-        lost = sorted(self.queued.pop(wid, set()))
-        out = self._charge(self.reactor.handle_worker_lost, wid, lost)
-        self._dispatch(out)
-        # a gather in flight against the dead worker would never be
-        # answered: re-issue it against a surviving holder
-        retry = [tid for tid, st in self._gather_state.items()
-                 if st["wid"] == wid]
-        if retry:
-            self._do_gather(retry, fresh=False)
-        self._park_dirty = True
-
-    def _drain_kills(self) -> None:
-        while True:
-            try:
-                wid = self._kill_requests.get_nowait()
-            except queue.Empty:
-                return
-            if wid in self.dead:
-                continue
-            p = self.procs[wid]
-            if p.is_alive():
-                p.kill()
-                p.join(timeout=2.0)
-            self._worker_lost(wid)
-
-    def _sweep_dead(self) -> None:
-        for wid, p in enumerate(self.procs):
-            if wid not in self.dead and not p.is_alive():
-                self._worker_lost(wid)
-
-    # persistent submission path ---------------------------------------
-    def submit_tasks(self, tasks, retain: bool = True) -> int:
-        """Submit a new graph epoch to the running server loop.  Task
-        definitions (and pickled callables, when present) are shipped to
-        the live workers as ``update-graph`` wire frames — the submission
-        path pays the same codec asymmetry as compute/finished traffic."""
-        if not self._started or self._shut or self._loop_exited.is_set():
-            raise RuntimeError("runtime is not running (start() first)")
-        e = self._register_epoch(len(tasks))
-        self._submit_q.put(("epoch", e.eid, list(tasks), retain))
-        return e.eid
-
-    def release_tasks(self, tids) -> None:
-        self._submit_q.put(("release", [int(t) for t in tids]))
-
-    def fetch(self, tids, timeout: float | None = None) -> bool:
-        """Ensure ``tids`` results are present server-side, re-fetching
-        worker-cached values over ``gather`` wire frames if needed.
-        ``timeout=None`` waits up to the runtime's own timeout (a busy
-        single-threaded holder answers gathers only between tasks);
-        definitively-absent keys still fail fast — False returns before
-        the deadline once every holder answered absent or died."""
-        if timeout is None:
-            timeout = self.timeout
-        missing = [int(t) for t in tids if int(t) not in self.results]
-        if not missing:
-            return True
-        # stale failure markers from an earlier fetch must not fail this
-        # one before the server even processes it (the fresh gather
-        # resets the tried-holder memory server-side)
-        self._gather_failed.difference_update(missing)
-        self._submit_q.put(("gather", missing))
-        deadline = time.perf_counter() + timeout
-        while time.perf_counter() < deadline:
-            if all(t in self.results for t in missing):
-                return True
-            if any(t in self._gather_failed and t not in self.results
-                   for t in missing):
-                return False
-            if self._loop_exited.is_set():
-                break
-            time.sleep(0.002)
-        return all(t in self.results for t in missing)
-
-    def _ingest_epoch(self, eid: int, tasks, retain: bool) -> None:
-        e = self._epochs[eid]
-        try:
-            _check_epoch_deps(self.g, self.reactor, tasks)
-            defs = [(t.tid, float(t.duration)) for t in tasks]
-            fns = {t.tid: (t.fn, t.args) for t in tasks
-                   if t.fn is not None}
-            # ship the epoch to the live workers: the Dask wire pays one
-            # update-graph message per key, the static wire one frame per
-            # epoch (the paper's codec asymmetry on the submission path).
-            # Encoded BEFORE any state mutation — an unpicklable callable
-            # must fail the epoch, not desync graph and reactor.
-            frames = self._charge_codec(self.wire.encode_update_graph,
-                                        defs, fns or None)
-            lo, hi = self.g.extend(tasks)
-            self._tasks_table.update(fns)
-            for wid in range(self.n_workers):
-                if wid not in self.dead:
-                    self._send_frames(wid, frames)
-            out = self._charge(self.reactor.add_tasks, lo, hi, retain)
-            self._bind_epoch(e, lo, hi)
-            self._dispatch(out)
-        except BaseException as exc:
-            self._quarantine_epoch(e, tasks, exc)
-
-    def _do_release(self, tids) -> None:
-        released = self._charge(self.reactor.release_keys, tids)
-        for tid in released:
-            self.results.pop(tid, None)
-        # drain the reclaim log (it contains ``released``) so the same
-        # keys are not evicted a second time by the loop's drain
-        self._evict_workers(self.reactor.drain_reclaimed())
-
-    def _purge_released(self, released) -> None:
-        """Purge server-side values of client-reclaimed keys (the worker
-        caches are evicted separately via :meth:`_evict_workers` on the
-        full reclaim log)."""
-        for tid in released:
-            self.results.pop(tid, None)
-
-    def _evict_workers(self, reclaimed) -> None:
-        """Release frames for every reclaimed key to every worker that
-        holds a copy (computing holder AND fetch replicas), so a
-        long-lived pool sheds values nobody can ask for again."""
-        by_wid: dict[int, list[int]] = {}
-        for tid in reclaimed:
-            tid = int(tid)
-            for wid in self._holders(tid):
-                if wid not in self.dead:
-                    by_wid.setdefault(wid, []).append(tid)
-            self._replicas.pop(tid, None)
-            self._gather_state.pop(tid, None)
-            self._gather_failed.discard(tid)
-        for wid, ts in by_wid.items():
-            frames = self._charge_codec(self.wire.encode_release, ts)
-            self._send_frames(wid, frames)
-
-    def _do_gather(self, tids, fresh: bool = True) -> None:
-        """Ask a live holder for each missing result.  ``fresh`` resets
-        the tried-holder memory (a new client fetch); re-issues after an
-        absent reply or a holder death keep it, so every holder is tried
-        at most once before the gather fails fast."""
-        by_wid: dict[int, list[int]] = {}
-        for tid in tids:
-            tid = int(tid)
-            if tid in self.results:
-                self._gather_state.pop(tid, None)
-                continue
-            st = self._gather_state.get(tid)
-            if st is None or fresh:
-                st = self._gather_state[tid] = {"wid": -1, "tried": set()}
-                self._gather_failed.discard(tid)
-            wid = next((w for w in self._holders(tid)
-                        if w not in self.dead and w not in st["tried"]),
-                       None)
-            if wid is None:
-                if not self.reactor.all_done_in(tid, tid + 1):
-                    # lineage re-execution is rematerializing the value
-                    # (holder died): keep the gather pending; it is
-                    # re-issued when the task re-finishes
-                    st["wid"] = -1
-                    continue
-                # done but absent on every holder (never cached /
-                # evicted): fail fast instead of letting the client
-                # spin out its whole timeout
-                self._gather_state.pop(tid, None)
-                self._gather_failed.add(tid)
-                continue
-            st["wid"] = wid
-            st["tried"].add(wid)
-            by_wid.setdefault(wid, []).append(tid)
-        for wid, ts in by_wid.items():
-            frames = self._charge_codec(self.wire.encode_gather, ts)
-            self._send_frames(wid, frames)
-
-    def _on_gather_reply(self, wid: int, absent, payloads) -> None:
-        """Gather replies are explicit frames — they never re-enter the
-        finished path, so completion/epoch accounting cannot be double
-        counted by a re-sent result."""
-        if payloads:
-            self.results.update(payloads)
-            for tid in payloads:
-                self._gather_state.pop(int(tid), None)
-                self._gather_failed.discard(int(tid))
-            self._park_dirty = True
-        if absent:
-            # the holder no longer has it (evicted/restarted): re-route
-            # to the next untried holder or fail fast
-            self._do_gather([int(t) for t in absent], fresh=False)
-
-    def _on_fetch_failed(self, wid: int, tid: int, missing) -> None:
-        """A worker could not fetch ``tid``'s dependencies from the
-        hinted holder: park the task; it is re-dispatched (fresh hints or
-        server relay) once the deps are materialized again."""
-        if wid in self.dead or tid in self.results:
-            return
-        st = self._parked.setdefault(
-            int(tid), {"wid": wid, "missing": set(), "tried": {}})
-        st["wid"] = wid
-        st["missing"] = {int(d) for d in missing}
-        self._park_dirty = True
-
-    def _resolve_parked(self) -> None:
-        """Re-dispatch parked tasks whose missing deps are available
-        again — from a fresh holder (p2p) or the server store (relay
-        fallback).  Runs only when placement state changed (a finish,
-        a worker loss, a gather reply), so a dead hint cannot busy-loop."""
-        if not self._park_dirty or not self._parked:
-            self._park_dirty = False
-            return
-        self._park_dirty = False
-        for tid, st in list(self._parked.items()):
-            wid = st["wid"]
-            if wid in self.dead or tid not in self.queued.get(wid, set()):
-                # the task was (or will be) re-routed by worker-lost or a
-                # steal; whoever owns it now got fresh hints already
-                self._parked.pop(tid)
-                continue
-            if not st["missing"]:
-                continue    # re-dispatched; awaiting execute/fetch-failed
-            ok = True
-            for d in st["missing"]:
-                skip = st["tried"].get(d, set())
-                has_holder = any(
-                    h not in self.dead and h in self._data_addrs
-                    and h not in skip
-                    for h in self._holders(d))
-                if not has_holder and d not in self.results:
-                    ok = False
-                    break
-            if not ok:
-                continue
-            durations = self.g.durations
-            items = [(tid, float(durations[tid]))]
-            data, deps, hints = self._compute_extras(
-                wid, items, tried=st["tried"])
-            for d, addr in (hints or {}).get(tid, {}).items():
-                holder = next((h for h in self._holders(d)
-                               if self._data_addrs.get(h) == addr), None)
-                if holder is not None:
-                    st["tried"].setdefault(d, set()).add(holder)
-            frames = self._charge_codec(
-                self.wire.encode_compute_batch, items, data,
-                self.g.inputs_of, hints, deps)
-            self._send_frames(wid, frames)
-            # keep the entry (with its tried-holder memory) until the
-            # task finishes or fails its fetch again
-            st["missing"] = set()
-
-    def _drain_submits(self) -> None:
-        while True:
-            try:
-                item = self._submit_q.get_nowait()
-            except queue.Empty:
-                return
-            kind = item[0]
-            if kind == "epoch":
-                self._ingest_epoch(item[1], item[2], item[3])
-            elif kind == "release":
-                self._do_release(item[1])
-            elif kind == "gather":
-                self._do_gather(item[1])
-
-    # lifecycle --------------------------------------------------------
-    def _start_procs(self) -> None:
+    def start_workers(self) -> None:
+        core = self.core
         ctx_name = (self.start_method
                     or os.environ.get("REPRO_START_METHOD"))
         if not ctx_name:
@@ -1199,25 +442,23 @@ class ProcessRuntime(_EpochLedger):
         if ctx_name != "fork" and self.transport_kind == "pipe":
             self.transport_kind = "socket"  # raw fds need fork inheritance
         ctx = mp.get_context(ctx_name)
-        self._tasks_table = {t.tid: (t.fn, t.args) for t in self.g.tasks
+        core._tasks_table = {t.tid: (t.fn, t.args) for t in core.g.tasks
                              if t.fn is not None}
-        self._tp = tp.make_server_transport(self.transport_kind,
-                                            self.n_workers)
+        self._tp = self._make_transport(core.n_workers)
         try:
-            for wid in range(self.n_workers):
+            for wid in range(core.n_workers):
                 p = ctx.Process(
                     target=_worker_main,
                     args=(wid, self._tp.worker_args(wid),
-                          self.reactor.name, self.zero_worker,
+                          core.reactor.name, self.zero_worker,
                           self.simulate_durations,
-                          self._tasks_table or None,
+                          core._tasks_table or None,
                           self._tp.child_cleanup(wid)
                           if ctx_name == "fork" else [],
-                          self.p2p),
+                          core.p2p),
                     daemon=True)
                 p.start()
                 self.procs.append(p)
-            self._tp.after_start(self.procs)
         except BaseException:
             for p in self.procs:
                 if p.is_alive():
@@ -1225,274 +466,391 @@ class ProcessRuntime(_EpochLedger):
                 p.join(timeout=5.0)
             raise
 
-    def start(self) -> "ProcessRuntime":
-        """Bring up the persistent worker pool and run the server loop on
-        a background thread; epochs arrive via :meth:`submit_tasks`."""
-        if self._started:
-            return self
-        self._started = True
-        self._start_procs()
-        init = self._charge(self.reactor.start)
-        self._dispatch(init)
-        self._server = threading.Thread(target=self._loop_in_thread,
-                                        daemon=True)
-        self._server.start()
-        return self
+    def fail_worker(self, wid: int) -> None:
+        """SIGKILL the worker process — processed on the server loop
+        (kill + worker-lost handling), so safe to call from any thread."""
+        self._kill_requests.put(wid)
 
-    def _loop_in_thread(self) -> None:
-        try:
-            self._loop()
-        finally:
-            self._fail_open_epochs(
-                TimeoutError("server loop exited")
-                if self._timed_out else
-                RuntimeError("server loop exited"))
-            self._loop_exited.set()
+    def drain_kills(self) -> None:
+        while True:
+            try:
+                wid = self._kill_requests.get_nowait()
+            except queue.Empty:
+                return
+            if wid in self.core.dead:
+                continue
+            p = self.procs[wid]
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=2.0)
+            self.core._worker_lost(wid)
 
-    def shutdown(self, force: bool = False, timeout: float = 10.0) -> None:
-        """Stop the server loop and terminate/join every worker process
-        (no zombies, even after a timeout — ``force`` skips the graceful
-        drain and SIGKILLs immediately)."""
-        if not self._started or self._shut:
-            return
-        self._shut = True
-        self._stop_requested = True
-        if self._server is not None:
-            self._server.join(timeout=timeout)
-            if self._server.is_alive():
-                force = True
-        self._shutdown(force=force)
+    def sweep(self) -> list[int]:
+        return [wid for wid, p in enumerate(self.procs)
+                if wid not in self.core.dead and not p.is_alive()]
 
-    # ------------------------------------------------------------------
-    def run(self) -> RunResult:
-        self._run_to_done = True
-        self._started = True
-        e = self._register_epoch(self.g.n_tasks)
-        self._start_procs()
-        t_start = time.perf_counter()
-        self._t_deadline = t_start + self.timeout
-        try:
-            init = self._charge(self.reactor.start)
-            self._bind_epoch(e, 0, self.g.n_tasks)
-            self._dispatch(init)
-            self._loop()
-        finally:
-            self._fail_open_epochs(
-                TimeoutError("run timed out") if self._timed_out
-                else RuntimeError("run exited"))
-            self._loop_exited.set()
-            # a timed-out run force-kills: no zombie worker processes
-            self._shutdown(force=self._timed_out)
-        makespan = time.perf_counter() - t_start
-        stats = self.reactor.stats.as_dict()
-        stats.update(wire_bytes=self.wire_bytes,
-                     wire_frames=self.wire_frames,
-                     codec_s=round(self.codec_s, 6),
-                     transport=self.transport_kind,
-                     p2p=self.p2p,
-                     relay_bytes=self.relay_bytes,
-                     p2p_bytes=self.p2p_bytes,
-                     gather_bytes=self.gather_bytes,
-                     p2p_fetches=self.n_p2p_fetches)
-        return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
-                         server_busy=self.server_busy, stats=stats,
-                         results=self.results, timed_out=self._timed_out,
-                         epochs=self.epoch_dicts())
+    def drop(self, wid: int) -> None:
+        self._tp.drop(wid)
 
-    def _collect_results(self, timeout: float = 15.0) -> None:
-        """One-shot ``run()`` epilogue for the p2p data plane: results
-        live in worker caches, so gather every fn-task value the client
-        will read from ``RunResult.results`` before tearing down."""
-        want = [int(t) for t in self._tasks_table
-                if int(t) not in self.results
-                and not self.reactor.is_released(int(t))]
-        if not want:
-            return
-        self._do_gather(want)
-        deadline = time.perf_counter() + timeout
-        while time.perf_counter() < deadline and not self._timed_out:
-            if all(t in self.results or t in self._gather_failed
-                   for t in want):
-                break
-            for wid, raw in self._tp.poll(0.01):
-                if raw is None:
-                    self._worker_lost(wid)   # re-issues in-flight gathers
-                    continue
-                self.wire_bytes += len(raw)
-                self.wire_frames += 1
-                op, recs, payloads = self._charge_codec(
-                    self.wire.decode, raw)
-                if wid in self.dead:
-                    continue
-                if op == msg.OP_GATHER_REPLY:
-                    self._on_gather_reply(wid, recs, payloads)
-                elif op == msg.OP_FINISHED:
-                    # lineage re-execution after a holder died mid-
-                    # epilogue: process it, or pending gathers waiting
-                    # on the re-finish are never re-issued
-                    fin = [(int(t), int(w)) for t, w, _ in recs]
-                    for t, _ in fin:
-                        self.queued.get(wid, set()).discard(t)
-                    if payloads:
-                        self.results.update(payloads)
-                    out = self._charge(self.reactor.handle_finished, fin)
-                    self._dispatch(out)
-                    self._note_finished(t for t, _ in fin)
-                    regather = [t for t, _ in fin
-                                if t in self._gather_state]
-                    if regather:
-                        self._do_gather(regather, fresh=True)
-                elif op == msg.OP_STATS:
-                    for nbytes, nfetch in recs:
-                        self.p2p_bytes += int(nbytes)
-                        self.n_p2p_fetches += int(nfetch)
-        self.gather_bytes += self.wire.take_gather_bytes()
-        # relay-fallback frames dispatched during the epilogue (holder
-        # died mid-gather) must land in the relay metric too
-        self.relay_bytes += self.wire.take_payload_bytes()
+    # -- queue accounting: dict-of-sets, server-loop only ---------------
 
-    def _loop(self) -> None:
-        last_balance = time.perf_counter()
-        while not self._stop_requested and not self._timed_out:
-            if self._run_to_done and self.reactor.done():
-                break
-            now = time.perf_counter()
-            if self._t_deadline is not None and now > self._t_deadline:
-                self._timed_out = True
-                break
-            self._drain_submits()
-            self._drain_kills()
-            events = self._tp.poll(0.01)
-            finished: list[tuple[int, int]] = []
-            for wid, raw in events:
-                if raw is None:           # EOF: unexpected death
-                    self._worker_lost(wid)
-                    continue
-                self.wire_bytes += len(raw)
-                self.wire_frames += 1
-                op, recs, payloads = self._charge_codec(self.wire.decode,
-                                                        raw)
-                if wid in self.dead:
-                    continue      # stale frame from a failed worker
-                if op == msg.OP_FINISHED:
-                    for tid, rw, _nbytes in recs:
-                        finished.append((int(tid), int(rw)))
-                        self.queued.get(wid, set()).discard(int(tid))
-                    if payloads:
-                        self.results.update(payloads)
-                elif op == msg.OP_GATHER_REPLY:
-                    self._on_gather_reply(wid, recs, payloads)
-                elif op == msg.OP_FETCH_FAILED:
-                    for tid, missing in recs:
-                        self._on_fetch_failed(wid, int(tid), missing)
-                elif op == msg.OP_DATA_ADDR:
-                    self._data_addrs[int(recs[0])] = tuple(payloads)
-                elif op == msg.OP_STATS:
-                    for nbytes, nfetch in recs:
-                        self.p2p_bytes += int(nbytes)
-                        self.n_p2p_fetches += int(nfetch)
-            if finished:
-                out = self._charge(self.reactor.handle_finished,
-                                   finished)
-                if self.p2p:
-                    # a finished fn-task implies its worker now holds all
-                    # of its inputs (it fetched them): feed the replica
-                    # placement back so scheduling + gather see it
-                    for tid, wid in finished:
-                        if wid in self.dead:
-                            continue
-                        entry = self._tasks_table.get(tid)
-                        if entry is None or entry[1] != ():
-                            continue
-                        for d in self.g.inputs_of(tid):
-                            d = int(d)
-                            if d not in self._tasks_table:
-                                continue    # duration dep: no value held
-                            # register the replica even when this very
-                            # completion refcount-GC'd the dep — the
-                            # eviction pass below must reach the fetched
-                            # copy, or it leaks in the worker cache
-                            self._replicas.setdefault(d, set()).add(wid)
-                            if not self.reactor.is_released(d):
-                                self.reactor.handle_placed(d, wid)
-                for tid, _ in finished:
-                    self._parked.pop(tid, None)
-                # a pending gather whose task just (re-)finished has a
-                # live holder again: re-issue it now
-                regather = [t for t, _ in finished
-                            if t in self._gather_state]
-                if regather:
-                    # fresh=True: the re-finished task's holder set is new
-                    # — a previously-absent worker may hold it now
-                    self._do_gather(regather, fresh=True)
-                self._dispatch(out)
-                self._purge_released(self.reactor.drain_purged())
-                self._evict_workers(self.reactor.drain_reclaimed())
-                self._note_finished(t for t, _ in finished)
-                self._park_dirty = True
-            # payload-byte accounting lives on the codec (it sees the
-            # blob sizes); drain it into the runtime counters
-            self.relay_bytes += self.wire.take_payload_bytes()
-            self.gather_bytes += self.wire.take_gather_bytes()
-            self._resolve_parked()
-            now = time.perf_counter()
-            if now - last_balance > self.balance_interval:
-                last_balance = now
-                self._sweep_dead()
-                self._do_balance()
-        if self.p2p and self._run_to_done and not self._timed_out \
-                and not self._stop_requested:
-            self._collect_results()
+    def queue_push(self, wid: int, tid: int) -> bool:
+        self.core.queued[wid].add(tid)
+        return True
 
-    def _do_balance(self) -> None:
-        qbw = {w: sorted(s) for w, s in self.queued.items()
-               if s and w not in self.dead}
-        if not qbw:
-            return
-        moves = self._charge(self.reactor.rebalance, qbw)
+    def queue_discard(self, wid: int, tid: int) -> None:
+        self.core.queued.get(wid, set()).discard(tid)
+
+    def queue_pop(self, wid: int) -> list[int]:
+        return sorted(self.core.queued.pop(wid, set()))
+
+    def queue_snapshot(self) -> dict[int, list[int]]:
+        return {w: sorted(s) for w, s in self.core.queued.items()
+                if s and w not in self.core.dead}
+
+    def queue_contains(self, wid: int, tid: int) -> bool:
+        return tid in self.core.queued.get(wid, set())
+
+    def retract_moves(self, moves):
+        """Optimistic steal: the old worker drops the task if it has not
+        started (retract frame); a duplicate completion is ignored by the
+        reactor (same retraction semantics as the simulator)."""
+        core = self.core
+        real, failed = [], []
         retract_by_wid: dict[int, list[int]] = {}
-        real_moves = []
         for tid, nw in moves:
-            src = next((w for w, s in self.queued.items() if tid in s),
+            src = next((w for w, s in core.queued.items() if tid in s),
                        None)
             if src is None or src == nw:
-                self.reactor.steal_failed(tid)
+                failed.append(tid)
                 continue
-            # optimistic steal: the old worker drops the task if it has
-            # not started; a duplicate completion is ignored by the
-            # reactor (same retraction semantics as the simulator)
-            self.queued[src].discard(tid)
+            core.queued[src].discard(tid)
             retract_by_wid.setdefault(src, []).append(tid)
-            real_moves.append((tid, nw))
+            real.append((tid, nw))
         for wid, tids in retract_by_wid.items():
-            frames = self._charge_codec(self.wire.encode_retract, tids)
-            self._send_frames(wid, frames)
-        self._dispatch(real_moves)
+            self.send_retract(wid, tids)
+        return real, failed
 
-    def _shutdown(self, force: bool = False) -> None:
+    # -- sends ----------------------------------------------------------
+
+    def _send_frames(self, wid: int, frames) -> None:
+        core = self.core
+        for frame in frames:
+            core.wire_bytes += len(frame)
+            core.wire_frames += 1
+            self._tp.send(wid, frame)
+
+    def send_compute(self, wid: int, items, data=None, deps=None,
+                     hints=None) -> None:
+        frames = self.core._charge_codec(
+            self.wire.encode_compute_batch, items, data,
+            self.core.g.inputs_of, hints, deps)
+        self._send_frames(wid, frames)
+
+    def send_retract(self, wid: int, tids) -> None:
+        self._send_frames(wid, self.core._charge_codec(
+            self.wire.encode_retract, tids))
+
+    def send_release(self, wid: int, tids) -> None:
+        self._send_frames(wid, self.core._charge_codec(
+            self.wire.encode_release, tids))
+
+    def send_gather(self, wid: int, tids) -> None:
+        self._send_frames(wid, self.core._charge_codec(
+            self.wire.encode_gather, tids))
+
+    def prepare_epoch(self, tasks):
+        """Encode the epoch for the live workers: the Dask wire pays one
+        update-graph message per key, the static wire one frame per epoch
+        (the paper's codec asymmetry on the submission path)."""
+        defs = [(t.tid, float(t.duration)) for t in tasks]
+        fns = {t.tid: (t.fn, t.args) for t in tasks if t.fn is not None}
+        frames = self.core._charge_codec(self.wire.encode_update_graph,
+                                         defs, fns or None)
+        return frames, fns
+
+    def broadcast_epoch(self, prepared) -> None:
+        frames, fns = prepared
+        self.core._tasks_table.update(fns)
+        for wid in range(self.core.n_workers):
+            if wid not in self.core.dead:
+                self._send_frames(wid, frames)
+
+    # -- events ---------------------------------------------------------
+
+    def _events_from(self, raw_events) -> list[tuple]:
+        core = self.core
+        out: list[tuple] = []
+        for wid, raw in raw_events:
+            if raw is None:           # EOF: unexpected death
+                out.append(("lost", wid, None))
+                continue
+            core.wire_bytes += len(raw)
+            core.wire_frames += 1
+            op, recs, payloads = core._charge_codec(self.wire.decode, raw)
+            if wid in core.dead:
+                continue      # stale frame from a failed worker
+            ev = msg.frame_event(op, wid, recs, payloads)
+            if ev is not None:
+                out.append(ev)
+        return out
+
+    # -- lifecycle ------------------------------------------------------
+
+    def finalize(self, force: bool) -> None:
+        if force or self._tp is None:
+            return
+        bye = self.wire.encode_shutdown()
+        for wid in range(self.core.n_workers):
+            if wid not in self.core.dead:
+                self._tp.send(wid, bye)
+        # give the non-blocking writers a chance to flush
+        for _ in range(50):
+            self._tp.poll(0.01)
+            if all(not p.is_alive() for p in self.procs):
+                break
+
+    def teardown(self, force: bool) -> None:
         try:
-            if not force:
-                bye = self.wire.encode_shutdown()
-                for wid in range(self.n_workers):
-                    if wid not in self.dead:
-                        self._tp.send(wid, bye)
-                # give the non-blocking writers a chance to flush
-                for _ in range(50):
-                    self._tp.poll(0.01)
-                    if all(not p.is_alive() for p in self.procs):
-                        break
-            else:
+            if force:
                 for p in self.procs:
                     if p.is_alive():
                         p.kill()
         finally:
-            if self._tp is not None:
+            if self._tp is not None and not self._tp_closed:
+                self._tp_closed = True
                 self._tp.close()
             for p in self.procs:
                 p.join(timeout=1.0)
                 if p.is_alive():
                     p.kill()
                     p.join(timeout=5.0)
+
+    # -- meters ---------------------------------------------------------
+
+    def take_payload_bytes(self) -> int:
+        return self.wire.take_payload_bytes()
+
+    def take_gather_bytes(self) -> int:
+        return self.wire.take_gather_bytes()
+
+    def stats_extra(self) -> dict:
+        core = self.core
+        return dict(wire_bytes=core.wire_bytes,
+                    wire_frames=core.wire_frames,
+                    codec_s=round(core.codec_s, 6),
+                    transport=self.transport_kind,
+                    p2p=core.p2p,
+                    relay_bytes=core.relay_bytes,
+                    p2p_bytes=core.p2p_bytes,
+                    gather_bytes=core.gather_bytes,
+                    p2p_fetches=core.n_p2p_fetches,
+                    server_driver=self.name)
+
+
+class SelectorDriver(_ProcessDriver):
+    """Blocking-selector server loop over the existing pipe/socket
+    transports — today's tight-loop server architecture."""
+
+    name = "selector"
+
+    def _make_transport(self, n_workers: int):
+        return tp.make_server_transport(self.transport_kind, n_workers)
+
+    def connect(self) -> None:
+        self._tp.after_start(self.procs)
+
+    def poll(self, timeout: float) -> list[tuple]:
+        return self._events_from(self._tp.poll(timeout))
+
+
+class AsyncioDriver(_ProcessDriver):
+    """The same ServerCore on an asyncio event loop: per-worker
+    StreamReader tasks feed a queue, sends ride StreamWriters with
+    batched drains — the Dask-like Python-server architecture, making
+    the paper's server-loop comparison measurable in-repo.  Workers are
+    byte-identical to the selector driver's (blocking endpoints)."""
+
+    name = "asyncio"
+
+    def _make_transport(self, n_workers: int):
+        return tp.AsyncioTransport(self.transport_kind, n_workers)
+
+    def serve(self) -> None:
+        asyncio.run(self._serve())
+
+    async def _serve(self) -> None:
+        core = self.core
+        try:
+            self._raw_q = await self._tp.a_start()
+            core._bootstrap()
+            while core._loop_tick():
+                raws = await self._a_poll(0.01)
+                core._process_events(self._events_from(raws))
+                await self._tp.a_flush()
+        finally:
+            try:
+                await self._a_finalize(core._timed_out
+                                       or core._force_shutdown)
+            finally:
+                await self._tp.a_close()
+
+    async def _a_poll(self, timeout: float) -> list:
+        q = self._raw_q
+        raws = []
+        try:
+            raws.append(await asyncio.wait_for(q.get(), timeout))
+        except asyncio.TimeoutError:
+            return raws
+        while True:
+            try:
+                raws.append(q.get_nowait())
+            except asyncio.QueueEmpty:
+                break
+        return raws
+
+    async def _a_finalize(self, force: bool) -> None:
+        if force:
+            return
+        bye = self.wire.encode_shutdown()
+        for wid in range(self.core.n_workers):
+            if wid not in self.core.dead:
+                self._tp.send(wid, bye)
+        await self._tp.a_flush()
+        for _ in range(50):
+            if all(not p.is_alive() for p in self.procs):
+                break
+            await asyncio.sleep(0.01)
+
+    def finalize(self, force: bool) -> None:
+        pass    # handled inside _serve (the writers live on the loop)
+
+
+_PROCESS_DRIVERS = {"selector": SelectorDriver, "asyncio": AsyncioDriver}
+
+
+# ---------------------------------------------------------------------------
+# Engine shells
+# ---------------------------------------------------------------------------
+
+class ThreadRuntime(ServerCore):
+    """Server thread + worker threads connected by an
+    :class:`repro.core.transport.InprocTransport`.  Tasks are real Python
+    callables (or calibrated sleeps, or zero-worker instant completions);
+    workers are threads — the GIL is released during sleeps and
+    numpy/JAX work, matching the paper's single-threaded-worker setup.
+    Also the substrate for the framework integration: the trainer and
+    serving engine submit task graphs here."""
+
+    def __init__(self, graph: TaskGraph, reactor, n_workers: int,
+                 *, zero_worker: bool = False, simulate_durations=True,
+                 balance_interval: float = 0.05, timeout: float = 300.0):
+        self.zero_worker = zero_worker
+        self.simulate_durations = simulate_durations
+        super().__init__(graph, reactor, n_workers, InprocDriver(),
+                         p2p=False, balance_interval=balance_interval,
+                         timeout=timeout)
+        self.transport = tp.InprocTransport(n_workers)
+        self.driver.transport = self.transport
+        self.queued: dict[int, list[int]] = {}
+        self.running: dict[int, int] = {}   # wid -> tid
+
+    # back-compat views onto the transport (trainer / faults poke these)
+    @property
+    def server_inbox(self) -> queue.Queue:
+        return self.transport.inbox
+
+    @property
+    def worker_inbox(self) -> list[queue.Queue]:
+        return self.transport.worker_queues
+
+    # ------------------------------------------------------------------
+    def _worker_loop(self, wid: int) -> None:
+        while True:
+            item = self.transport.worker_recv(wid)
+            if item is None:
+                return
+            tid = item
+            if wid in self.dead:
+                continue
+            with self._lock:
+                q = self.queued.setdefault(wid, [])
+                if tid in q:
+                    q.remove(tid)
+                else:
+                    # retracted: the server stole this task after queuing
+                    # it here (it left queued[wid] under the lock), so
+                    # skip it instead of double-executing — on a warm
+                    # pool a straggler's stale backlog would otherwise
+                    # delay the next epoch
+                    continue
+                self.running[wid] = tid
+            if not self.zero_worker:
+                t = self.g.tasks[tid]
+                if t.fn is not None:
+                    args = [self.results.get(d) for d in t.inputs]
+                    self.results[tid] = t.fn(*args) if t.args == () \
+                        else t.fn(*t.args)
+                elif self.simulate_durations and t.duration > 0:
+                    time.sleep(t.duration)
+            with self._lock:
+                self.running.pop(wid, None)
+            self.transport.worker_send(wid, ("finished", tid, wid))
+
+
+class ProcessRuntime(ServerCore):
+    """Drop-in sibling of :class:`ThreadRuntime` with OS-process workers
+    behind a byte transport.  Task payloads and completions cross the
+    transport as real bytes: the Dask-style server pays msgpack
+    encode/decode *per message*, the RSDS-style server packs a static
+    frame layout *once per batch*, so the paper's codec asymmetry is
+    measured instead of simulated.  ``driver`` picks the server
+    event-loop architecture: ``"selector"`` (blocking selector, default)
+    or ``"asyncio"`` (asyncio streams)."""
+
+    def __init__(self, graph: TaskGraph, reactor, n_workers: int,
+                 *, transport: str = "pipe", zero_worker: bool = False,
+                 simulate_durations: bool = True,
+                 balance_interval: float = 0.05, timeout: float = 300.0,
+                 start_method: str | None = None, p2p: bool = True,
+                 driver: str = "selector"):
+        if getattr(reactor, "simulate_codec", False):
+            raise ValueError(
+                "ProcessRuntime needs a reactor with simulate_codec=False: "
+                "the wire pays the real codec cost")
+        if driver not in _PROCESS_DRIVERS:
+            raise ValueError(f"unknown driver {driver!r} "
+                             f"(want selector|asyncio)")
+        self.zero_worker = zero_worker
+        self.simulate_durations = simulate_durations
+        drv = _PROCESS_DRIVERS[driver](
+            transport=transport, start_method=start_method,
+            zero_worker=zero_worker,
+            simulate_durations=simulate_durations)
+        super().__init__(graph, reactor, n_workers, drv, p2p=p2p,
+                         balance_interval=balance_interval,
+                         timeout=timeout)
+        # p2p: dependency values move worker-to-worker over who_has hints
+        # + direct fetch (Dask/RSDS-faithful data plane); off = every
+        # payload rides compute/finished frames through the server
+        self.queued: dict[int, set[int]] = {w: set()
+                                            for w in range(n_workers)}
+
+    @property
+    def wire(self):
+        return self.driver.wire
+
+    @property
+    def procs(self) -> list:
+        return self.driver.procs
+
+    @property
+    def transport_kind(self) -> str:
+        return self.driver.transport_kind
+
+    @property
+    def start_method(self) -> str | None:
+        return self.driver.start_method
 
 
 # ---------------------------------------------------------------------------
@@ -1505,9 +863,13 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     runtime="thread": in-process worker threads (codec simulated for the
     Dask-style server).  runtime="process": OS-process workers behind a
     real byte transport (codec paid on the wire); extra kwargs:
-    ``transport="pipe"|"socket"``, ``start_method``, and ``p2p`` (default
+    ``transport="pipe"|"socket"``, ``start_method``, ``p2p`` (default
     True: dependency values move worker-to-worker over who_has hints +
-    direct fetch; False: every payload is relayed through the server).
+    direct fetch; False: every payload is relayed through the server),
+    and ``driver="selector"|"asyncio"`` (the server's event-loop
+    architecture).  ``server="selector"|"asyncio"`` is accepted as
+    shorthand for the RSDS wire on that driver (forces the process
+    runtime) — the paper's server-architecture axis in one kwarg.
 
     Back-compat wrapper over the persistent Cluster/Client API: spins a
     one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a
@@ -1518,6 +880,8 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     """
     from repro.core.client import Cluster
 
+    if server in ("selector", "asyncio"):
+        runtime = "process"
     if runtime not in ("thread", "process"):
         raise ValueError(f"unknown runtime {runtime!r} (want thread|process)")
     timeout = kw.get("timeout", 300.0)

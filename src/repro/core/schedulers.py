@@ -5,6 +5,14 @@ Fig. 1): they see only the task graph and the event stream, and return
 worker assignments.  This makes them swappable across both reactor
 implementations.
 
+Event hooks (``on_finished``/``on_worker_removed``/``on_graph_extended``/
+``on_steal_failed``/``on_placed``) are driven from exactly one place —
+the reactor calls invoked by :class:`repro.core.server.ServerCore`'s
+loop — regardless of which execution driver (inproc thread pool,
+selector process pool, asyncio process pool) is serving the run, so a
+scheduler never needs to know or care which server architecture it is
+running under.
+
 * :class:`RandomScheduler`   — paper §III-E: uniform random, stateless.
 * :class:`DaskWorkStealing`  — Dask-style: minimise estimated start time
   (occupancy + transfer estimate), steal from overloaded workers.

@@ -12,8 +12,14 @@ boundary was simulated.  This module makes it pluggable:
   with 4-byte length-prefixed frames.  Fork start method only (raw fds).
 * :class:`SocketTransport` — localhost TCP with the same framing; works
   with any start method (workers connect by address).
+* :class:`AsyncioTransport` — the same byte channels (pipe or socket)
+  wrapped in **asyncio** StreamReader/StreamWriter endpoints for the
+  asyncio server driver: per-worker reader coroutines feed one event
+  queue, sends buffer on StreamWriters and drain in batches.  Workers
+  stay on the blocking endpoints — the server architecture is the only
+  variable, which is exactly the axis the paper measures.
 
-Server sides of the process transports are *selector-driven and
+Server sides of the selector transports are *selector-driven and
 never block on send*: outbound frames go through a non-blocking buffered
 writer (:class:`_NBWriter`), so a flood of compute messages cannot
 deadlock against workers flooding completions back.  Worker endpoints are
@@ -24,6 +30,7 @@ this module only moves frames.
 """
 from __future__ import annotations
 
+import asyncio
 import collections
 import os
 import queue
@@ -367,6 +374,202 @@ def _recv_exact(conn: socket.socket, n: int) -> bytes:
             raise TransportClosed("peer closed during handshake")
         buf += chunk
     return buf
+
+
+# ---------------------------------------------------------------------------
+# Asyncio transport (asyncio server driver; workers stay blocking)
+# ---------------------------------------------------------------------------
+
+class AsyncioTransport:
+    """Asyncio server endpoints over the pipe or socket byte channels.
+
+    Construction is synchronous (the fds/listener must exist before the
+    workers spawn); the stream wrapping happens on the running event loop
+    via :meth:`a_start`, which returns the ``asyncio.Queue`` that the
+    per-worker reader tasks feed with ``(wid, frame)`` tuples —
+    ``(wid, None)`` marks EOF (worker death).  ``send`` writes
+    synchronously into the StreamWriter's buffer; :meth:`a_flush` awaits
+    the drains in one batch per loop iteration (the asyncio analogue of
+    :class:`_NBWriter`'s flush)."""
+
+    def __init__(self, kind: str, n_workers: int):
+        if kind not in ("pipe", "socket"):
+            raise ValueError(f"unknown transport {kind!r} "
+                             "(want pipe|socket)")
+        self.kind = kind
+        self.name = kind
+        self.n_workers = n_workers
+        self._writers: dict[int, asyncio.StreamWriter] = {}
+        # pipe reads get their own transport (socket reads share the
+        # writer's); closed explicitly so fds never wait on cyclic GC
+        self._rtransports: dict[int, asyncio.ReadTransport] = {}
+        self._tasks: list = []
+        self._dirty: set[int] = set()
+        self._open: set[int] = set()
+        self._q: asyncio.Queue | None = None
+        self._started = False
+        if kind == "pipe":
+            self._s2w = [os.pipe() for _ in range(n_workers)]
+            self._w2s = [os.pipe() for _ in range(n_workers)]
+        else:
+            self._listener = socket.socket(socket.AF_INET,
+                                           socket.SOCK_STREAM)
+            self._listener.setsockopt(socket.SOL_SOCKET,
+                                      socket.SO_REUSEADDR, 1)
+            self._listener.bind(("127.0.0.1", 0))
+            self._listener.listen(n_workers)
+            self.addr = self._listener.getsockname()
+
+    # lifecycle ---------------------------------------------------------
+    def worker_args(self, wid: int):
+        if self.kind == "pipe":
+            return ("pipe", self._s2w[wid][0], self._w2s[wid][1])
+        return ("socket", self.addr, wid)
+
+    def child_cleanup(self, wid: int) -> list[int]:
+        if self.kind != "pipe":
+            return []   # children create their own socket after start
+        fds = []
+        for i in range(self.n_workers):
+            fds += [self._s2w[i][1], self._w2s[i][0]]
+            if i != wid:
+                fds += [self._s2w[i][0], self._w2s[i][1]]
+        return fds
+
+    async def a_start(self, timeout: float = 30.0) -> asyncio.Queue:
+        """Wrap every worker channel in asyncio streams and start the
+        reader tasks; returns the shared inbound-frame queue."""
+        loop = asyncio.get_running_loop()
+        self._q = asyncio.Queue()
+        self._started = True
+        if self.kind == "pipe":
+            for wid in range(self.n_workers):
+                # close the parent's copies of the child ends, or
+                # EOF-on-death detection breaks
+                os.close(self._s2w[wid][0])
+                os.close(self._w2s[wid][1])
+                rfd = self._w2s[wid][0]
+                wfd = self._s2w[wid][1]
+                reader = asyncio.StreamReader()
+                rtr, _ = await loop.connect_read_pipe(
+                    lambda r=reader: asyncio.StreamReaderProtocol(r),
+                    os.fdopen(rfd, "rb", 0))
+                self._rtransports[wid] = rtr
+                wt, wp = await loop.connect_write_pipe(
+                    asyncio.streams.FlowControlMixin,
+                    os.fdopen(wfd, "wb", 0))
+                writer = asyncio.StreamWriter(wt, wp, None, loop)
+                self._register(wid, reader, writer)
+        else:
+            self._listener.setblocking(False)
+            for _ in range(self.n_workers):
+                conn, _ = await asyncio.wait_for(
+                    loop.sock_accept(self._listener), timeout)
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                reader, writer = await asyncio.open_connection(sock=conn)
+                hello = await asyncio.wait_for(
+                    reader.readexactly(_LEN.size), timeout)
+                (wid,) = _LEN.unpack(hello)
+                self._register(wid, reader, writer)
+            self._listener.close()
+        return self._q
+
+    def _register(self, wid: int, reader: asyncio.StreamReader,
+                  writer: asyncio.StreamWriter) -> None:
+        self._writers[wid] = writer
+        self._open.add(wid)
+        self._tasks.append(asyncio.get_running_loop().create_task(
+            self._read_loop(wid, reader)))
+
+    async def _read_loop(self, wid: int,
+                         reader: asyncio.StreamReader) -> None:
+        q = self._q
+        try:
+            while True:
+                hdr = await reader.readexactly(_LEN.size)
+                (n,) = _LEN.unpack(hdr)
+                q.put_nowait((wid, await reader.readexactly(n)))
+        except (asyncio.IncompleteReadError, ConnectionError, OSError):
+            q.put_nowait((wid, None))
+
+    # server side -------------------------------------------------------
+    def send(self, wid: int, data: bytes) -> None:
+        w = self._writers.get(wid)
+        if w is None:
+            return
+        try:
+            w.write(_LEN.pack(len(data)) + data)
+        except Exception:
+            pass  # death is reported via the read side
+        self._dirty.add(wid)
+
+    async def a_flush(self) -> None:
+        for wid in list(self._dirty):
+            self._dirty.discard(wid)
+            w = self._writers.get(wid)
+            if w is None:
+                continue
+            try:
+                await w.drain()
+            except (ConnectionError, OSError, RuntimeError):
+                pass  # peer died; the read side reports it
+
+    def drop(self, wid: int) -> None:
+        self._open.discard(wid)
+        self._dirty.discard(wid)
+        w = self._writers.pop(wid, None)
+        if w is not None:
+            try:
+                w.close()
+            except Exception:
+                pass
+        rt = self._rtransports.pop(wid, None)
+        if rt is not None:
+            try:
+                rt.close()
+            except Exception:
+                pass
+
+    def poll(self, timeout: float):
+        """Selector-compat no-op (the graceful-shutdown drain calls it);
+        the asyncio driver pumps events through :meth:`a_start`'s queue."""
+        time.sleep(min(timeout, 0.01))
+        return []
+
+    async def a_close(self) -> None:
+        for t in self._tasks:
+            t.cancel()
+        for t in self._tasks:
+            try:
+                await t
+            except (asyncio.CancelledError, Exception):
+                pass
+        self._tasks = []
+        for wid in set(self._writers) | set(self._rtransports):
+            self.drop(wid)
+        # transport.close() only *schedules* the fd close (call_soon);
+        # yield to the loop so the callbacks run before it shuts down,
+        # or every run leaks its pipe/socket fds until cyclic GC
+        for _ in range(3):
+            await asyncio.sleep(0)
+
+    def close(self) -> None:
+        """Off-loop leftover cleanup (idempotent)."""
+        if self.kind == "socket":
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        elif not self._started:
+            # streams never wrapped the fds: close both ends ourselves
+            for pairs in (self._s2w, self._w2s):
+                for r, w in pairs:
+                    for fd in (r, w):
+                        try:
+                            os.close(fd)
+                        except OSError:
+                            pass
+            self._s2w = self._w2s = []
 
 
 # ---------------------------------------------------------------------------

@@ -116,13 +116,15 @@ def test_p2p_fn_task_with_duration_dep_completes(server):
 # tentpole fallback: forced holder kill mid-graph
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("driver", ["selector", "asyncio"])
 @pytest.mark.parametrize("server", SERVERS)
-def test_fetch_fallback_on_holder_death(server):
+def test_fetch_fallback_on_holder_death(server, driver):
     """Kill the only holder of a dependency after its consumer may have
     been hinted at it: the consumer parks via fetch-failed, lineage
-    recomputes the dep, and the task completes with the right value."""
+    recomputes the dep, and the task completes with the right value —
+    under either server event-loop driver."""
     with Cluster(server=server, runtime="process", n_workers=3,
-                 transport="socket", timeout=60.0) as c:
+                 driver=driver, transport="socket", timeout=60.0) as c:
         f = c.client.submit(_leaf, 123)
         assert f.result(30.0) == 123
         holders = c.runtime._holders(f.tid)
@@ -141,15 +143,16 @@ def test_fetch_fallback_on_holder_death(server):
 # satellite: gather for a never-cached key fails fast (silent-drop fix)
 # ---------------------------------------------------------------------------
 
-def test_gather_never_cached_key_fails_fast():
+@pytest.mark.parametrize("driver", ["selector", "asyncio"])
+def test_gather_never_cached_key_fails_fast(driver):
     """Duration-model tasks cache no value: a gather for one must come
     back as an explicit absent marker and fail the fetch quickly, not
     spin the client's full timeout (the old worker silently dropped
     unknown keys from its gather reply)."""
     g = benchgraphs.merge(20, dur_ms=0.0)
     with Cluster(server="rsds", runtime="process", n_workers=2,
-                 transport="socket", simulate_durations=False,
-                 timeout=60.0) as c:
+                 driver=driver, transport="socket",
+                 simulate_durations=False, timeout=60.0) as c:
         futs = c.client.submit_graph(g)
         assert futs.wait(30.0)
         t0 = time.perf_counter()

@@ -1,0 +1,271 @@
+"""ServerCore refactor: driver-pluggable server architecture.
+
+Covers the PR-4 tentpole and its satellites:
+
+* the parity matrix grows a ``server=asyncio`` column: selector and
+  asyncio drivers produce bit-identical results across pipe/socket x
+  dask/rsds (against the thread baseline), with relay bytes still 0 on
+  the p2p data plane,
+* forced-holder-kill fallback and gather fail-fast behave identically
+  under the asyncio driver,
+* ``run_graph``/``Cluster`` accept ``server="selector"|"asyncio"``,
+* public-surface regression: ThreadRuntime/ProcessRuntime APIs and
+  RunResult/EpochStats fields are unchanged post-refactor, and both
+  engines consult the single ServerCore state machine,
+* proactive who_has re-hint on worker loss (the PR-3 ROADMAP
+  refinement) short-circuits the fetch-failed round trip.
+"""
+import dataclasses
+import inspect
+import time
+
+import pytest
+
+from repro.core import benchgraphs, run_graph
+from repro.core.client import Cluster
+
+SERVERS = ["dask", "rsds"]
+DRIVERS = ["selector", "asyncio"]
+
+
+def _leaf(v):
+    return v
+
+
+def _sq(x):
+    return x * x
+
+
+def _plus1(x):
+    return x + 1
+
+
+def _slow_plus(x):
+    time.sleep(0.1)
+    return x + 1
+
+
+def _block(s):
+    time.sleep(s)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the asyncio column of the parity matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("transport", ["pipe", "socket"])
+@pytest.mark.parametrize("server", SERVERS)
+def test_asyncio_driver_parity(server, transport):
+    """Same wire, same scheduler, same workers — only the server's
+    event-loop architecture changes.  Results must be bit-identical to
+    the selector driver and the thread baseline, and the p2p data plane
+    must still keep payload bytes off the server."""
+    g = benchgraphs.value_reduction(12, fan=3)
+    base = run_graph(g, server=server, runtime="thread", n_workers=3,
+                     timeout=60.0)
+    assert not base.timed_out
+
+    sel = run_graph(g, server=server, runtime="process", n_workers=3,
+                    transport=transport, start_method="fork",
+                    driver="selector", timeout=60.0)
+    aio = run_graph(g, server=server, runtime="process", n_workers=3,
+                    transport=transport, start_method="fork",
+                    driver="asyncio", timeout=60.0)
+    assert not sel.timed_out and not aio.timed_out
+    assert base.results == sel.results == aio.results    # bit-for-bit
+    for r, driver in ((sel, "selector"), (aio, "asyncio")):
+        assert r.stats["server_driver"] == driver
+        assert r.stats["transport"] == transport
+        assert r.stats["relay_bytes"] == 0               # p2p stays p2p
+        assert r.stats["p2p_bytes"] > 0
+        assert r.stats["wire_frames"] > 0
+
+
+def test_server_kwarg_selects_driver():
+    """server="selector"|"asyncio" is the one-kwarg server-architecture
+    axis: RSDS wire, process runtime, chosen event loop."""
+    g = benchgraphs.merge(40, dur_ms=0.0)
+    for driver in DRIVERS:
+        r = run_graph(g, server=driver, n_workers=3,
+                      simulate_durations=False, timeout=60.0)
+        assert not r.timed_out
+        assert r.stats["server_driver"] == driver
+    with Cluster(server="asyncio", n_workers=2, timeout=30.0) as c:
+        assert c.server == "rsds"
+        assert c.server_driver == "asyncio"
+        assert c.client.submit(_sq, 4).result(30.0) == 16
+    with Cluster(server="rsds", runtime="thread", n_workers=2) as c:
+        assert c.server_driver == "inproc"
+
+
+def test_unknown_driver_rejected():
+    from repro.core.array_reactor import ArrayReactor
+    from repro.core.graph import TaskGraph
+    from repro.core.runtime import ProcessRuntime
+    from repro.core.schedulers import make_scheduler
+
+    g = TaskGraph([], name="x")
+    reactor = ArrayReactor(g, make_scheduler("rsds_ws"), 2,
+                           simulate_codec=False)
+    with pytest.raises(ValueError, match="driver"):
+        ProcessRuntime(g, reactor, 2, driver="twisted")
+
+
+# ---------------------------------------------------------------------------
+# asyncio column: holder-kill fallback and gather fail-fast
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_asyncio_fetch_fallback_on_holder_death(server):
+    """Kill the only holder of a dependency under the asyncio driver:
+    the consumer parks via fetch-failed, lineage recomputes the dep, and
+    the task completes with the right value."""
+    with Cluster(server=server, runtime="process", n_workers=3,
+                 driver="asyncio", transport="socket", timeout=60.0) as c:
+        f = c.client.submit(_leaf, 123)
+        assert f.result(30.0) == 123
+        holders = c.runtime._holders(f.tid)
+        assert holders
+        c.runtime.results.pop(f.tid, None)
+        c.runtime.fail_worker(holders[0])
+        g = c.client.submit(_plus1, f)
+        assert g.result(30.0) == 124
+        assert any(w != holders[0] for w in c.runtime._holders(f.tid))
+
+
+def test_asyncio_gather_never_cached_key_fails_fast():
+    """Duration-model tasks cache no value: a gather for one must fail
+    the fetch quickly under the asyncio driver too, not spin the
+    client's full timeout."""
+    g = benchgraphs.merge(20, dur_ms=0.0)
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 driver="asyncio", transport="socket",
+                 simulate_durations=False, timeout=60.0) as c:
+        futs = c.client.submit_graph(g)
+        assert futs.wait(30.0)
+        t0 = time.perf_counter()
+        ok = c.runtime.fetch([futs[0].tid], timeout=10.0)
+        dt = time.perf_counter() - t0
+        assert not ok
+        assert dt < 5.0, f"fetch took {dt:.1f}s (spun the timeout)"
+
+
+# ---------------------------------------------------------------------------
+# satellite: proactive re-hint on worker loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_proactive_rehint_on_worker_loss(driver):
+    """Tasks already queued toward survivors with who_has hints at a
+    dying worker get their hints rewritten immediately (retract +
+    re-send) instead of paying a dead-peer connect + fetch-failed round
+    trip each.  Blockers pin both workers so the consumers are still
+    queued when the holder dies."""
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 scheduler="random", driver=driver, transport="socket",
+                 timeout=60.0) as c:
+        f = c.client.submit(_leaf, 5)
+        assert f.result(30.0) == 5        # also lands a server-side copy
+        holder = c.runtime._holders(f.tid)[0]
+        c.client.map(_block, [0.6] * 4)   # occupy both workers
+        futs = [c.client.submit(_slow_plus, f) for _ in range(6)]
+        c.runtime.fail_worker(holder)
+        t0 = time.perf_counter()
+        assert [fu.result(30.0) for fu in futs] == [6] * 6
+        # re-hinted consumers never dial the dead holder, so completion
+        # stays far below the dead-peer connect timeout regime
+        assert time.perf_counter() - t0 < 20.0
+        assert c.runtime.n_rehints >= 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: public surface unchanged post-refactor
+# ---------------------------------------------------------------------------
+
+def test_run_result_and_epoch_stats_fields_unchanged():
+    from repro.core.runtime import EpochStats, RunResult
+
+    assert [f.name for f in dataclasses.fields(RunResult)] == [
+        "makespan", "n_tasks", "server_busy", "stats", "results",
+        "timed_out", "epochs"]
+    names = [f.name for f in dataclasses.fields(EpochStats)]
+    assert names == ["eid", "n_tasks", "t_submit", "t_ingest", "t_done",
+                     "lo", "hi", "remaining", "server_busy0",
+                     "server_busy1", "relay_bytes0", "relay_bytes1",
+                     "p2p_bytes0", "p2p_bytes1", "error", "done_evt"]
+    for prop in ("makespan", "server_busy", "relay_bytes", "p2p_bytes"):
+        assert isinstance(getattr(EpochStats, prop), property)
+
+
+def test_runtime_public_api_unchanged():
+    """The refactor keeps both engines' public methods/attributes: thin
+    shells over one ServerCore, not a new API."""
+    from repro.core.array_reactor import ArrayReactor
+    from repro.core.graph import TaskGraph
+    from repro.core.runtime import (ProcessRuntime, ServerCore,
+                                    ThreadRuntime, run_graph)
+    from repro.core.schedulers import make_scheduler
+
+    # single state machine consulted by every driver
+    assert issubclass(ThreadRuntime, ServerCore)
+    assert issubclass(ProcessRuntime, ServerCore)
+
+    for cls in (ThreadRuntime, ProcessRuntime):
+        for name in ("start", "shutdown", "run", "submit_tasks",
+                     "release_tasks", "fetch", "fail_worker",
+                     "wait_epoch", "epoch", "epoch_dicts"):
+            assert callable(getattr(cls, name)), (cls, name)
+
+    sig = inspect.signature(run_graph)
+    assert list(sig.parameters) == ["graph", "server", "scheduler",
+                                    "n_workers", "runtime", "seed", "kw"]
+
+    g = TaskGraph([], name="api")
+    rt = ThreadRuntime(g, ArrayReactor(g, make_scheduler("rsds_ws"), 2), 2)
+    for attr in ("g", "reactor", "n_workers", "results", "queued",
+                 "running", "dead", "server_busy", "relay_bytes",
+                 "p2p_bytes", "transport", "server_inbox", "worker_inbox",
+                 "zero_worker", "simulate_durations"):
+        assert hasattr(rt, attr), attr
+    assert isinstance(rt.queued, dict) and isinstance(rt.running, dict)
+
+    g2 = TaskGraph([], name="api2")
+    rp = ProcessRuntime(
+        g2, ArrayReactor(g2, make_scheduler("rsds_ws"), 2,
+                         simulate_codec=False), 2)
+    for attr in ("g", "reactor", "results", "queued", "dead", "procs",
+                 "wire", "server_busy", "codec_s", "wire_bytes",
+                 "wire_frames", "relay_bytes", "p2p_bytes",
+                 "gather_bytes", "n_p2p_fetches", "transport_kind",
+                 "p2p", "_gather_failed"):
+        assert hasattr(rp, attr), attr
+    proc_params = inspect.signature(ProcessRuntime.__init__).parameters
+    for kwarg in ("transport", "zero_worker", "simulate_durations",
+                  "balance_interval", "timeout", "start_method", "p2p",
+                  "driver"):
+        assert kwarg in proc_params, kwarg
+
+
+def test_thread_pool_survives_scale_to_zero_then_up():
+    """A persistent thread pool scaled to zero workers must keep its
+    server loop alive so ElasticController can scale it back up (only
+    process pools — and one-shot runs — are unrecoverable when empty)."""
+    from repro.ft.faults import ElasticController
+
+    with Cluster(server="rsds", runtime="thread", n_workers=1,
+                 timeout=30.0) as c:
+        ec = ElasticController(c)
+        f = c.client.submit(_sq, 3)
+        assert f.result(10.0) == 9
+        # drop the hold so retiring the worker has nothing to re-run
+        # (lineage re-execution on a zero-worker pool cannot assign)
+        f.release()
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline \
+                and not c.reactor.is_released(f.tid):
+            time.sleep(0.01)
+        ec.scale_down(0)                  # momentarily-empty pool
+        time.sleep(0.1)                   # let the loss event process
+        ec.scale_up(1)
+        assert c.client.submit(_sq, 4).result(10.0) == 16

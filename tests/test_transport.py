@@ -292,3 +292,41 @@ def test_nbwriter_buffers_on_eagain():
     state["block"] = False
     assert w.flush()
     assert b"".join(writes) == b"12345678"
+
+
+def test_asyncio_transport_socket_roundtrip():
+    """AsyncioTransport serves the same blocking worker endpoints over
+    asyncio streams: hello handshake, framed send, framed receive, EOF
+    surfaced as (wid, None)."""
+    import asyncio
+
+    t = tp.AsyncioTransport("socket", 1)
+
+    def worker():
+        ep = tp.make_worker_endpoint(t.worker_args(0))
+        raw = ep.recv(5.0)
+        ep.send(b"echo:" + raw)
+        ep.close()
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+
+    async def main():
+        q = await t.a_start()
+        t.send(0, b"abc")
+        await t.a_flush()
+        first = await asyncio.wait_for(q.get(), 5.0)
+        eof = await asyncio.wait_for(q.get(), 5.0)   # endpoint closed
+        await t.a_close()
+        return first, eof
+
+    first, eof = asyncio.run(main())
+    th.join(5.0)
+    assert first == (0, b"echo:abc")
+    assert eof == (0, None)
+    t.close()
+
+
+def test_asyncio_transport_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        tp.AsyncioTransport("carrier-pigeon", 1)
