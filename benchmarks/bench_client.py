@@ -24,6 +24,67 @@ from repro.core.client import Cluster
 SERVERS = ("dask", "rsds")
 
 
+def _bench_spill(runtime: str, n_workers: int) -> list[tuple]:
+    """Spill overhead: the same array-carrying reduction under an
+    unlimited store vs a memory_limit far below the live intermediate
+    set (forcing LRU spill-to-disk + unspill on access).  The ratio is
+    the price of running larger-than-memory; the unlimited row doubles
+    as the fast-path regression guard (store ~= dict)."""
+    g = benchgraphs.array_reduction(24, elems=8192, fan=4)
+    sink = g.n_tasks - 1
+    want = float(8192 * 24 * 25 / 2)
+    rows: list[tuple] = []
+    per: dict[str, float] = {}
+    for mode, limit in (("unlimited", None), ("limited", 120_000)):
+        t0 = time.perf_counter()
+        r = run_graph(g, server="rsds", runtime=runtime,
+                      n_workers=n_workers, memory_limit=limit,
+                      timeout=120.0)
+        ms = (time.perf_counter() - t0) * 1e3
+        if r.timed_out or r.results.get(sink) != want:
+            rows.append((f"client-{runtime}/spill-{mode}", "",
+                         "timeout" if r.timed_out else
+                         f"BAD-RESULT:{r.results.get(sink)}!={want}"))
+            continue
+        per[mode] = ms
+        rows.append((f"client-{runtime}/spill-{mode}", round(ms, 3),
+                     f"spill_bytes={r.stats['spill_bytes']};"
+                     f"unspill_count={r.stats['unspill_count']};"
+                     f"peak_worker_bytes={r.stats['peak_worker_bytes']};"
+                     f"limit={limit}"))
+    if "unlimited" in per and "limited" in per:
+        rows.append((f"client-{runtime}/spill-overhead", "",
+                     f"limited/unlimited="
+                     f"{per['limited'] / max(per['unlimited'], 1e-9):.2f}"))
+    return rows
+
+
+def _bench_compaction(n_epochs: int = 400) -> list[tuple]:
+    """Bounded footprint over many submit/release epochs: with prefix
+    compaction the graph's stored rows stay ~flat while the logical tid
+    space keeps growing (the old behaviour grew rows forever)."""
+    rows_seen = []
+    with Cluster(server="rsds", runtime="thread", n_workers=4,
+                 compact_threshold=256, timeout=120.0) as c:
+        for i in range(n_epochs):
+            f = c.client.submit(_inc, i)
+            f.result(30.0)
+            f.release()
+            rows_seen.append(c.runtime.g.n_rows)
+        rt = c.runtime
+        early = max(rows_seen[:n_epochs // 4])
+        late = max(rows_seen[-n_epochs // 4:])
+        return [("client/tid-compaction/max-rows", late,
+                 f"early_max={early};late_max={late};"
+                 f"n_tasks={rt.g.n_tasks};tid_base={rt.g.tid_base};"
+                 f"compactions={rt.n_compactions};"
+                 f"bounded={late <= max(2 * early, 512)}")]
+
+
+def _inc(v):
+    return v + 1
+
+
 def _bench_ingest(n_epochs: int = 40, m: int = 200) -> list[tuple]:
     """Amortized ingestion: per-task extend+add_tasks cost on a warm
     graph/reactor across many epochs.  With doubling-capacity buffers
@@ -133,7 +194,9 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
                                n_workers))
         if runtime == "process":
             rows.extend(_bench_data_plane(server, n_workers))
+    rows.extend(_bench_spill(runtime, n_workers))
     rows.extend(_bench_ingest())
+    rows.extend(_bench_compaction())
     return rows
 
 

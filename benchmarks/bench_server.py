@@ -15,12 +15,22 @@ import sys
 
 from benchmarks.common import bench_suite, geomean, run_avg
 
-DRIVERS = ("selector", "asyncio")
+
+def _drivers() -> tuple:
+    """selector + asyncio always; uvloop opportunistically (the fourth
+    server-architecture point) when the optional dep is importable."""
+    from repro.core.runtime import has_uvloop
+
+    return (("selector", "asyncio", "uvloop") if has_uvloop()
+            else ("selector", "asyncio"))
+
+
+DRIVERS = _drivers()
 
 
 def _driver_axis(scale, n_workers: int = 4) -> list[tuple]:
-    """selector-vs-asyncio on each wire: same graph, same scheduler,
-    same workers — only the server's event loop changes."""
+    """selector-vs-asyncio(-vs-uvloop) on each wire: same graph, same
+    scheduler, same workers — only the server's event loop changes."""
     from repro.core import benchgraphs
 
     rows = []
@@ -37,10 +47,13 @@ def _driver_axis(scale, n_workers: int = 4) -> list[tuple]:
                 f"server-arch/{server}/{driver}/{g.name}/w{n_workers}",
                 round(mk * 1e6 / g.n_tasks, 3) if mk else "",
                 "timeout" if mk is None else "driver-axis"))
-        if per.get("selector") and per.get("asyncio"):
-            rows.append((
-                f"server-arch/{server}/selector-vs-asyncio/w{n_workers}",
-                "", f"asyncio_speedup={per['selector'] / per['asyncio']:.3f}"))
+        base = per.get("selector")
+        for other in DRIVERS[1:]:
+            if base and per.get(other):
+                rows.append((
+                    f"server-arch/{server}/selector-vs-{other}"
+                    f"/w{n_workers}",
+                    "", f"{other}_speedup={base / per[other]:.3f}"))
     return rows
 
 

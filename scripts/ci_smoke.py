@@ -3,9 +3,11 @@
 Runs merge+tree graphs through the simulator, the thread runtime and the
 process runtime (both servers, both server drivers — blocking selector
 AND the asyncio event loop), plus a warm persistent Cluster submitting
-back-to-back epochs on each runtime, each under a short watchdog, and
-exits nonzero on any timeout/hang/error — so CI fails in seconds instead
-of waiting out the 300 s benchmark timeout.
+back-to-back epochs on each runtime, data-plane relay/p2p byte-split
+checks, and a memory-pressure spill case (tiny memory_limit must force
+object-store spill with bit-correct results), each under a short
+watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
+seconds instead of waiting out the 300 s benchmark timeout.
 
     PYTHONPATH=src python scripts/ci_smoke.py
 """
@@ -61,6 +63,34 @@ def _data_plane_case(server: str, p2p: bool, driver: str = "selector"):
     return r
 
 
+def _spill_case(server: str):
+    """Memory subsystem under the watchdog: a reduction whose live
+    intermediate set exceeds a deliberately tiny memory_limit must
+    complete with the right value AND report real spill activity
+    (spilled_bytes > 0), with peak worker bytes inside limit + one
+    object's slack."""
+    from repro.core import benchgraphs, run_graph
+
+    elems, leaves, limit = 2048, 12, 40_000
+    g = benchgraphs.array_reduction(leaves, elems=elems, fan=4)
+    want = float(elems * leaves * (leaves + 1) / 2)
+    r = run_graph(g, server=server, runtime="process", n_workers=3,
+                  memory_limit=limit, timeout=30)
+    if not r.timed_out:
+        got = r.results.get(g.n_tasks - 1)
+        if got != want:
+            raise AssertionError(f"bad result {got} != {want}")
+        if r.stats.get("spill_bytes", 0) <= 0:
+            raise AssertionError("tiny memory_limit did not spill")
+        peak = r.stats.get("peak_worker_bytes", 0)
+        if peak > limit + elems * 8 + 512:
+            raise AssertionError(f"peak {peak}B busts the limit {limit}B")
+    r.detail = (f"spill={r.stats.get('spill_bytes')}B "
+                f"unspills={r.stats.get('unspill_count')} "
+                f"peak={r.stats.get('peak_worker_bytes')}B")
+    return r
+
+
 def _cases():
     from repro.core import benchgraphs, run_graph, simulate
 
@@ -95,6 +125,8 @@ def _cases():
                    lambda s=server, p=p2p: _data_plane_case(s, p))
     yield ("data/rsds/p2p-asyncio",
            lambda: _data_plane_case("rsds", True, driver="asyncio"))
+    for server in ("dask", "rsds"):
+        yield (f"spill/{server}", lambda s=server: _spill_case(s))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

@@ -14,5 +14,6 @@ from repro.core.schedulers import (DaskWorkStealing, HeftScheduler,
                                    RandomScheduler, RsdsWorkStealing,
                                    make_scheduler)
 from repro.core.simulator import SimConfig, Simulator, simulate
+from repro.core.store import ObjectStore
 from repro.core.transport import (InprocTransport, PipeTransport,
                                   SocketTransport)

@@ -38,6 +38,10 @@ class ArrayReactor:
         self.stats = ReactorStats()
         scheduler.attach(graph, n_workers, workers_per_node, seed)
         n = graph.n_tasks
+        # compaction mirror of the graph: row index = tid - tid_base
+        # (constructed on a fresh graph, so the bases start equal)
+        self.tid_base = graph.tid_base
+        self._rel_frontier = self.tid_base
         # doubling-capacity buffers: the public arrays are views of the
         # used prefix, so a warm epoch grows in amortized O(new)
         self._state_buf = np.full(n, WAITING, dtype=np.int8)
@@ -83,18 +87,20 @@ class ArrayReactor:
 
     # ------------------------------------------------------------------
     def _assign(self, ready: np.ndarray) -> list[tuple[int, int]]:
+        """``ready`` carries GLOBAL tids (rows are internal only)."""
         if len(ready) == 0:
             return []
         wids = self.scheduler.assign(ready)
-        self.state[ready] = READY
-        self.assigned[ready] = wids
+        rows = ready - self.tid_base
+        self.state[rows] = READY
+        self.assigned[rows] = wids
         self.stats.msgs_out += len(ready)
         for tid, wid in zip(ready, wids):
             self.scheduler.on_assigned(int(tid), int(wid))
         return list(zip(ready.tolist(), wids.tolist()))
 
     def start(self) -> list[tuple[int, int]]:
-        ready = np.flatnonzero(self.waiting_count == 0)
+        ready = np.flatnonzero(self.waiting_count == 0) + self.tid_base
         return self._assign(ready)
 
     # incremental ingestion (persistent Cluster/Client path) -----------
@@ -107,21 +113,22 @@ class ArrayReactor:
         (released via :meth:`release_keys`)."""
         self.scheduler.on_graph_extended()
         g = self.graph
+        b = self.tid_base
         self._grow(hi - lo, WAITING)
         ready = []
         for tid in range(lo, hi):
             missing = 0
             for d in g.inputs_of(tid):
                 d = int(d)
-                if self.state[d] == RELEASED:
+                if d < b or self.state[d - b] == RELEASED:
                     raise ValueError(
                         f"task {tid} depends on released key {d}")
-                self.waiter_count[d] += 1
-                if self.state[d] != MEMORY:
+                self.waiter_count[d - b] += 1
+                if self.state[d - b] != MEMORY:
                     missing += 1
-            self.waiting_count[tid] = missing
+            self.waiting_count[tid - b] = missing
             if retain:
-                self.waiter_count[tid] += 1
+                self.waiter_count[tid - b] += 1
             if missing == 0:
                 ready.append(tid)
         return self._assign(np.asarray(ready, dtype=np.int64))
@@ -141,12 +148,16 @@ class ArrayReactor:
         consumer waiters, is reclaimed later — when it completes or its
         last consumer finishes — and then surfaces via ``drain_purged``."""
         released = []
+        b = self.tid_base
         for tid in tids:
             tid = int(tid)
+            if tid < b:
+                continue    # compacted: long gone
             self._dropped.add(tid)
-            self.waiter_count[tid] -= 1
-            if self.waiter_count[tid] <= 0 and self.state[tid] == MEMORY:
-                self.state[tid] = RELEASED
+            self.waiter_count[tid - b] -= 1
+            if self.waiter_count[tid - b] <= 0 \
+                    and self.state[tid - b] == MEMORY:
+                self.state[tid - b] = RELEASED
                 self.stats.releases += 1
                 released.append(tid)
                 self.reclaimed.append(tid)
@@ -166,13 +177,23 @@ class ArrayReactor:
         return out
 
     def all_done_in(self, lo: int, hi: int) -> bool:
-        return bool(np.all(self.state[lo:hi] >= MEMORY))
+        b = self.tid_base   # compacted tids were RELEASED, hence done
+        if hi <= b:
+            return True     # guard: hi-b would be a negative slice stop
+        lo = max(lo, b)
+        return bool(np.all(self.state[lo - b:hi - b] >= MEMORY))
 
     def is_released(self, tid: int) -> bool:
-        return self.state[int(tid)] == RELEASED
+        tid = int(tid)
+        if tid < self.tid_base:
+            return True     # compacted: released and rows dropped
+        return self.state[tid - self.tid_base] == RELEASED
 
     def holders_of(self, tid: int) -> list[int]:
-        w = int(self.primary[int(tid)])
+        tid = int(tid)
+        if tid < self.tid_base:
+            return []
+        w = int(self.primary[tid - self.tid_base])
         return [w] if w >= 0 else []
 
     def handle_finished(self, events: Iterable[tuple[int, int]]
@@ -182,10 +203,12 @@ class ArrayReactor:
         if not ev:
             return []
         self.stats.msgs_in += len(ev)
+        b = self.tid_base
         # drop duplicate completions (failed steal retractions / re-sends)
+        # and stale events for compacted tids
         seen: set[int] = set()
         ev = [e for e in ev
-              if self.state[int(e[0])] < MEMORY
+              if int(e[0]) >= b and self.state[int(e[0]) - b] < MEMORY
               and not (int(e[0]) in seen or seen.add(int(e[0])))]
         if not ev:
             return []
@@ -193,8 +216,9 @@ class ArrayReactor:
             return self._handle_finished_scalar(ev)
         tids = np.fromiter((e[0] for e in ev), dtype=np.int64, count=len(ev))
         wids = np.fromiter((e[1] for e in ev), dtype=np.int64, count=len(ev))
-        self.state[tids] = MEMORY
-        self.primary[tids] = wids
+        rows = tids - b
+        self.state[rows] = MEMORY
+        self.primary[rows] = wids
         self.n_done += len(ev)
         for tid, wid in zip(tids, wids):
             self.scheduler.on_finished(int(tid), int(wid))
@@ -202,28 +226,33 @@ class ArrayReactor:
 
         g = self.graph
         # consumers of all finished tasks (CSR gather, vectorized;
-        # overflow-tolerant so it never forces an O(total) compaction)
+        # overflow-tolerant so it never forces an O(total) compaction).
+        # Consumer/dep VALUES are global tids; rows translate by base
+        # (deps of a finishing task hold waiter refs, so none can sit
+        # below the compaction base)
         cons = g.consumers_of_many(tids)
         if len(cons):
-            np.subtract.at(self.waiting_count, cons, 1)
-            cand = np.unique(cons)
+            crows = cons - b
+            np.subtract.at(self.waiting_count, crows, 1)
+            cand = np.unique(crows)
             ready = cand[(self.waiting_count[cand] == 0)
-                         & (self.state[cand] == WAITING)]
+                         & (self.state[cand] == WAITING)] + b
         else:
             ready = np.zeros(0, dtype=np.int64)
         # refcount GC on the inputs of finished tasks
-        deps = csr_gather(g.inputs_indptr, g.inputs_flat, tids)
+        deps = csr_gather(g.inputs_indptr, g.inputs_flat, rows)
         if len(deps):
-            np.subtract.at(self.waiter_count, deps, 1)
-            dead = np.unique(deps)
+            drows = deps - b
+            np.subtract.at(self.waiter_count, drows, 1)
+            dead = np.unique(drows)
             dead = dead[(self.waiter_count[dead] == 0)
                         & (self.state[dead] == MEMORY)]
             self.state[dead] = RELEASED
             self.stats.releases += len(dead)
-            self.reclaimed.extend(int(d) for d in dead)
+            self.reclaimed.extend(int(d) + b for d in dead)
             if self._dropped:
-                self.purged.extend(int(d) for d in dead
-                                   if int(d) in self._dropped)
+                self.purged.extend(int(d) + b for d in dead
+                                   if int(d) + b in self._dropped)
         return self._assign(ready)
 
     def _reclaim_dropped(self, tids) -> None:
@@ -231,11 +260,12 @@ class ArrayReactor:
         they reach MEMORY (no consumer waits on them any more)."""
         if not self._dropped:
             return
+        b = self.tid_base
         for tid in tids:
             tid = int(tid)
-            if tid in self._dropped and self.waiter_count[tid] <= 0 \
-                    and self.state[tid] == MEMORY:
-                self.state[tid] = RELEASED
+            if tid in self._dropped and self.waiter_count[tid - b] <= 0 \
+                    and self.state[tid - b] == MEMORY:
+                self.state[tid - b] = RELEASED
                 self.stats.releases += 1
                 self.purged.append(tid)
                 self.reclaimed.append(tid)
@@ -246,26 +276,29 @@ class ArrayReactor:
         penalty; this keeps the Python analogue honest at low event
         rates)."""
         g = self.graph
+        b = self.tid_base
         ready_ids: list[int] = []
         for tid, wid in ev:
             tid = int(tid)
-            if self.state[tid] >= MEMORY:
+            if self.state[tid - b] >= MEMORY:
                 continue
-            self.state[tid] = MEMORY
-            self.primary[tid] = wid
+            self.state[tid - b] = MEMORY
+            self.primary[tid - b] = wid
             self.n_done += 1
             self.scheduler.on_finished(tid, int(wid))
             self._reclaim_dropped((tid,))
             for c in g.consumers_of(tid):
                 c = int(c)
-                self.waiting_count[c] -= 1
-                if self.waiting_count[c] == 0 and self.state[c] == WAITING:
+                self.waiting_count[c - b] -= 1
+                if self.waiting_count[c - b] == 0 \
+                        and self.state[c - b] == WAITING:
                     ready_ids.append(c)
             for d in g.inputs_of(tid):
                 d = int(d)
-                self.waiter_count[d] -= 1
-                if self.waiter_count[d] == 0 and self.state[d] == MEMORY:
-                    self.state[d] = RELEASED
+                self.waiter_count[d - b] -= 1
+                if self.waiter_count[d - b] == 0 \
+                        and self.state[d - b] == MEMORY:
+                    self.state[d - b] = RELEASED
                     self.stats.releases += 1
                     self.reclaimed.append(d)
                     if d in self._dropped:
@@ -275,10 +308,16 @@ class ArrayReactor:
     def handle_placed(self, tid: int, wid: int) -> None:
         self.scheduler.on_placed(tid, wid)
 
+    def handle_memory_pressure(self, wid: int, pressured: bool) -> None:
+        """Runtime feedback: worker ``wid`` crossed the memory
+        high-water mark (or dropped back under it)."""
+        self.scheduler.on_memory_pressure(wid, pressured)
+
     def rebalance(self, queued_by_worker) -> list[tuple[int, int]]:
         moves = self.scheduler.balance(queued_by_worker)
+        b = self.tid_base
         for tid, wid in moves:
-            self.assigned[tid] = wid
+            self.assigned[tid - b] = wid
         self.stats.msgs_out += 2 * len(moves)
         return moves
 
@@ -290,9 +329,10 @@ class ArrayReactor:
                            ) -> list[tuple[int, int]]:
         self.scheduler.on_worker_removed(wid)
         g = self.graph
+        b = self.tid_base
         lost_data = np.flatnonzero((self.primary == wid)
                                    & (self.state == MEMORY)
-                                   & (self.waiter_count > 0))
+                                   & (self.waiter_count > 0)) + b
         # the dead worker holds nothing any more: clear its primary slots
         # so holders_of never hints a fetch at a lost holder
         self.primary[self.primary == wid] = -1
@@ -303,23 +343,67 @@ class ArrayReactor:
             tid = frontier.pop()
             for d in g.inputs_of(tid):
                 d = int(d)
-                if d not in to_rerun and self.state[d] == RELEASED:
+                if d < b:
+                    # compaction dropped this released input's row (and
+                    # its callable): the lineage cannot be replayed
+                    raise RuntimeError(
+                        f"task {tid} needs compacted dependency {d}: "
+                        "released lineage below the compaction base is "
+                        "unrecoverable")
+                if d not in to_rerun and self.state[d - b] == RELEASED:
                     to_rerun.add(d)
                     frontier.append(d)
-        was_done = {t for t in to_rerun if self.state[t] >= MEMORY}
+        was_done = {t for t in to_rerun if self.state[t - b] >= MEMORY}
         ready = []
         for tid in sorted(to_rerun):
-            self.state[tid] = WAITING
+            self.state[tid - b] = WAITING
             deps = g.inputs_of(tid)
             missing = [int(d) for d in deps
-                       if self.state[int(d)] != MEMORY or int(d) in to_rerun]
-            self.waiting_count[tid] = len(missing)
+                       if self.state[int(d) - b] != MEMORY
+                       or int(d) in to_rerun]
+            self.waiting_count[tid - b] = len(missing)
             if tid in was_done:  # its completion had decremented waiters
-                self.waiter_count[deps] += 1
+                self.waiter_count[deps - b] += 1
             if not missing:
                 ready.append(tid)
         self.n_done -= len(was_done)
+        # re-run tasks may un-release prefix tids: rescan from the base
+        self._rel_frontier = self.tid_base
         return self._assign(np.asarray(ready, dtype=np.int64))
+
+    # -- released-prefix compaction ------------------------------------
+
+    def released_prefix(self) -> int:
+        """Largest ``n`` such that every tid < n is RELEASED (and may
+        therefore be compacted away).  Monotone scan from the last
+        frontier; worker-loss lineage re-runs reset it."""
+        b = self.tid_base
+        i = self._rel_frontier - b
+        st = self.state
+        n = self._n
+        while i < n and st[i] == RELEASED:
+            i += 1
+        self._rel_frontier = b + i
+        return self._rel_frontier
+
+    def compact_prefix(self, new_base: int) -> None:
+        """Drop state rows below ``new_base`` (all RELEASED) in lockstep
+        with :meth:`TaskGraph.compact_prefix`."""
+        k = new_base - self.tid_base
+        if k <= 0:
+            return
+        n = self._n
+        self._state_buf = self._state_buf[k:n].copy()
+        self._waiting_buf = self._waiting_buf[k:n].copy()
+        self._waiter_buf = self._waiter_buf[k:n].copy()
+        self._primary_buf = self._primary_buf[k:n].copy()
+        self._assigned_buf = self._assigned_buf[k:n].copy()
+        self._n = n - k
+        self.tid_base = new_base
+        self._rel_frontier = max(self._rel_frontier, new_base)
+        self._refresh_views()
+        self._dropped = {t for t in self._dropped if t >= new_base}
+        self.scheduler.on_prefix_compacted(new_base)
 
     def done(self) -> bool:
         return self.n_done >= self.graph.n_tasks

@@ -198,6 +198,21 @@ def _vr_agg(*vals):
     return sum(vals)
 
 
+def _ar_leaf(i, n):
+    return np.full(n, float(i + 1))
+
+
+def _ar_sum(*vals):
+    out = vals[0].copy()
+    for v in vals[1:]:
+        out += v
+    return out
+
+
+def _ar_total(*vals):
+    return float(sum(float(v.sum()) for v in vals))
+
+
 def value_reduction(n_leaves: int = 12, fan: int = 0) -> TaskGraph:
     """Value-carrying reduction for the wall-clock engines (real
     payloads cross the wire): ``n_leaves`` leaves producing ``i + 1``,
@@ -217,6 +232,29 @@ def value_reduction(n_leaves: int = 12, fan: int = 0) -> TaskGraph:
     else:
         tasks.append(Task(n_leaves, tuple(range(n_leaves)), fn=_vr_agg))
     return TaskGraph(tasks, name="reduce")
+
+
+def array_reduction(n_leaves: int = 16, elems: int = 1024,
+                    fan: int = 4) -> TaskGraph:
+    """Array-carrying reduction for the memory subsystem: each leaf
+    produces an ``elems``-long float64 array (so the live intermediate
+    set has a real, controllable byte footprint), partial sums every
+    ``fan`` leaves, and a scalar total sink.  Expected sink value:
+    ``elems * n_leaves * (n_leaves + 1) / 2``.  Run it with a
+    ``memory_limit`` below ``n_leaves * elems * 8`` bytes to force the
+    workers' object stores to spill."""
+    tasks = [Task(i, (), fn=_ar_leaf, args=(i, elems),
+                  output_size=float(elems * 8))
+             for i in range(n_leaves)]
+    mids = []
+    for j in range(0, n_leaves, fan):
+        tid = len(tasks)
+        tasks.append(Task(tid, tuple(range(j, min(j + fan, n_leaves))),
+                          fn=_ar_sum, output_size=float(elems * 8)))
+        mids.append(tid)
+    tasks.append(Task(len(tasks), tuple(mids), fn=_ar_total,
+                      output_size=8.0))
+    return TaskGraph(tasks, name="array-reduce")
 
 
 def suite(scale: float = 1.0, seed: int = 0) -> list[TaskGraph]:

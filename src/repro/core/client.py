@@ -79,18 +79,23 @@ class Future:
         """Block until the owning epoch completes; returns the task's
         value (None for duration-model tasks, which produce no value)."""
         c = self._cluster
-        if self.tid in c._released:
+        rt = c.runtime
+        # a tid below the compaction base was released long ago and its
+        # rows are gone (the _released set is pruned as the base moves)
+        if self.tid in c._released or self.tid < rt.g.tid_base:
             raise ReleasedKeyError(self.key)
         t0 = time.perf_counter()
-        e = c.runtime.epoch(self.eid)
+        e = rt.epoch(self.eid)
         if not e.done_evt.wait(timeout):
             raise TimeoutError(
                 f"future {self.key!r} not done within {timeout}s")
         if e.error is not None:
             raise e.error
-        rt = c.runtime
-        if self.tid not in rt.results \
-                and c.graph.tasks[self.tid].fn is not None:
+        try:
+            is_fn_task = c.graph.task(self.tid).fn is not None
+        except IndexError:      # released elsewhere + compacted mid-read
+            raise ReleasedKeyError(self.key) from None
+        if self.tid not in rt.results and is_fn_task:
             # pass the caller's remaining budget through; None lets the
             # runtime wait out a busy holder (its own timeout bounds it)
             left = (max(timeout - (time.perf_counter() - t0), 0.1)
@@ -117,6 +122,7 @@ class Future:
             if self.tid in c._released:
                 return
             c._released.add(self.tid)
+            c._prune_released()
         c.runtime.release_tasks([self.tid])
 
     def __repr__(self) -> str:
@@ -179,10 +185,17 @@ class GraphFutures:
         Returns False when some value could not be gathered."""
         c = self._cluster
         rt = c.runtime
+
+        def _needs_fetch(t: int) -> bool:
+            try:
+                return c.graph.task(t).fn is not None
+            except IndexError:
+                return False    # compacted mid-check: long-released
         need = [self._base + i for i in range(self._n)
-                if c.graph.tasks[self._base + i].fn is not None
+                if self._base + i >= rt.g.tid_base
                 and self._base + i not in rt.results
-                and self._base + i not in c._released]
+                and self._base + i not in c._released
+                and _needs_fetch(self._base + i)]
         if not need:
             return True
         # timeout=None lets the runtime wait out busy holders (bounded
@@ -202,6 +215,7 @@ class GraphFutures:
             tids = [t for t in range(self._base, self._base + self._n)
                     if t not in c._released]
             c._released.update(tids)
+            c._prune_released()
         if tids:
             c.runtime.release_tasks(tids)
 
@@ -230,7 +244,7 @@ class Client:
                        if isinstance(a, Future)]
             deps = tuple(args[i].tid for i in dep_pos)
             for d in deps:
-                if d in c._released:
+                if d in c._released or d < c.runtime.g.tid_base:
                     raise ReleasedKeyError(
                         f"dependency tid {d} was released")
             if dep_pos:
@@ -292,7 +306,8 @@ class Client:
             for d in builder._pending.values():
                 for k in d.inputs:
                     tid = builder.key_to_tid.get(k)
-                    if tid is not None and tid in c._released:
+                    if tid is not None and (tid in c._released
+                                            or tid < c.runtime.g.tid_base):
                         raise ReleasedKeyError(
                             f"dependency {k!r} was released")
             tasks, flushed = builder.flush(base=c._next_tid)
@@ -329,11 +344,11 @@ class Cluster:
         from repro.core.reactor import ObjectReactor
         from repro.core.schedulers import make_scheduler
 
-        # server-architecture axis: server="selector"|"asyncio" is
-        # shorthand for the RSDS wire on that event-loop driver (forces
-        # the process runtime); driver= composes with any wire flavour
+        # server-architecture axis: server="selector"|"asyncio"|"uvloop"
+        # is shorthand for the RSDS wire on that event-loop driver
+        # (forces the process runtime); driver= composes with any wire
         driver = kw.pop("driver", None)
-        if server in ("selector", "asyncio"):
+        if server in ("selector", "asyncio", "uvloop"):
             driver = driver or server
             server = "rsds"
         if driver is not None and driver != "inproc":
@@ -364,6 +379,7 @@ class Cluster:
         self._lock = threading.RLock()
         self._next_tid = 0
         self._released: set[int] = set()
+        self._pruned_base = 0
         self._n_graphs = 0
         self._closed = False
         self.client = Client(self)
@@ -382,6 +398,18 @@ class Cluster:
     def _check_open(self) -> None:
         if self._closed:
             raise ClusterClosed("cluster is closed")
+
+    def _prune_released(self) -> None:
+        """Shed released tids that fell below the compaction base (held
+        lock required).  The base only grows, so pruning against a
+        momentarily-stale read of it is safe; rescanning is skipped
+        while the base has not advanced (a stuck base must not make
+        every release O(len(_released)))."""
+        if len(self._released) > 4096:
+            base = self.runtime.g.tid_base
+            if base > self._pruned_base:
+                self._released = {t for t in self._released if t >= base}
+                self._pruned_base = base
 
     @property
     def n_tasks(self) -> int:

@@ -22,6 +22,16 @@ overflow side table that is merged back in bulk only when it has grown to
 a constant fraction of the merged part — so a warm ``submit_graph`` epoch
 costs O(new tasks) amortized instead of the old full-array
 ``np.concatenate``/``np.insert`` O(total) rebuild.
+
+Storage is also *bounded* for long-lived clusters: tids stay dense and
+global forever, but :meth:`TaskGraph.compact_prefix` advances
+``tid_base`` past a fully-released tid prefix and drops those rows from
+every column, so row index = ``tid - tid_base``.  The scalar accessors
+(:meth:`task`, :meth:`dur_of`, :meth:`size_of`, :meth:`inputs_of`,
+:meth:`consumers_of`) translate internally; vectorized consumers of the
+raw column views subtract ``tid_base`` themselves.  Compaction finalizes
+the dropped keys — their rows (and callables) are unrecoverable, the
+same trade Dask makes when it forgets a released key.
 """
 from __future__ import annotations
 
@@ -96,14 +106,20 @@ class TaskGraph:
         bulk on a doubling schedule — a long-lived Cluster ingesting
         many epochs pays O(new) per epoch, not O(total)."""
         tasks = list(tasks)
-        lo = len(self.tasks)
+        lo = self.n_tasks
         self._validate(tasks, lo)
         self.tasks.extend(tasks)
         self._append_arrays(tasks)
-        return lo, len(self.tasks)
+        return lo, self.n_tasks
+
+    @property
+    def n_rows(self) -> int:
+        """Stored (non-compacted) rows; row index = tid - tid_base."""
+        return self.n_tasks - self.tid_base
 
     def _build_arrays(self) -> None:
         self.n_tasks = 0
+        self.tid_base = 0
         self.n_deps = 0
         self._dur_buf = np.zeros(0, dtype=np.float64)
         self._siz_buf = np.zeros(0, dtype=np.float64)
@@ -123,7 +139,7 @@ class TaskGraph:
             self._append_arrays(self.tasks)
 
     def _refresh_views(self) -> None:
-        n = self.n_tasks
+        n = self.n_rows
         self.durations = self._dur_buf[:n]
         self.sizes = self._siz_buf[:n]
         self.in_degree = self._deg_buf[:n]
@@ -131,7 +147,7 @@ class TaskGraph:
         self.inputs_indptr = self._iptr_buf[:n + 1]
 
     def _append_arrays(self, new: Sequence[Task]) -> None:
-        n_old = self.n_tasks
+        n_old = self.n_rows
         n_new = len(new)
         n = n_old + n_new
         self._dur_buf = grow_to(self._dur_buf, n_old, n)
@@ -165,7 +181,7 @@ class TaskGraph:
                 for d in t.inputs:
                     extra.setdefault(int(d), []).append(t.tid)
             self._n_extra += tot_new
-        self.n_tasks = n
+        self.n_tasks = n + self.tid_base
         self._refresh_views()
         if self._n_extra >= max(64, self._cons_used):
             self._compact_consumers()
@@ -173,8 +189,10 @@ class TaskGraph:
     def _compact_consumers(self) -> None:
         """Merge overflow consumer edges into the contiguous CSR (one
         vectorized pass over the merged part, O(new) Python over rows
-        that gained edges)."""
-        n = self.n_tasks
+        that gained edges).  Rows are local (tid - tid_base); edge
+        VALUES stay global tids."""
+        b = self.tid_base
+        n = self.n_rows
         m = self._cons_rows
         used = self._cons_used
         mptr = self._cons_ptr_buf[:m + 1]
@@ -182,7 +200,7 @@ class TaskGraph:
         mlen = np.diff(mptr)
         counts[:m] = mlen
         for t, v in self._extra_cons.items():
-            counts[t] += len(v)
+            counts[t - b] += len(v)
         new_ptr = np.zeros(n + 1, dtype=np.int64)
         np.cumsum(counts, out=new_ptr[1:])
         total = int(new_ptr[-1])
@@ -192,7 +210,8 @@ class TaskGraph:
                 np.repeat(new_ptr[:m] - mptr[:-1], mlen)
             new_dat[idx] = self._cons_buf[:used]
         for t, v in self._extra_cons.items():
-            s = int(new_ptr[t] + (mlen[t] if t < m else 0))
+            r = t - b
+            s = int(new_ptr[r] + (mlen[r] if r < m else 0))
             new_dat[s:s + len(v)] = v
         self._cons_buf = new_dat
         self._cons_ptr_buf = new_ptr
@@ -201,19 +220,53 @@ class TaskGraph:
         self._extra_cons = {}
         self._n_extra = 0
 
+    # ------------------------------------------------------------------
+    # released-prefix compaction (bounded storage for long-lived graphs)
+    # ------------------------------------------------------------------
+
+    def compact_prefix(self, new_base: int) -> None:
+        """Drop every per-task row below ``new_base`` (caller guarantees
+        those tids are permanently dead) and advance ``tid_base``.  All
+        later access translates by the base; the copies are O(live), so
+        a steady submit/release workload has bounded footprint."""
+        k = new_base - self.tid_base
+        if k <= 0:
+            return
+        if new_base > self.n_tasks:
+            raise ValueError(f"compact base {new_base} > {self.n_tasks}")
+        self._compact_consumers()       # merge overflow into local rows
+        rows = self.n_tasks - new_base
+        del self.tasks[:k]
+        self._dur_buf = self._dur_buf[k:k + rows].copy()
+        self._siz_buf = self._siz_buf[k:k + rows].copy()
+        self._deg_buf = self._deg_buf[k:k + rows].copy()
+        drop_deps = int(self._iptr_buf[k])
+        self._iptr_buf = (self._iptr_buf[k:k + rows + 1]
+                          - drop_deps).copy()
+        self._iflat_buf = self._iflat_buf[drop_deps:self.n_deps].copy()
+        self.n_deps -= drop_deps
+        drop_cons = int(self._cons_ptr_buf[k])
+        self._cons_ptr_buf = (self._cons_ptr_buf[k:k + rows + 1]
+                              - drop_cons).copy()
+        self._cons_buf = self._cons_buf[drop_cons:self._cons_used].copy()
+        self._cons_used -= drop_cons
+        self._cons_rows = rows
+        self.tid_base = new_base
+        self._refresh_views()
+
     @property
     def consumers(self) -> np.ndarray:
         """Contiguous consumers CSR data (compacts pending overflow
         edges first — hot paths use :meth:`consumers_of_many` instead)."""
-        if self._n_extra or self._cons_rows != self.n_tasks:
+        if self._n_extra or self._cons_rows != self.n_rows:
             self._compact_consumers()
         return self._cons_buf[:self._cons_used]
 
     @property
     def consumers_indptr(self) -> np.ndarray:
-        if self._n_extra or self._cons_rows != self.n_tasks:
+        if self._n_extra or self._cons_rows != self.n_rows:
             self._compact_consumers()
-        return self._cons_ptr_buf[:self.n_tasks + 1]
+        return self._cons_ptr_buf[:self.n_rows + 1]
 
     # ------------------------------------------------------------------
     # Properties matching the paper's Table I columns
@@ -247,11 +300,11 @@ class TaskGraph:
         return float(self.durations.sum())
 
     def consumers_of(self, tid: int) -> np.ndarray:
-        tid = int(tid)
-        base = (self._cons_buf[self._cons_ptr_buf[tid]:
-                               self._cons_ptr_buf[tid + 1]]
-                if tid < self._cons_rows else _EMPTY_I32)
-        extra = self._extra_cons.get(tid)
+        row = int(tid) - self.tid_base
+        base = (self._cons_buf[self._cons_ptr_buf[row]:
+                               self._cons_ptr_buf[row + 1]]
+                if row < self._cons_rows else _EMPTY_I32)
+        extra = self._extra_cons.get(int(tid))
         if not extra:
             return base
         return np.concatenate([base, np.asarray(extra, dtype=np.int32)])
@@ -260,19 +313,20 @@ class TaskGraph:
         """Concatenated consumers of ``tids`` (order unspecified): the
         reactor's hot-path gather, tolerant of not-yet-compacted epoch
         edges so it never forces an O(total) merge."""
-        tids = np.asarray(tids, dtype=np.int64)
+        rows = np.asarray(tids, dtype=np.int64) - self.tid_base
         m = self._cons_rows
         ptr = self._cons_ptr_buf[:m + 1]
-        if self._n_extra == 0 and m == self.n_tasks:
-            return csr_gather(ptr, self._cons_buf, tids)
+        if self._n_extra == 0 and m == self.n_rows:
+            return csr_gather(ptr, self._cons_buf, rows)
         parts = []
-        inb = tids[tids < m]
+        inb = rows[rows < m]
         if len(inb):
             parts.append(csr_gather(ptr, self._cons_buf, inb))
         if self._extra_cons:
+            b = self.tid_base
             flat: list[int] = []
-            for t in tids.tolist():
-                v = self._extra_cons.get(int(t))
+            for r in rows.tolist():
+                v = self._extra_cons.get(int(r) + b)
                 if v:
                     flat.extend(v)
             if flat:
@@ -282,8 +336,42 @@ class TaskGraph:
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
     def inputs_of(self, tid: int) -> np.ndarray:
-        return self.inputs_flat[self.inputs_indptr[tid]:
-                                self.inputs_indptr[tid + 1]]
+        row = int(tid) - self.tid_base
+        return self.inputs_flat[self.inputs_indptr[row]:
+                                self.inputs_indptr[row + 1]]
+
+    def task(self, tid: int) -> Task:
+        """The :class:`Task` record for a (global) tid — the row-aware
+        replacement for ``graph.tasks[tid]``.
+
+        Safe against a concurrently-running :meth:`compact_prefix` on
+        the server loop (client threads and thread workers read tasks
+        without a lock): every Task carries its own ``tid``, so a read
+        that interleaved with the row shift is detected and retried;
+        a tid at or above ``tid_base`` always converges because its row
+        survives every compaction.  Raises IndexError for a compacted
+        (released-and-dropped) tid."""
+        tid = int(tid)
+        while True:
+            base = self.tid_base
+            if tid < base:
+                raise IndexError(
+                    f"tid {tid} was compacted away (base {base})")
+            try:
+                t = self.tasks[tid - base]
+            except IndexError:
+                if tid >= self.n_tasks:
+                    raise
+                continue    # rows shifted mid-read: retry
+            if t.tid == tid:
+                return t
+            # base read and list index straddled a compaction: retry
+
+    def dur_of(self, tid: int) -> float:
+        return float(self.durations[int(tid) - self.tid_base])
+
+    def size_of(self, tid: int) -> float:
+        return float(self.sizes[int(tid) - self.tid_base])
 
     def summary(self) -> dict:
         return {"name": self.name, "n_tasks": self.n_tasks,

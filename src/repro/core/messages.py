@@ -96,6 +96,8 @@ OP_FETCH_REPLY = 10  # worker -> worker: fetched values + absent markers
 OP_FETCH_FAILED = 11  # worker -> server: task deps unfetchable (fallback)
 OP_DATA_ADDR = 12    # worker -> server: my data-plane listener address
 OP_STATS = 13        # worker -> server: p2p transfer-bytes delta
+OP_COMPACT = 14      # server -> worker: tid prefix below base compacted
+#                      (drop local task-table/store rows for good)
 
 _NO_RESULT = object()   # worker-side marker: task produced no value
 
@@ -107,10 +109,18 @@ class _ByteCounters:
     boundary (inlined compute payloads + finished-frame result blobs) —
     the *server-relay* bytes the p2p data plane eliminates.
     ``gather_bytes`` counts client-facing gather-reply data separately
-    (fetching a result to the client is not input relay)."""
+    (fetching a result to the client is not input relay).
+
+    ``take_usage`` is the same take-style side channel for the memory
+    subsystem: finished/stats frames piggyback the sending worker's
+    object-store usage record (``repro.core.store.USAGE_FIELDS``), and
+    the server driver drains the last decoded one after each decode —
+    so the per-worker memory ledger rides existing frames instead of
+    adding a protocol round-trip."""
 
     _payload_bytes = 0
     _gather_bytes = 0
+    _last_usage: tuple | None = None
 
     def take_payload_bytes(self) -> int:
         out, self._payload_bytes = self._payload_bytes, 0
@@ -118,6 +128,12 @@ class _ByteCounters:
 
     def take_gather_bytes(self) -> int:
         out, self._gather_bytes = self._gather_bytes, 0
+        return out
+
+    def take_usage(self) -> tuple | None:
+        """Usage record from the last decoded finished/stats frame, or
+        None when that frame carried none (drained on read)."""
+        out, self._last_usage = self._last_usage, None
         return out
 
 
@@ -156,10 +172,14 @@ class DaskWire(_ByteCounters):
         return frames
 
     def encode_finished_batch(self, wid: int,
-                              items: Sequence[tuple[int, Any]]
+                              items: Sequence[tuple[int, Any]],
+                              usage: tuple | None = None
                               ) -> list[bytes]:
+        """``usage`` (the worker's object-store usage record) rides the
+        LAST message of the batch — one extra dict field, keeping the
+        per-message cost profile honest."""
         frames = []
-        for tid, result in items:
+        for i, (tid, result) in enumerate(items):
             m = {"op": OP_FINISHED, "key": int(tid), "worker": int(wid)}
             if result is not _NO_RESULT:
                 blob = pickle.dumps(result, protocol=4)
@@ -167,6 +187,8 @@ class DaskWire(_ByteCounters):
                 m["nbytes"] = float(len(blob))
             else:
                 m["nbytes"] = 0.0
+            if usage is not None and i == len(items) - 1:
+                m["usage"] = [int(x) for x in usage]
             frames.append(pack(m))
         return frames
 
@@ -231,9 +253,16 @@ class DaskWire(_ByteCounters):
         return [pack({"op": OP_DATA_ADDR, "worker": int(wid),
                       "host": str(addr[0]), "port": int(addr[1])})]
 
-    def encode_stats(self, p2p_bytes: int, n_fetches: int) -> list[bytes]:
-        return [pack({"op": OP_STATS, "p2p_bytes": int(p2p_bytes),
-                      "fetches": int(n_fetches)})]
+    def encode_compact(self, base: int) -> list[bytes]:
+        return [pack({"op": OP_COMPACT, "base": int(base)})]
+
+    def encode_stats(self, p2p_bytes: int, n_fetches: int,
+                     usage: tuple | None = None) -> list[bytes]:
+        m = {"op": OP_STATS, "p2p_bytes": int(p2p_bytes),
+             "fetches": int(n_fetches)}
+        if usage is not None:
+            m["usage"] = [int(x) for x in usage]
+        return [pack(m)]
 
     def decode(self, raw: bytes):
         """-> (op, records, payloads) with one record per frame.  For
@@ -263,6 +292,8 @@ class DaskWire(_ByteCounters):
             if "data" in m:
                 self._payload_bytes += len(m["data"])
                 payloads = {m["key"]: pickle.loads(m["data"])}
+            if "usage" in m:
+                self._last_usage = tuple(int(x) for x in m["usage"])
             return op, [(m["key"], m["worker"], m.get("nbytes", 0.0))], \
                 payloads
         if op == OP_RETRACT:
@@ -289,7 +320,11 @@ class DaskWire(_ByteCounters):
             return op, [(m["key"], tuple(m["missing"]))], None
         if op == OP_DATA_ADDR:
             return op, [m["worker"]], (m["host"], m["port"])
+        if op == OP_COMPACT:
+            return op, [m["base"]], None
         if op == OP_STATS:
+            if "usage" in m:
+                self._last_usage = tuple(int(x) for x in m["usage"])
             return op, [(m["p2p_bytes"], m["fetches"])], None
         return op, [], None
 
@@ -297,7 +332,10 @@ class DaskWire(_ByteCounters):
 class StaticWire(_ByteCounters):
     """RSDS-style static frame layout, one encode/decode per batch.
 
-    header  = op:u8  has_blob:u8  count:u32
+    header  = op:u8  flags:u8  count:u32
+    flags: bit0 = pickled blob trails the records, bit1 = a fixed-size
+    usage record (the worker's object-store meters, 6×i64) follows the
+    header on finished/stats frames — static layout, no codec cost
     compute  record = tid:i64  duration:f64
     finished record = tid:i64  wid:i32  nbytes:f64
     retract  record = tid:i64  (also release/gather/fetch/fetch-failed)
@@ -315,6 +353,7 @@ class StaticWire(_ByteCounters):
     _FINISHED = struct.Struct("<qid")
     _RETRACT = struct.Struct("<q")
     _STATS = struct.Struct("<qq")
+    _USAGE = struct.Struct("<qqqqqq")
 
     def encode_compute_batch(self, items: Sequence[tuple[int, float]],
                              payloads: dict[int, Any] | None = None,
@@ -342,7 +381,8 @@ class StaticWire(_ByteCounters):
                 + body + blob]
 
     def encode_finished_batch(self, wid: int,
-                              items: Sequence[tuple[int, Any]]
+                              items: Sequence[tuple[int, Any]],
+                              usage: tuple | None = None
                               ) -> list[bytes]:
         payloads = {int(t): r for t, r in items if r is not _NO_RESULT}
         blob = pickle.dumps(payloads, protocol=4) if payloads else b""
@@ -351,8 +391,11 @@ class StaticWire(_ByteCounters):
             self._FINISHED.pack(int(t), int(wid),
                                 nb if r is not _NO_RESULT else 0.0)
             for t, r in items)
-        return [self._HDR.pack(OP_FINISHED, 1 if blob else 0, len(items))
-                + body + blob]
+        flags = (1 if blob else 0) | (2 if usage is not None else 0)
+        head = (self._USAGE.pack(*(int(x) for x in usage))
+                if usage is not None else b"")
+        return [self._HDR.pack(OP_FINISHED, flags, len(items))
+                + head + body + blob]
 
     def encode_retract(self, tids: Iterable[int]) -> list[bytes]:
         tids = list(tids)
@@ -417,13 +460,25 @@ class StaticWire(_ByteCounters):
         blob = pickle.dumps((str(addr[0]), int(addr[1])), protocol=4)
         return [self._HDR.pack(OP_DATA_ADDR, 1, 1) + body + blob]
 
-    def encode_stats(self, p2p_bytes: int, n_fetches: int) -> list[bytes]:
+    def encode_compact(self, base: int) -> list[bytes]:
+        return [self._HDR.pack(OP_COMPACT, 0, 1)
+                + self._RETRACT.pack(int(base))]
+
+    def encode_stats(self, p2p_bytes: int, n_fetches: int,
+                     usage: tuple | None = None) -> list[bytes]:
         body = self._STATS.pack(int(p2p_bytes), int(n_fetches))
-        return [self._HDR.pack(OP_STATS, 0, 1) + body]
+        head = (self._USAGE.pack(*(int(x) for x in usage))
+                if usage is not None else b"")
+        return [self._HDR.pack(OP_STATS, 2 if usage is not None else 0, 1)
+                + head + body]
 
     def decode(self, raw: bytes):
         op, has_blob, count = self._HDR.unpack_from(raw)
         off = self._HDR.size
+        if has_blob & 2:        # fixed-layout usage record (finished/stats)
+            self._last_usage = self._USAGE.unpack_from(raw, off)
+            off += self._USAGE.size
+        has_blob &= 1
         if op in (OP_COMPUTE, OP_UPDATE_GRAPH):
             rec, recs = self._COMPUTE, []
             for i in range(count):
@@ -441,7 +496,7 @@ class StaticWire(_ByteCounters):
             off += count * rec.size
         elif op in (OP_RETRACT, OP_RELEASE, OP_GATHER, OP_GATHER_REPLY,
                     OP_FETCH, OP_FETCH_REPLY, OP_FETCH_FAILED,
-                    OP_DATA_ADDR):
+                    OP_DATA_ADDR, OP_COMPACT):
             rec = self._RETRACT
             recs = [rec.unpack_from(raw, off + i * rec.size)[0]
                     for i in range(count)]

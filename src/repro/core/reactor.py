@@ -64,6 +64,10 @@ class ObjectReactor:
         # addresses every task by a string key throughout its server; the
         # hashing/allocation cost of that choice is part of what RSDS's
         # integer ids eliminate (paper §IV).
+        # compaction mirror of the graph: ``key`` stores live rows only,
+        # row index = tid - tid_base (constructed on a fresh graph)
+        self.tid_base = graph.tid_base
+        self._rel_frontier = self.tid_base
         self.key = [f"{graph.name}-task-{i}" for i in range(graph.n_tasks)]
         # keys whose client hold was explicitly dropped (Client.release);
         # when such a task's data is reclaimed the runtime must purge its
@@ -77,17 +81,21 @@ class ObjectReactor:
         self.reclaimed: list[int] = []
         self.tasks = {}
         for t in graph.tasks:
-            self.tasks[self.key[t.tid]] = {
+            self.tasks[self._key(t.tid)] = {
                 "state": WAITING,
                 "tid": t.tid,
-                "waiting_on": set(self.key[int(d)] for d in t.inputs),
-                "waiters": set(self.key[int(c)]
+                "waiting_on": set(self._key(int(d)) for d in t.inputs),
+                "waiters": set(self._key(int(c))
                                for c in graph.consumers_of(t.tid)),
                 "who_has": set(),
                 "nbytes": float(t.output_size),
                 "worker": -1,
             }
         self.n_done = 0
+
+    def _key(self, tid: int) -> str:
+        """Dask-style string key for a global tid (row = tid - base)."""
+        return self.key[tid - self.tid_base]
 
     # ------------------------------------------------------------------
     def _assign(self, ready: list[int]) -> list[tuple[int, int]]:
@@ -96,12 +104,12 @@ class ObjectReactor:
         wids = self.scheduler.assign(np.asarray(ready, dtype=np.int64))
         out = []
         for tid, wid in zip(ready, wids):
-            ts = self.tasks[self.key[tid]]
+            ts = self.tasks[self._key(tid)]
             ts["state"] = READY
             ts["worker"] = int(wid)
             if self.simulate_codec:
                 who_has = {int(d):
-                           list(self.tasks[self.key[int(d)]]["who_has"])
+                           list(self.tasks[self._key(int(d))]["who_has"])
                            for d in self.graph.inputs_of(tid)}
                 m = msg.compute_task(tid, int(wid),
                                      self.graph.inputs_of(tid), who_has)
@@ -126,8 +134,8 @@ class ObjectReactor:
         g = self.graph
         self.key.extend(f"{g.name}-task-{i}" for i in range(lo, hi))
         for tid in range(lo, hi):
-            t = g.tasks[tid]
-            self.tasks[self.key[tid]] = {
+            t = g.task(tid)
+            self.tasks[self._key(tid)] = {
                 "state": WAITING,
                 "tid": tid,
                 "waiting_on": set(),
@@ -138,16 +146,19 @@ class ObjectReactor:
             }
         ready = []
         for tid in range(lo, hi):
-            ts = self.tasks[self.key[tid]]
+            ts = self.tasks[self._key(tid)]
             for d in g.inputs_of(tid):
                 d = int(d)
-                dts = self.tasks[self.key[d]]
+                if d < self.tid_base:
+                    raise ValueError(
+                        f"task {tid} depends on released key {d}")
+                dts = self.tasks[self._key(d)]
                 if dts["state"] == RELEASED:
                     raise ValueError(
                         f"task {tid} depends on released key {d}")
-                dts["waiters"].add(self.key[tid])
+                dts["waiters"].add(self._key(tid))
                 if dts["state"] != MEMORY:
-                    ts["waiting_on"].add(self.key[d])
+                    ts["waiting_on"].add(self._key(d))
             if not ts["waiting_on"]:
                 ready.append(tid)
         return self._assign(ready)
@@ -160,7 +171,7 @@ class ObjectReactor:
         g = self.graph
         self.key.extend(f"{g.name}-task-{i}" for i in range(lo, hi))
         for tid in range(lo, hi):
-            self.tasks[self.key[tid]] = {
+            self.tasks[self._key(tid)] = {
                 "state": RELEASED, "tid": tid, "waiting_on": set(),
                 "waiters": set(), "who_has": set(), "nbytes": 0.0,
                 "worker": -1}
@@ -175,8 +186,10 @@ class ObjectReactor:
         released = []
         for tid in tids:
             tid = int(tid)
+            if tid < self.tid_base:
+                continue    # compacted: long gone
             self._dropped.add(tid)
-            ts = self.tasks[self.key[tid]]
+            ts = self.tasks[self._key(tid)]
             ts["waiters"].discard(CLIENT_HOLD)
             if not ts["waiters"] and ts["state"] == MEMORY:
                 ts["state"] = RELEASED
@@ -201,14 +214,19 @@ class ObjectReactor:
         return out
 
     def all_done_in(self, lo: int, hi: int) -> bool:
-        return all(self.tasks[self.key[t]]["state"] >= MEMORY
+        lo = max(lo, self.tid_base)   # compacted tids were done
+        return all(self.tasks[self._key(t)]["state"] >= MEMORY
                    for t in range(lo, hi))
 
     def is_released(self, tid: int) -> bool:
-        return self.tasks[self.key[int(tid)]]["state"] == RELEASED
+        if int(tid) < self.tid_base:
+            return True     # compacted: released and rows dropped
+        return self.tasks[self._key(int(tid))]["state"] == RELEASED
 
     def holders_of(self, tid: int) -> list[int]:
-        return sorted(self.tasks[self.key[int(tid)]]["who_has"])
+        if int(tid) < self.tid_base:
+            return []
+        return sorted(self.tasks[self._key(int(tid))]["who_has"])
 
     def handle_finished(self, events: Iterable[tuple[int, int]]
                         ) -> list[tuple[int, int]]:
@@ -218,7 +236,7 @@ class ObjectReactor:
         for tid, wid in events:
             if self.simulate_codec:
                 raw = msg.pack(msg.task_finished(tid, wid,
-                                                 self.graph.sizes[tid]))
+                                                 self.graph.size_of(tid)))
                 m = msg.unpack(raw)
                 self.stats.bytes_coded += len(raw)
                 tid = int(m["key"])
@@ -226,7 +244,9 @@ class ObjectReactor:
             self.stats.msgs_in += 1
             tid = int(tid)
             wid = int(wid)
-            key = self.key[tid]
+            if tid < self.tid_base:
+                continue  # stale completion for a compacted tid
+            key = self._key(tid)
             ts = self.tasks[key]
             if ts["state"] in (MEMORY, RELEASED):
                 continue  # duplicate completion (failed steal retraction)
@@ -245,7 +265,7 @@ class ObjectReactor:
             ready = []
             for d in self.graph.inputs_of(tid):
                 d = int(d)
-                dts = self.tasks[self.key[d]]
+                dts = self.tasks[self._key(d)]
                 dts["waiters"].discard(key)
                 if not dts["waiters"] and dts["state"] == MEMORY:
                     dts["state"] = RELEASED
@@ -257,7 +277,7 @@ class ObjectReactor:
             woken: set[int] = set()
             for c in self.graph.consumers_of(tid):
                 c = int(c)
-                cts = self.tasks[self.key[c]]
+                cts = self.tasks[self._key(c)]
                 cts["waiting_on"].discard(key)
                 # duplicate inputs (e.g. submit(fn, f, f)) produce the
                 # same consumer edge twice; waiting_on is a set, so the
@@ -271,13 +291,18 @@ class ObjectReactor:
         return assignments
 
     def handle_placed(self, tid: int, wid: int) -> None:
-        self.tasks[self.key[tid]]["who_has"].add(wid)
+        self.tasks[self._key(tid)]["who_has"].add(wid)
         self.scheduler.on_placed(tid, wid)
+
+    def handle_memory_pressure(self, wid: int, pressured: bool) -> None:
+        """Runtime feedback: worker ``wid`` crossed the memory
+        high-water mark (or dropped back under it)."""
+        self.scheduler.on_memory_pressure(wid, pressured)
 
     def rebalance(self, queued_by_worker) -> list[tuple[int, int]]:
         moves = self.scheduler.balance(queued_by_worker)
         for tid, wid in moves:
-            self.tasks[self.key[tid]]["worker"] = wid
+            self.tasks[self._key(tid)]["worker"] = wid
             self.stats.msgs_out += 2  # steal request + new compute-task
         return moves
 
@@ -302,27 +327,63 @@ class ObjectReactor:
             tid = frontier.pop()
             for d in self.graph.inputs_of(tid):
                 d = int(d)
+                if d < self.tid_base:
+                    # compaction dropped this released input's row (and
+                    # its callable): the lineage cannot be replayed
+                    raise RuntimeError(
+                        f"task {tid} needs compacted dependency {d}: "
+                        "released lineage below the compaction base is "
+                        "unrecoverable")
                 if d not in to_rerun \
-                        and self.tasks[self.key[d]]["state"] == RELEASED:
+                        and self.tasks[self._key(d)]["state"] == RELEASED:
                     to_rerun.add(d)
                     frontier.append(d)
         was_done = [t for t in to_rerun
-                    if self.tasks[self.key[t]]["state"]
+                    if self.tasks[self._key(t)]["state"]
                     in (MEMORY, RELEASED)]
         ready = []
         for tid in sorted(to_rerun):
-            ts = self.tasks[self.key[tid]]
+            ts = self.tasks[self._key(tid)]
             ts["state"] = WAITING
             ts["waiting_on"] = {
-                self.key[int(d)] for d in self.graph.inputs_of(tid)
-                if self.tasks[self.key[int(d)]]["state"] != MEMORY
+                self._key(int(d)) for d in self.graph.inputs_of(tid)
+                if self.tasks[self._key(int(d))]["state"] != MEMORY
                 or int(d) in to_rerun}
             for d in self.graph.inputs_of(tid):
-                self.tasks[self.key[int(d)]]["waiters"].add(self.key[tid])
+                self.tasks[self._key(int(d))]["waiters"].add(self._key(tid))
             if not ts["waiting_on"]:
                 ready.append(tid)
         self.n_done -= len(was_done)
+        # re-run tasks may un-release prefix tids: rescan from the base
+        self._rel_frontier = self.tid_base
         return self._assign(ready)
+
+    # -- released-prefix compaction ------------------------------------
+
+    def released_prefix(self) -> int:
+        """Largest ``n`` such that every tid < n is RELEASED (and may
+        therefore be compacted away).  Monotone scan from the last
+        frontier; worker-loss lineage re-runs reset it."""
+        i = self._rel_frontier
+        hi = self.graph.n_tasks
+        while i < hi and self.tasks[self._key(i)]["state"] == RELEASED:
+            i += 1
+        self._rel_frontier = i
+        return i
+
+    def compact_prefix(self, new_base: int) -> None:
+        """Drop task records and key strings below ``new_base`` (all
+        RELEASED) in lockstep with :meth:`TaskGraph.compact_prefix`."""
+        k = new_base - self.tid_base
+        if k <= 0:
+            return
+        for key in self.key[:k]:
+            self.tasks.pop(key, None)
+        del self.key[:k]
+        self.tid_base = new_base
+        self._rel_frontier = max(self._rel_frontier, new_base)
+        self._dropped = {t for t in self._dropped if t >= new_base}
+        self.scheduler.on_prefix_compacted(new_base)
 
     def done(self) -> bool:
         return self.n_done >= self.graph.n_tasks

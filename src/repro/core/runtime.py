@@ -42,9 +42,11 @@ from repro.core import messages as msg
 from repro.core import transport as tp
 from repro.core.graph import TaskGraph
 from repro.core.server import Driver, EpochStats, RunResult, ServerCore
+from repro.core.store import ObjectStore
 
 __all__ = ["EpochStats", "RunResult", "ServerCore", "Driver",
            "InprocDriver", "SelectorDriver", "AsyncioDriver",
+           "UvloopDriver", "has_uvloop",
            "ThreadRuntime", "ProcessRuntime", "run_graph"]
 
 
@@ -188,7 +190,9 @@ _MISS = object()    # cache-lookup sentinel
 
 def _worker_main(wid: int, endpoint_args, wire_name: str,
                  zero_worker: bool, simulate_durations: bool,
-                 tasks_table, cleanup_fds, p2p: bool = False) -> None:
+                 tasks_table, cleanup_fds, p2p: bool = False,
+                 memory_limit: int | None = None,
+                 spill_dir: str | None = None) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
     finished frames.  Mirrors the paper's one-thread-per-worker setup —
     and is identical under every server driver (the architecture axis is
@@ -196,15 +200,22 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
 
     Persistent-server protocol: ``update-graph`` frames extend the local
     task table mid-run (incremental epochs), ``release`` frames purge the
-    local result cache (explicit key lifetime), ``gather`` frames re-send
+    local result store (explicit key lifetime), ``gather`` frames re-send
     cached results as explicit gather-reply frames (absent keys are
     marked, never silently dropped).
 
+    Every result lives in a :class:`repro.core.store.ObjectStore`: a
+    byte-accounted LRU bounded by ``memory_limit`` that spills cold
+    values to pickle files under ``spill_dir`` and unspills them
+    transparently on any access (compute-dep reads, peer fetches,
+    gathers).  The worker piggybacks its store usage record on
+    finished/stats frames so the server's memory ledger tracks it.
+
     With ``p2p`` the worker is a node on the peer-to-peer data plane: a
     :class:`repro.core.transport.DataPlaneListener` serves this worker's
-    cached values to peers on a background thread, compute frames carry
+    stored values to peers on a background thread, compute frames carry
     ``who_has`` placement hints instead of inlined payloads, and
-    dependency values are dialed directly from the holder's cache —
+    dependency values are dialed directly from the holder's store —
     finished frames carry no result data (the server fetches on demand
     over gather frames).  A dependency that cannot be fetched (holder
     died) is reported via a fetch-failed frame and the server re-routes
@@ -213,31 +224,36 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
     ep = tp.make_worker_endpoint(endpoint_args)
     wire = msg.make_wire(wire_name)
     table: dict[int, tuple] = dict(tasks_table or {})
-    cache: dict[int, Any] = {}
-    cache_lock = threading.Lock()
+    store = ObjectStore(
+        memory_limit=memory_limit,
+        spill_dir=(os.path.join(spill_dir, f"worker-{wid}")
+                   if spill_dir else None),
+        name=f"w{wid}")
     pending: collections.deque = collections.deque()
     retracted: set[int] = set()
     out: list[tuple[int, Any]] = []
     peers: dict[tuple, tp.PeerChannel] = {}
     xfer = {"bytes": 0, "fetches": 0, "bytes_sent": 0, "fetches_sent": 0}
+    sent_usage: list = [None]
     alive = True
 
     listener = None
     if p2p:
         # the listener thread uses its OWN codec instance: the wire
         # objects keep per-instance byte counters and are not thread-safe
+        # (the store has its own internal lock)
         dp_wire = msg.make_wire(wire_name)
 
         def serve_fetch(frame: bytes) -> bytes:
             op, recs, _ = dp_wire.decode(frame)
             present, absent = {}, []
-            with cache_lock:
-                for t in recs:
-                    t = int(t)
-                    if t in cache:
-                        present[t] = cache[t]
-                    else:
-                        absent.append(t)
+            for t in recs:
+                t = int(t)
+                v = store.get(t, _MISS)     # unspills on demand
+                if v is not _MISS:
+                    present[t] = v
+                else:
+                    absent.append(t)
             (reply,) = dp_wire.encode_fetch_reply(present, absent)
             return reply
 
@@ -264,8 +280,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                 # anywhere — same None the thread runtime passes
                 got[d] = None
                 continue
-            with cache_lock:
-                v = cache.get(d, _MISS)
+            v = store.get(d, _MISS)
             if v is not _MISS:
                 got[d] = v
             elif hints is not None and d in hints:
@@ -281,8 +296,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                 xfer["fetches"] += 1
                 _, _absent, payload = wire.decode(raw)
                 if payload:
-                    with cache_lock:
-                        cache.update(payload)
+                    store.update(payload)
                     got.update(payload)
             except tp.TransportClosed:
                 ch = peers.pop(addr, None)
@@ -294,15 +308,24 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         return [got[int(d)] for d in deps], []
 
     def flush() -> None:
+        # piggyback the store usage record on whichever frame goes out
+        # (finished batch preferred; stats otherwise) when it changed
+        usage = store.usage()
+        new_u = usage if usage != sent_usage[0] else None
         if out:
-            for frame in wire.encode_finished_batch(wid, out):
+            for frame in wire.encode_finished_batch(wid, out, new_u):
                 ep.send(frame)
             out.clear()
-        if xfer["bytes"] > xfer["bytes_sent"]:
+            if new_u is not None:
+                sent_usage[0] = usage
+                new_u = None
+        if xfer["bytes"] > xfer["bytes_sent"] or new_u is not None:
             for frame in wire.encode_stats(
                     xfer["bytes"] - xfer["bytes_sent"],
-                    xfer["fetches"] - xfer["fetches_sent"]):
+                    xfer["fetches"] - xfer["fetches_sent"], new_u):
                 ep.send(frame)
+            if new_u is not None:
+                sent_usage[0] = usage
             xfer["bytes_sent"] = xfer["bytes"]
             xfer["fetches_sent"] = xfer["fetches"]
 
@@ -332,22 +355,32 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                 if payloads:
                     table.update(payloads)
             elif op == msg.OP_RELEASE:
-                with cache_lock:
-                    for tid in recs:
-                        cache.pop(int(tid), None)
+                for tid in recs:
+                    store.discard(int(tid))      # both tiers + spill file
             elif op == msg.OP_GATHER:
                 present, absent = {}, []
-                with cache_lock:
-                    for t in recs:
-                        t = int(t)
-                        if t in cache:
-                            present[t] = cache[t]
-                        else:
-                            absent.append(t)
+                for t in recs:
+                    t = int(t)
+                    v = store.get(t, _MISS)      # unspills on demand
+                    if v is not _MISS:
+                        present[t] = v
+                    else:
+                        absent.append(t)
                 for frame in wire.encode_gather_reply(present, absent):
                     ep.send(frame)
             elif op == msg.OP_RETRACT:
                 retracted.update(int(t) for t in recs)
+            elif op == msg.OP_COMPACT:
+                # the server compacted the tid prefix for good: shed the
+                # local task table (fn/args pinned per tid), retraction
+                # markers and any stray store rows below the base, so a
+                # long-lived worker's footprint tracks the live window
+                base = int(recs[0])
+                for t in [t for t in table if t < base]:
+                    del table[t]
+                retracted = {t for t in retracted if t >= base}
+                for t in [t for t in store.keys() if t < base]:
+                    store.discard(t)
             elif op == msg.OP_SHUTDOWN:
                 alive = False
             timeout = 0
@@ -375,8 +408,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                     result = fn(*vals)
                 else:
                     result = fn(*fargs)
-                with cache_lock:
-                    cache[tid] = result
+                store.put(tid, result)
             elif simulate_durations and dur > 0:
                 time.sleep(dur)
         # p2p: results stay in the worker cache; the finished frame is a
@@ -391,6 +423,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         listener.close()
     for ch in peers.values():
         ch.close()
+    store.close()       # removes this worker's spill files
     ep.close()
 
 
@@ -455,7 +488,7 @@ class _ProcessDriver(Driver):
                           core._tasks_table or None,
                           self._tp.child_cleanup(wid)
                           if ctx_name == "fork" else [],
-                          core.p2p),
+                          core.p2p, core.memory_limit, core.spill_dir),
                     daemon=True)
                 p.start()
                 self.procs.append(p)
@@ -559,6 +592,12 @@ class _ProcessDriver(Driver):
         self._send_frames(wid, self.core._charge_codec(
             self.wire.encode_gather, tids))
 
+    def broadcast_compact(self, base: int) -> None:
+        frames = self.core._charge_codec(self.wire.encode_compact, base)
+        for wid in range(self.core.n_workers):
+            if wid not in self.core.dead:
+                self._send_frames(wid, frames)
+
     def prepare_epoch(self, tasks):
         """Encode the epoch for the live workers: the Dask wire pays one
         update-graph message per key, the static wire one frame per epoch
@@ -589,10 +628,14 @@ class _ProcessDriver(Driver):
             core.wire_frames += 1
             op, recs, payloads = core._charge_codec(self.wire.decode, raw)
             if wid in core.dead:
+                self.wire.take_usage()      # drop the stale side-channel
                 continue      # stale frame from a failed worker
             ev = msg.frame_event(op, wid, recs, payloads)
             if ev is not None:
                 out.append(ev)
+            usage = self.wire.take_usage()
+            if usage is not None:
+                out.append(("usage", wid, usage))
         return out
 
     # -- lifecycle ------------------------------------------------------
@@ -726,7 +769,41 @@ class AsyncioDriver(_ProcessDriver):
         pass    # handled inside _serve (the writers live on the loop)
 
 
-_PROCESS_DRIVERS = {"selector": SelectorDriver, "asyncio": AsyncioDriver}
+def has_uvloop() -> bool:
+    """True when the optional uvloop dependency is importable."""
+    import importlib.util
+    return importlib.util.find_spec("uvloop") is not None
+
+
+class UvloopDriver(AsyncioDriver):
+    """The asyncio server on uvloop's libuv event loop — the fourth
+    server-architecture point (C-accelerated loop, same Python protocol
+    handlers), available opportunistically when the optional ``uvloop``
+    dependency is installed (``pip install rsds-repro[uvloop]``)."""
+
+    name = "uvloop"
+
+    def __init__(self, **kw):
+        if not has_uvloop():
+            raise RuntimeError(
+                "driver='uvloop' requested but uvloop is not installed "
+                "(pip install rsds-repro[uvloop])")
+        super().__init__(**kw)
+
+    def serve(self) -> None:
+        import uvloop
+        loop = uvloop.new_event_loop()
+        try:
+            loop.run_until_complete(self._serve())
+        finally:
+            try:
+                loop.run_until_complete(loop.shutdown_asyncgens())
+            finally:
+                loop.close()
+
+
+_PROCESS_DRIVERS = {"selector": SelectorDriver, "asyncio": AsyncioDriver,
+                    "uvloop": UvloopDriver}
 
 
 # ---------------------------------------------------------------------------
@@ -744,12 +821,19 @@ class ThreadRuntime(ServerCore):
 
     def __init__(self, graph: TaskGraph, reactor, n_workers: int,
                  *, zero_worker: bool = False, simulate_durations=True,
-                 balance_interval: float = 0.05, timeout: float = 300.0):
+                 balance_interval: float = 0.05, timeout: float = 300.0,
+                 memory_limit: int | None = None,
+                 spill_dir: str | None = None, high_water: float = 0.8,
+                 compact_threshold: int | None = 8192):
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
+        # thread workers share the server's ObjectStore, so the memory
+        # limit bounds the POOL's result footprint (one node, one store)
         super().__init__(graph, reactor, n_workers, InprocDriver(),
                          p2p=False, balance_interval=balance_interval,
-                         timeout=timeout)
+                         timeout=timeout, memory_limit=memory_limit,
+                         spill_dir=spill_dir, high_water=high_water,
+                         compact_threshold=compact_threshold)
         self.transport = tp.InprocTransport(n_workers)
         self.driver.transport = self.transport
         self.queued: dict[int, list[int]] = {}
@@ -786,11 +870,13 @@ class ThreadRuntime(ServerCore):
                     continue
                 self.running[wid] = tid
             if not self.zero_worker:
-                t = self.g.tasks[tid]
+                t = self.g.task(tid)
                 if t.fn is not None:
+                    # store reads unspill transparently; the put pays
+                    # the byte accounting (and any LRU spill) here
                     args = [self.results.get(d) for d in t.inputs]
-                    self.results[tid] = t.fn(*args) if t.args == () \
-                        else t.fn(*t.args)
+                    self.results.put(tid, t.fn(*args) if t.args == ()
+                                     else t.fn(*t.args))
                 elif self.simulate_durations and t.duration > 0:
                     time.sleep(t.duration)
             with self._lock:
@@ -813,23 +899,31 @@ class ProcessRuntime(ServerCore):
                  simulate_durations: bool = True,
                  balance_interval: float = 0.05, timeout: float = 300.0,
                  start_method: str | None = None, p2p: bool = True,
-                 driver: str = "selector"):
+                 driver: str = "selector",
+                 memory_limit: int | None = None,
+                 spill_dir: str | None = None, high_water: float = 0.8,
+                 compact_threshold: int | None = 8192):
         if getattr(reactor, "simulate_codec", False):
             raise ValueError(
                 "ProcessRuntime needs a reactor with simulate_codec=False: "
                 "the wire pays the real codec cost")
         if driver not in _PROCESS_DRIVERS:
             raise ValueError(f"unknown driver {driver!r} "
-                             f"(want selector|asyncio)")
+                             f"(want selector|asyncio|uvloop)")
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
         drv = _PROCESS_DRIVERS[driver](
             transport=transport, start_method=start_method,
             zero_worker=zero_worker,
             simulate_durations=simulate_durations)
+        # memory_limit bounds each worker PROCESS's store; spilling and
+        # unspilling happen worker-side and are reported back on
+        # finished/stats frames (the server's ledger + meters)
         super().__init__(graph, reactor, n_workers, drv, p2p=p2p,
                          balance_interval=balance_interval,
-                         timeout=timeout)
+                         timeout=timeout, memory_limit=memory_limit,
+                         spill_dir=spill_dir, high_water=high_water,
+                         compact_threshold=compact_threshold)
         # p2p: dependency values move worker-to-worker over who_has hints
         # + direct fetch (Dask/RSDS-faithful data plane); off = every
         # payload rides compute/finished frames through the server
@@ -866,10 +960,18 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     ``transport="pipe"|"socket"``, ``start_method``, ``p2p`` (default
     True: dependency values move worker-to-worker over who_has hints +
     direct fetch; False: every payload is relayed through the server),
-    and ``driver="selector"|"asyncio"`` (the server's event-loop
-    architecture).  ``server="selector"|"asyncio"`` is accepted as
-    shorthand for the RSDS wire on that driver (forces the process
-    runtime) — the paper's server-architecture axis in one kwarg.
+    and ``driver="selector"|"asyncio"|"uvloop"`` (the server's
+    event-loop architecture; uvloop needs the optional dependency).
+    ``server="selector"|"asyncio"|"uvloop"`` is accepted as shorthand
+    for the RSDS wire on that driver (forces the process runtime) — the
+    paper's server-architecture axis in one kwarg.
+
+    Memory subsystem kwargs (both runtimes): ``memory_limit`` bounds
+    each worker's :class:`repro.core.store.ObjectStore` in bytes (the
+    whole shared pool for thread workers); overflow spills to
+    ``spill_dir`` (private temp dirs by default) and unspills on
+    access; ``high_water`` (fraction of the limit) marks workers as
+    under memory pressure for hinting/stealing decisions.
 
     Back-compat wrapper over the persistent Cluster/Client API: spins a
     one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a
@@ -880,7 +982,7 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     """
     from repro.core.client import Cluster
 
-    if server in ("selector", "asyncio"):
+    if server in ("selector", "asyncio", "uvloop"):
         runtime = "process"
     if runtime not in ("thread", "process"):
         raise ValueError(f"unknown runtime {runtime!r} (want thread|process)")

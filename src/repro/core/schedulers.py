@@ -31,6 +31,9 @@ from repro.core.graph import TaskGraph
 class SchedulerBase:
     name = "base"
     needs_durations = False
+    #: False for schedulers whose precomputed plans index from tid 0
+    #: (the server skips released-prefix compaction for them)
+    supports_compaction = True
 
     def attach(self, graph: TaskGraph, n_workers: int,
                workers_per_node: int = 24, seed: int = 0) -> None:
@@ -43,6 +46,9 @@ class SchedulerBase:
         self.loads = np.zeros(n_workers, dtype=np.int64)
         self.placement: dict[int, set[int]] = {}
         self.dead: set[int] = set()
+        # workers above the memory high-water mark (fed by the runtime's
+        # per-worker ledgers): stealing must not pile work onto them
+        self.mem_pressured: set[int] = set()
         self.alive = np.arange(n_workers)
         self._steals: dict[int, tuple[int, int]] = {}  # tid -> (src, tgt)
 
@@ -79,10 +85,31 @@ class SchedulerBase:
 
     def on_worker_removed(self, wid: int) -> None:
         self.dead.add(wid)
+        self.mem_pressured.discard(wid)
         self.alive = np.array([w for w in range(self.n_workers)
                                if w not in self.dead])
         for holders in self.placement.values():
             holders.discard(wid)
+
+    def on_memory_pressure(self, wid: int, pressured: bool) -> None:
+        """Worker ``wid`` crossed (or dropped back under) its object
+        store's high-water mark.  Stealing onto a pressured worker
+        would force more spill, so :meth:`balance` skips it as a
+        target; assignment itself stays placement-driven (moving a task
+        AWAY from its inputs to avoid spill trades a disk read for a
+        network transfer — the wrong trade at these sizes)."""
+        if pressured:
+            self.mem_pressured.add(wid)
+        else:
+            self.mem_pressured.discard(wid)
+
+    def on_prefix_compacted(self, base: int) -> None:
+        """Tids below ``base`` were compacted away: shed their
+        bookkeeping so a long-lived scheduler's state stays bounded."""
+        for t in [t for t in self.placement if t < base]:
+            del self.placement[t]
+        for t in [t for t in self._steals if t < base]:
+            del self._steals[t]
 
     def on_graph_extended(self) -> None:
         """Tasks were appended to ``self.graph`` (incremental submission).
@@ -161,7 +188,7 @@ class DaskWorkStealing(SchedulerBase):
                 transfer = 0.0
                 for d in inputs:
                     if w not in self.placement.get(int(d), ()):
-                        transfer += self.graph.sizes[d] / self.bandwidth
+                        transfer += self.graph.size_of(d) / self.bandwidth
                 est = self.occupancy[w] + transfer
                 if est < best_est:
                     best, best_est = w, est
@@ -175,7 +202,7 @@ class DaskWorkStealing(SchedulerBase):
 
     def on_finished(self, tid, wid):
         super().on_finished(tid, wid)
-        d = float(self.graph.durations[tid])
+        d = self.graph.dur_of(tid)
         self.n_obs += 1
         self.dur_mean += (d - self.dur_mean) / self.n_obs
         self.occupancy[wid] = max(0.0, self.occupancy[wid] - self.dur_mean)
@@ -184,8 +211,11 @@ class DaskWorkStealing(SchedulerBase):
         """Steal: move queued tasks from the most occupied workers to idle
         ones (paper §III-D: stealing on imbalance)."""
         moves = []
+        # never steal ONTO a worker above its memory high-water mark:
+        # new inputs would land on its store and force more spill
         idle = [w for w in range(self.n_workers)
-                if self.loads[w] == 0 and w not in self.dead]
+                if self.loads[w] == 0 and w not in self.dead
+                and w not in self.mem_pressured]
         if not idle:
             return moves
         order = np.argsort(self.loads)[::-1]
@@ -217,14 +247,17 @@ class RsdsWorkStealing(SchedulerBase):
     def assign(self, ready: np.ndarray) -> np.ndarray:
         # vectorized fast path: source tasks (no inputs) go to random
         # workers in one draw — the common case for wide graph frontiers
-        nin = self.graph.in_degree[ready]
+        g = self.graph
+        gb = g.tid_base
+        sizes = g.sizes
+        nin = g.in_degree[np.asarray(ready, dtype=np.int64) - gb]
         out = self._random_alive(len(ready))
         for i in np.flatnonzero(nin > 0):
             tid = int(ready[i])
             local: dict[int, float] = {}
-            for d in self.graph.inputs_of(tid):
+            for d in g.inputs_of(tid):
                 for w in self.placement.get(int(d), ()):
-                    local[w] = local.get(w, 0.0) + self.graph.sizes[d]
+                    local[w] = local.get(w, 0.0) + sizes[int(d) - gb]
             if local:
                 out[i] = max(local.items(), key=lambda kv: kv[1])[0]
         np.add.at(self.loads, out, 1)
@@ -245,10 +278,14 @@ class RsdsWorkStealing(SchedulerBase):
         targets, corrupting load bookkeeping when the duplicate steal
         failed."""
         moves = []
+        # pressured workers are not steal targets (paper's balance pass
+        # + the memory subsystem's high-water rule)
         under = [int(w) for w in np.flatnonzero(self.loads == 0)
-                 if w not in self.dead]
+                 if w not in self.dead and w not in self.mem_pressured]
         if not under:
             return moves
+        g = self.graph
+        gb = g.tid_base
         order = np.argsort(self.loads)[::-1]
         for w in order:
             if self.loads[w] <= 1:
@@ -258,8 +295,8 @@ class RsdsWorkStealing(SchedulerBase):
                 tid = int(queue.pop())
                 best_i, best_local = 0, -1.0
                 for i, u in enumerate(under):
-                    local = sum(float(self.graph.sizes[int(d)])
-                                for d in self.graph.inputs_of(tid)
+                    local = sum(float(g.sizes[int(d) - gb])
+                                for d in g.inputs_of(tid)
                                 if u in self.placement.get(int(d), ()))
                     if local > best_local:
                         best_i, best_local = i, local
@@ -279,6 +316,7 @@ class HeftScheduler(SchedulerBase):
     simulator experiments."""
     name = "heft"
     needs_durations = True
+    supports_compaction = False     # the plan indexes from tid 0
     bandwidth = 6.8e9
 
     def attach(self, graph, n_workers, workers_per_node=24, seed=0):

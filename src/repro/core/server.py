@@ -30,7 +30,17 @@ Drivers hand the core *normalized events*:
 ``("fetch-failed", wid, recs)``     tasks whose dependency fetch failed
 ``("data-addr", wid, addr)``        a worker's data-plane listener address
 ``("stats", recs)``                 p2p transfer-byte deltas
+``("usage", wid, usage)``           a worker's object-store usage record
+                                    (``repro.core.store.USAGE_FIELDS``)
 ==================================  =======================================
+
+The memory subsystem lives here on the control-plane side: every task
+result — server-side and worker-side — sits in a
+:class:`repro.core.store.ObjectStore` (byte-accounted LRU with
+spill-to-disk), workers piggyback usage records on finished/stats
+frames, and the core keeps per-worker memory ledgers that feed dispatch
+hinting (prefer pressure-free holders) and the schedulers' steal-target
+choice (never steal onto a worker above the high-water mark).
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ import time
 from typing import Any
 
 from repro.core.graph import Task, TaskGraph
+from repro.core.store import ObjectStore
 
 
 @dataclasses.dataclass
@@ -62,6 +73,10 @@ class EpochStats:
     relay_bytes1: int = 0
     p2p_bytes0: int = 0            # direct worker↔worker payload bytes
     p2p_bytes1: int = 0
+    spill_bytes0: int = 0          # cumulative spill-to-disk snapshots
+    spill_bytes1: int = 0
+    unspill_bytes0: int = 0        # cumulative unspill-from-disk snapshots
+    unspill_bytes1: int = 0
     error: BaseException | None = None
     done_evt: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -87,12 +102,26 @@ class EpochStats:
         flight (0 on the server-mediated data plane)."""
         return max(self.p2p_bytes1 - self.p2p_bytes0, 0)
 
+    @property
+    def spill_bytes(self) -> int:
+        """Bytes the object stores spilled to disk while this epoch was
+        in flight (0 while every live value fits under the limit)."""
+        return max(self.spill_bytes1 - self.spill_bytes0, 0)
+
+    @property
+    def unspill_bytes(self) -> int:
+        """Bytes read back from the spill tier while this epoch was in
+        flight."""
+        return max(self.unspill_bytes1 - self.unspill_bytes0, 0)
+
     def as_dict(self) -> dict:
         return {"eid": self.eid, "n_tasks": self.n_tasks,
                 "makespan": self.makespan,
                 "server_busy": self.server_busy,
                 "relay_bytes": self.relay_bytes,
                 "p2p_bytes": self.p2p_bytes,
+                "spill_bytes": self.spill_bytes,
+                "unspill_bytes": self.unspill_bytes,
                 "error": repr(self.error) if self.error else None}
 
 
@@ -218,6 +247,11 @@ class Driver:
     def send_gather(self, wid: int, tids) -> None:
         pass
 
+    def broadcast_compact(self, base: int) -> None:
+        """Tell live workers the tid prefix below ``base`` is compacted
+        for good (they drop task-table/store rows).  In-process drivers
+        share the server's structures — nothing to send."""
+
     def prepare_epoch(self, tasks):
         """Encode an epoch for live workers (may raise, e.g. unpicklable
         callables — BEFORE any core state is mutated)."""
@@ -248,7 +282,10 @@ class ServerCore:
 
     def __init__(self, graph: TaskGraph, reactor, n_workers: int,
                  driver: Driver, *, p2p: bool = False,
-                 balance_interval: float = 0.05, timeout: float = 300.0):
+                 balance_interval: float = 0.05, timeout: float = 300.0,
+                 memory_limit: int | None = None,
+                 spill_dir: str | None = None, high_water: float = 0.8,
+                 compact_threshold: int | None = 8192):
         self.g = graph
         self.reactor = reactor
         self.n_workers = n_workers
@@ -256,7 +293,26 @@ class ServerCore:
         self.p2p = p2p
         self.balance_interval = balance_interval
         self.timeout = timeout
-        self.results: dict[int, Any] = {}
+        # memory subsystem: every result lives in an ObjectStore.  For
+        # in-process drivers this one store IS the worker store, so the
+        # limit applies here; remote-result drivers enforce the limit in
+        # each worker process and keep the client-facing store unbounded
+        self.memory_limit = memory_limit
+        self.spill_dir = spill_dir
+        self.high_water = high_water
+        self.compact_threshold = compact_threshold
+        limit_here = None if driver.remote_results else memory_limit
+        self.results: ObjectStore = ObjectStore(
+            memory_limit=limit_here, spill_dir=spill_dir, name="server")
+        # per-worker memory ledgers (fed by piggybacked usage records)
+        self.worker_mem: dict[int, int] = {}
+        self.mem_pressured: set[int] = set()
+        self.peak_worker_bytes = 0
+        self._w_spill_b: dict[int, int] = {}
+        self._w_unspill_b: dict[int, int] = {}
+        self._w_spill_c: dict[int, int] = {}
+        self._w_unspill_c: dict[int, int] = {}
+        self.n_compactions = 0
         self.dead: set[int] = set()
         self.server_busy = 0.0
         self.codec_s = 0.0
@@ -322,12 +378,22 @@ class ServerCore:
             self._epochs.append(e)
         return e
 
+    def _spill_totals(self) -> tuple[int, int]:
+        """Current cumulative (spill_bytes, unspill_bytes) across the
+        node: the shared store for in-process drivers, the per-worker
+        ledgers for remote-result drivers."""
+        if not self.driver.remote_results:
+            return self.results.spill_bytes, self.results.unspill_bytes
+        return (sum(self._w_spill_b.values()),
+                sum(self._w_unspill_b.values()))
+
     def _bind_epoch(self, e: EpochStats, lo: int, hi: int) -> None:
         e.lo, e.hi, e.remaining = lo, hi, hi - lo
         e.t_ingest = time.perf_counter()
         e.server_busy0 = self.server_busy
         e.relay_bytes0 = self.relay_bytes
         e.p2p_bytes0 = self.p2p_bytes
+        e.spill_bytes0, e.unspill_bytes0 = self._spill_totals()
         self._range_los.append(lo)
         self._range_epochs.append(e)
         if e.remaining == 0:
@@ -342,6 +408,7 @@ class ServerCore:
         e.server_busy1 = self.server_busy
         e.relay_bytes1 = self.relay_bytes
         e.p2p_bytes1 = self.p2p_bytes
+        e.spill_bytes1, e.unspill_bytes1 = self._spill_totals()
         e.done_evt.set()
 
     def _fail_epoch(self, e: EpochStats, error: BaseException) -> None:
@@ -371,7 +438,7 @@ class ServerCore:
     def _note_finished(self, tids) -> None:
         for tid in tids:
             tid = int(tid)
-            if tid in self._completed:
+            if tid in self._completed or tid < self.g.tid_base:
                 continue
             self._completed.add(tid)
             i = bisect.bisect_right(self._range_los, tid) - 1
@@ -494,17 +561,24 @@ class ServerCore:
     def _do_release(self, tids) -> None:
         released = self._charge(self.reactor.release_keys, tids)
         for tid in released:
-            self.results.pop(tid, None)
+            self.results.discard(tid)
         # drain the reclaim log (it contains ``released``) so the same
         # keys are not evicted a second time by the loop's drain
         self._evict_workers(self.reactor.drain_reclaimed())
+        self._maybe_compact()
 
     def _evict_workers(self, reclaimed) -> None:
         """Release frames for every reclaimed key to every worker that
         holds a copy (computing holder AND fetch replicas), so a
         long-lived pool sheds values nobody can ask for again.  Inproc
-        drivers have no worker caches; the log is simply dropped."""
+        drivers share one store with their workers: under a memory
+        limit the reclaim log evicts it directly (bounded footprint);
+        unlimited in-process runs keep every value, preserving the
+        legacy one-shot ``RunResult.results`` surface."""
         if not self.driver.remote_results:
+            if self.memory_limit is not None:
+                for tid in reclaimed:
+                    self.results.discard(tid)
             return
         by_wid: dict[int, list[int]] = {}
         for tid in reclaimed:
@@ -581,6 +655,37 @@ class ServerCore:
             self._do_gather([int(t) for t in absent], fresh=False)
 
     # ------------------------------------------------------------------
+    # protocol: per-worker memory ledger
+    # ------------------------------------------------------------------
+
+    def _note_usage(self, wid: int, usage) -> None:
+        """Fold a worker's piggybacked object-store usage record into
+        the memory ledger; high-water transitions are fed to the
+        scheduler so stealing stops targeting pressured workers."""
+        if wid in self.dead:
+            return
+        mem, peak, sb, ub, sc, uc = (int(x) for x in usage)
+        self.worker_mem[wid] = mem
+        # the worker reports its own store-tracked peak, so transient
+        # put-then-evict spikes between flushes are not lost
+        if peak > self.peak_worker_bytes:
+            self.peak_worker_bytes = peak
+        self._w_spill_b[wid] = sb
+        self._w_unspill_b[wid] = ub
+        self._w_spill_c[wid] = sc
+        self._w_unspill_c[wid] = uc
+        if not self.memory_limit:
+            return
+        pressured = mem >= self.high_water * self.memory_limit
+        if pressured != (wid in self.mem_pressured):
+            if pressured:
+                self.mem_pressured.add(wid)
+            else:
+                self.mem_pressured.discard(wid)
+            self._charge(self.reactor.handle_memory_pressure, wid,
+                         pressured)
+
+    # ------------------------------------------------------------------
     # protocol: dispatch, hints, parked tasks
     # ------------------------------------------------------------------
 
@@ -620,10 +725,16 @@ class ServerCore:
                 if wid in holders:
                     continue    # already in the target worker's cache
                 skip = tried.get(d, ()) if tried else ()
-                h = next((h for h in holders
-                          if h not in self.dead
-                          and h in self._data_addrs
-                          and h not in skip), None)
+                cands = [h for h in holders
+                         if h not in self.dead
+                         and h in self._data_addrs
+                         and h not in skip]
+                # memory-aware hinting: a holder above the high-water
+                # mark has likely spilled this value — fetching from it
+                # pays an unspill; prefer a pressure-free replica
+                h = next((c for c in cands
+                          if c not in self.mem_pressured),
+                         cands[0] if cands else None)
                 if h is not None:
                     hints.setdefault(tid, {})[d] = self._data_addrs[h]
                     hmap[d] = h
@@ -650,6 +761,7 @@ class ServerCore:
         pending = list(assignments)
         while pending:
             durations = self.g.durations
+            base = self.g.tid_base
             rerouted: list = []
             by_wid: dict[int, list] = {}
             for tid, wid in pending:
@@ -660,7 +772,7 @@ class ServerCore:
                     rerouted.extend(out)
                     continue
                 by_wid.setdefault(wid, []).append(
-                    (int(tid), float(durations[tid])))
+                    (int(tid), float(durations[tid - base])))
             for wid, items in by_wid.items():
                 self._send_compute(wid, items)
             pending = rerouted
@@ -708,7 +820,7 @@ class ServerCore:
                     break
             if not ok:
                 continue
-            items = [(tid, float(self.g.durations[tid]))]
+            items = [(tid, self.g.dur_of(tid))]
             self._send_compute(wid, items, tried=st["tried"])
             for d, h in self._hinted.get(tid, (wid, {}))[1].items():
                 st["tried"].setdefault(d, set()).add(h)
@@ -741,7 +853,7 @@ class ServerCore:
                        for d in stale):
                 continue    # gone everywhere: lineage recovery handles it
             self.driver.send_retract(ow, [tid])
-            self._send_compute(ow, [(tid, float(self.g.durations[tid]))])
+            self._send_compute(ow, [(tid, self.g.dur_of(tid))])
             self.n_rehints += 1
 
     # ------------------------------------------------------------------
@@ -755,6 +867,8 @@ class ServerCore:
             self.dead.add(wid)
             self.driver.drop(wid)
             self._data_addrs.pop(wid, None)
+            self.worker_mem.pop(wid, None)
+            self.mem_pressured.discard(wid)
             for reps in self._replicas.values():
                 reps.discard(wid)
             if len(self.dead) >= self.n_workers \
@@ -883,6 +997,8 @@ class ServerCore:
                 for nbytes, nfetch in ev[1]:
                     self.p2p_bytes += int(nbytes)
                     self.n_p2p_fetches += int(nfetch)
+            elif kind == "usage":
+                self._note_usage(int(ev[1]), ev[2])
         if finished:
             self._handle_finished(finished)
         # payload-byte accounting lives on the codec (it sees the blob
@@ -931,10 +1047,54 @@ class ServerCore:
             self._do_gather(regather, fresh=True)
         self._dispatch(out)
         for tid in self.reactor.drain_purged():
-            self.results.pop(tid, None)
+            self.results.discard(tid)
         self._evict_workers(self.reactor.drain_reclaimed())
         self._note_finished(t for t, _ in finished)
         self._park_dirty = True
+        self._maybe_compact()
+
+    # ------------------------------------------------------------------
+    # released-tid prefix compaction (bounded footprint for long-lived
+    # clusters: the dense tid space advances instead of growing forever)
+    # ------------------------------------------------------------------
+
+    def _maybe_compact(self) -> None:
+        """Advance the tid base past a fully-released prefix once it is
+        ``compact_threshold`` rows deep: graph columns, reactor state and
+        every core ledger drop those rows for good.  Compaction finalizes
+        the releases — lineage below the base is unrecoverable (the same
+        trade Dask makes when it forgets a released key)."""
+        thr = self.compact_threshold
+        if not thr:
+            return
+        if not getattr(self.reactor.scheduler, "supports_compaction",
+                       True):
+            return    # precomputed-plan schedulers index from tid 0
+        new_base = self.reactor.released_prefix()
+        if new_base - self.g.tid_base < thr:
+            return
+        self._charge(self._compact_to, new_base)
+
+    def _compact_to(self, new_base: int) -> None:
+        self.g.compact_prefix(new_base)
+        self.reactor.compact_prefix(new_base)
+        for ledger in (self._tasks_table, self._replicas,
+                       self._gather_state, self._hinted, self._parked):
+            for tid in [t for t in ledger if t < new_base]:
+                del ledger[tid]
+        self._gather_failed = {t for t in self._gather_failed
+                               if t >= new_base}
+        self._completed = {t for t in self._completed if t >= new_base}
+        # drop finished epoch ranges that sit entirely below the base
+        # (the EpochStats objects stay reachable via epoch(eid))
+        while self._range_epochs and self._range_epochs[0].hi <= new_base \
+                and self._range_epochs[0].done_evt.is_set():
+            self._range_los.pop(0)
+            self._range_epochs.pop(0)
+        # workers mirror the drop: their local task tables would
+        # otherwise keep every (fn, args) ever shipped via update-graph
+        self.driver.broadcast_compact(new_base)
+        self.n_compactions += 1
 
     # -- one-shot result collection (p2p: results live worker-side) ----
 
@@ -1015,14 +1175,41 @@ class ServerCore:
         makespan = time.perf_counter() - t_start
         # a timed-out run force-kills: no zombie worker processes
         self.driver.teardown(force=self._timed_out)
+        # materialize to a plain dict (unspilling anything the bounded
+        # store pushed to disk): the legacy one-shot surface is eager
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
                          server_busy=self.server_busy,
                          stats=self.run_stats(),
-                         results=self.results, timed_out=self._timed_out,
+                         results=dict(self.results.items()),
+                         timed_out=self._timed_out,
                          epochs=self.epoch_dicts())
 
     def run_stats(self) -> dict:
-        """Reactor stats plus the driver's wire/codec meters."""
+        """Reactor stats plus the driver's wire/codec meters plus the
+        memory subsystem's meters."""
         stats = self.reactor.stats.as_dict()
         stats.update(self.driver.stats_extra())
+        stats.update(self.memory_stats())
         return stats
+
+    def memory_stats(self) -> dict:
+        """Aggregated object-store meters.  In-process drivers read the
+        shared store directly; remote-result drivers aggregate the
+        per-worker ledgers fed by piggybacked usage records."""
+        if not self.driver.remote_results:
+            st = self.results
+            peak, spill_c, unspill_c = (st.peak_bytes, st.spill_count,
+                                        st.unspill_count)
+        else:
+            peak = self.peak_worker_bytes
+            spill_c = sum(self._w_spill_c.values())
+            unspill_c = sum(self._w_unspill_c.values())
+        spill_b, unspill_b = self._spill_totals()
+        return {"memory_limit": self.memory_limit,
+                "peak_worker_bytes": peak,
+                "spill_bytes": spill_b,
+                "unspill_bytes": unspill_b,
+                "spill_count": spill_c,
+                "unspill_count": unspill_c,
+                "n_compactions": self.n_compactions,
+                "tid_base": self.g.tid_base}

@@ -675,7 +675,10 @@ class DataPlaneListener:
     are served while the (single-threaded) compute loop is busy — the
     same shape as Dask's worker, which serves data over its event loop
     concurrently with task execution.  Wire content is the caller's
-    business (the handler decodes/encodes via :mod:`repro.core.messages`);
+    business (the handler decodes/encodes via :mod:`repro.core.messages`
+    and reads values out of the worker's
+    :class:`repro.core.store.ObjectStore`, unspilling on demand — the
+    store's internal lock makes that safe against the compute loop);
     this class only moves frames, like the rest of the module.
     """
 

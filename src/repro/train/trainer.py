@@ -197,7 +197,7 @@ class MicrobatchCoordinator:
                             # stolen tasks would stall the next one
                             continue
                     time.sleep(self.slow[wid])
-                    t = rt.g.tasks[item]
+                    t = rt.g.task(item)
                     if t.fn is not None:
                         args = [rt.results.get(d) for d in t.inputs]
                         rt.results[item] = t.fn(*args) if t.args == () \

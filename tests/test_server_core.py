@@ -193,8 +193,11 @@ def test_run_result_and_epoch_stats_fields_unchanged():
     assert names == ["eid", "n_tasks", "t_submit", "t_ingest", "t_done",
                      "lo", "hi", "remaining", "server_busy0",
                      "server_busy1", "relay_bytes0", "relay_bytes1",
-                     "p2p_bytes0", "p2p_bytes1", "error", "done_evt"]
-    for prop in ("makespan", "server_busy", "relay_bytes", "p2p_bytes"):
+                     "p2p_bytes0", "p2p_bytes1", "spill_bytes0",
+                     "spill_bytes1", "unspill_bytes0", "unspill_bytes1",
+                     "error", "done_evt"]
+    for prop in ("makespan", "server_busy", "relay_bytes", "p2p_bytes",
+                 "spill_bytes", "unspill_bytes"):
         assert isinstance(getattr(EpochStats, prop), property)
 
 

@@ -1,0 +1,473 @@
+"""Worker memory subsystem: bounded ObjectStore + LRU spill-to-disk +
+memory-aware scheduling + released-prefix compaction.
+
+Covers the tentpole and its satellites:
+
+* store unit behaviour: byte-accounted LRU ordering, spill/unspill
+  round-trip fidelity, two-tier discard, the unbounded fast path,
+* usage piggyback on finished/stats frames in both wire codecs,
+* the memory-pressure parity matrix: a reduction whose live
+  intermediate set exceeds ``memory_limit`` completes bit-identically
+  across thread/process x selector/asyncio x dask/rsds, reports
+  ``spill_bytes > 0`` and keeps peak worker bytes <= limit + one
+  object's slack,
+* eviction-vs-client-hold interaction: held keys survive spill (reads
+  unspill transparently); released keys leave both tiers,
+* schedulers stop stealing onto workers above the high-water mark,
+* released tid-prefix compaction bounds a long-lived Cluster's dense
+  tid space (graph/reactor rows, ledgers, scheduler state),
+* the opportunistic uvloop driver is gated on importability.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import benchgraphs, messages as msg, run_graph
+from repro.core.client import Cluster, ReleasedKeyError
+from repro.core.store import ObjectStore, sizeof
+
+SERVERS = ["dask", "rsds"]
+
+
+def _add(a, b):
+    return a + b
+
+
+def _arr(i):
+    return np.full(256, float(i))
+
+
+def _asum(*vs):
+    out = vs[0].copy()
+    for v in vs[1:]:
+        out += v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ObjectStore unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_store_lru_ordering_spills_coldest_first():
+    st = ObjectStore(memory_limit=3 * sizeof(np.zeros(64)))
+    for i in range(3):
+        st.put(i, np.full(64, float(i)))
+    assert st.spill_count == 0
+    st.get(0)                       # touch 0: key 1 is now coldest
+    st.put(3, np.full(64, 3.0))     # overflow: one eviction due
+    assert st.spill_count == 1
+    assert 1 not in st._mem and 1 in st     # 1 spilled, still readable
+    assert 0 in st._mem                     # the touched key stayed hot
+    st.close()
+
+
+def test_store_spill_unspill_roundtrip_fidelity(tmp_path):
+    st = ObjectStore(memory_limit=1, spill_dir=str(tmp_path))
+    vals = {0: np.arange(1000, dtype=np.float64),
+            1: {"nested": [np.int32(7), b"bytes", "str"]},
+            2: 123456789}
+    for k, v in vals.items():
+        st.put(k, v)
+    assert st.stats()["n_spilled"] >= 2     # only the newest stays
+    assert os.listdir(tmp_path)             # real files on disk
+    np.testing.assert_array_equal(st.get(0), vals[0])   # bit-identical
+    assert st.get(1) == vals[1]
+    assert st.get(2) == vals[2]
+    assert st.unspill_count >= 2
+    assert st.unspill_bytes > 0
+    st.close()
+
+
+def test_store_discard_clears_both_tiers(tmp_path):
+    st = ObjectStore(memory_limit=1, spill_dir=str(tmp_path))
+    st.put(0, np.zeros(512))
+    st.put(1, np.zeros(512))        # 0 spills
+    assert st.discard(0) and st.discard(1)
+    assert len(st) == 0 and st.disk_bytes == 0
+    assert not any(f.endswith(".pkl")
+                   for _, _, fs in os.walk(tmp_path) for f in fs)
+    assert not st.discard(7)        # absent key: False, no raise
+    st.close()
+
+
+def test_stores_sharing_spill_root_never_collide(tmp_path):
+    """Each store owns a unique subdir under a shared spill root, so
+    two runs spilling the same tid cannot overwrite or unlink each
+    other's files."""
+    a = ObjectStore(memory_limit=1, spill_dir=str(tmp_path), name="a")
+    bb = ObjectStore(memory_limit=1, spill_dir=str(tmp_path), name="b")
+    a.put(5, np.arange(3.0))
+    bb.put(5, np.full(3, 7.0))
+    a.put(6, np.zeros(1))           # push both 5s to disk
+    bb.put(6, np.zeros(1))
+    np.testing.assert_array_equal(a.get(5), np.arange(3.0))
+    np.testing.assert_array_equal(bb.get(5), np.full(3, 7.0))
+    a.put(7, np.zeros(1))           # respill a's 5 after the reads
+    bb.discard(5)
+    bb.close()                      # b's cleanup must not touch a's files
+    np.testing.assert_array_equal(a.get(5), np.arange(3.0))
+    assert os.path.isdir(tmp_path)  # the shared root itself survives
+    a.close()
+
+
+def test_store_unbounded_fast_path_never_spills():
+    st = ObjectStore()              # memory_limit=None
+    for i in range(100):
+        st.put(i, np.zeros(256))
+    assert st.spill_count == 0 and st.disk_bytes == 0
+    assert len(st) == 100 and st.peak_bytes == st.mem_bytes
+    st.close()
+
+
+def test_store_oversized_object_keeps_one_slack():
+    big = np.zeros(4096)
+    st = ObjectStore(memory_limit=100)
+    st.put(0, big)                  # bigger than the whole limit
+    assert 0 in st._mem             # newest value is never self-evicted
+    st.put(1, np.zeros(4096))
+    assert 1 in st._mem and 0 not in st._mem    # old big one spilled
+    np.testing.assert_array_equal(st.get(0), big)
+    st.close()
+
+
+def test_store_mapping_surface():
+    st = ObjectStore()
+    st[3] = "x"
+    st.update({4: "y"})
+    assert dict(st.items()) == {3: "x", 4: "y"}
+    assert st.pop(3) == "x" and 3 not in st
+    with pytest.raises(KeyError):
+        st[99]
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# usage piggyback on the wire (both codecs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_name", ["dask", "rsds"])
+def test_wire_usage_piggyback_roundtrip(wire_name):
+    wire = msg.make_wire(wire_name)
+    usage = (1024, 4096, 2048, 512, 3, 2)
+    for frame in wire.encode_finished_batch(1, [(5, msg._NO_RESULT)],
+                                            usage):
+        wire.decode(frame)
+    assert wire.take_usage() == usage
+    assert wire.take_usage() is None        # drained on read
+    # stats frames carry it too
+    (frame,) = wire.encode_stats(10, 1, usage)
+    op, recs, _ = wire.decode(frame)
+    assert op == msg.OP_STATS
+    assert (recs[0][0], recs[0][1]) == (10, 1)
+    assert wire.take_usage() == usage
+    # frames without usage leave the side channel empty
+    for frame in wire.encode_finished_batch(1, [(6, msg._NO_RESULT)]):
+        wire.decode(frame)
+    assert wire.take_usage() is None
+
+
+# ---------------------------------------------------------------------------
+# memory-pressure parity matrix (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+N_LEAVES, ELEMS = 12, 2048
+LIMIT = 40_000          # << live set (12 leaves x 16 KiB arrays)
+SLACK = ELEMS * 8 + 200  # one object's worth of LRU slack
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_memory_pressure_parity_matrix(server):
+    g = benchgraphs.array_reduction(N_LEAVES, elems=ELEMS, fan=4)
+    sink = g.n_tasks - 1
+    want = float(ELEMS * N_LEAVES * (N_LEAVES + 1) / 2)
+
+    base = run_graph(g, server=server, runtime="thread", n_workers=3,
+                     timeout=60.0)
+    assert not base.timed_out and base.results[sink] == want
+    assert base.stats["spill_bytes"] == 0       # unlimited: no spill
+
+    runs = {"thread": run_graph(g, server=server, runtime="thread",
+                                n_workers=3, memory_limit=LIMIT,
+                                timeout=60.0)}
+    for driver in ("selector", "asyncio"):
+        runs[driver] = run_graph(g, server=server, runtime="process",
+                                 n_workers=3, driver=driver,
+                                 memory_limit=LIMIT, timeout=60.0)
+    for name, r in runs.items():
+        assert not r.timed_out, name
+        assert r.results[sink] == want, name        # bit-identical
+        assert r.stats["spill_bytes"] > 0, name     # pressure was real
+        assert r.stats["unspill_count"] > 0, name
+        assert r.stats["memory_limit"] == LIMIT, name
+        assert r.stats["peak_worker_bytes"] <= LIMIT + SLACK, name
+        # per-epoch meters surface the same subsystem
+        assert r.epochs[0]["spill_bytes"] > 0, name
+
+
+def test_epoch_spill_meter_isolates_pressured_epoch():
+    """Back-to-back epochs on one warm cluster: only the epoch that
+    overflows the store shows spill bytes."""
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 memory_limit=30_000, timeout=60.0) as c:
+        small = c.client.submit_graph(
+            benchgraphs.value_reduction(6, fan=3))
+        small.result(30.0)
+        big = c.client.submit_graph(
+            benchgraphs.array_reduction(10, elems=2048, fan=5))
+        big.result(30.0)
+        assert small.epoch.spill_bytes == 0
+        assert big.epoch.spill_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# eviction vs client-hold interaction
+# ---------------------------------------------------------------------------
+
+def test_client_held_keys_survive_spill_and_release_evicts():
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 memory_limit=20_000, timeout=60.0) as c:
+        futs = [c.client.submit(_arr, i) for i in range(20)]
+        vals = [f.result(30.0) for f in futs]   # unspills transparently
+        for i, v in enumerate(vals):
+            np.testing.assert_array_equal(v, np.full(256, float(i)))
+        st = c.runtime.results
+        assert st.spill_count > 0               # pressure really spilled
+        assert all(f.tid in st for f in futs)   # held => still resident
+        for f in futs:
+            f.release()
+        deadline = __import__("time").time() + 5.0
+        while __import__("time").time() < deadline and len(st):
+            __import__("time").sleep(0.01)
+        assert len(st) == 0                     # both tiers shed
+        assert st.disk_bytes == 0
+        with pytest.raises(ReleasedKeyError):
+            futs[0].result(5.0)
+
+
+def test_refcount_gc_evicts_spilled_intermediates():
+    """Intermediates reclaimed by refcount GC leave the bounded store
+    (memory AND disk) even though they were spilled at the time."""
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 memory_limit=20_000, timeout=60.0) as c:
+        gf = c.client.submit_graph(
+            benchgraphs.array_reduction(12, elems=1024, fan=4))
+        res = gf.result(30.0)
+        gf.release()
+        deadline = __import__("time").time() + 5.0
+        st = c.runtime.results
+        while __import__("time").time() < deadline and len(st):
+            __import__("time").sleep(0.01)
+        assert len(st) == 0 and st.disk_bytes == 0
+        assert res[len(gf) - 1] == float(1024 * 12 * 13 / 2)
+
+
+# ---------------------------------------------------------------------------
+# memory-aware scheduling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched_name", ["rsds_ws", "dask_ws"])
+def test_balance_never_steals_onto_pressured_worker(sched_name):
+    from repro.core.graph import Task, TaskGraph
+    from repro.core.schedulers import make_scheduler
+
+    g = TaskGraph([Task(i, ()) for i in range(8)])
+
+    def loaded_sched():
+        s = make_scheduler(sched_name)
+        s.attach(g, 3)
+        s.loads[0] = 8      # both flavours keep per-worker load counts
+        return s
+
+    s = loaded_sched()
+    s.on_memory_pressure(1, True)       # worker 1 is over high-water
+    moves = s.balance({0: list(range(8))})
+    assert moves, "idle worker 2 should still receive steals"
+    assert all(w == 2 for _, w in moves)
+    s2 = loaded_sched()                 # no pressure: both are targets
+    assert {w for _, w in s2.balance({0: list(range(8))})} == {1, 2}
+    s.on_memory_pressure(1, False)      # transition back clears the set
+    assert 1 not in s.mem_pressured
+
+
+def test_pressure_ledger_feeds_scheduler_and_hinting():
+    """End-to-end: a worker whose usage report crosses high-water lands
+    in the scheduler's pressured set and is deprioritized as a who_has
+    hint holder; dropping back under clears it."""
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 memory_limit=10_000, high_water=0.5,
+                 timeout=60.0) as c:
+        rt = c.runtime
+        rt._note_usage(0, (9_000, 9_000, 0, 0, 0, 0))   # above 0.5*limit
+        assert 0 in rt.mem_pressured
+        assert 0 in rt.reactor.scheduler.mem_pressured
+        assert rt.peak_worker_bytes == 9_000
+        rt._note_usage(0, (1_000, 9_000, 0, 0, 0, 0))   # back under
+        assert 0 not in rt.mem_pressured
+        assert 0 not in rt.reactor.scheduler.mem_pressured
+        assert rt.peak_worker_bytes == 9_000            # peak is sticky
+
+
+# ---------------------------------------------------------------------------
+# released-prefix compaction
+# ---------------------------------------------------------------------------
+
+def test_graph_compact_prefix_translates_accessors():
+    from repro.core.graph import Task, TaskGraph
+
+    tasks = [Task(0, (), 1.0, 10.0), Task(1, (0,), 2.0, 20.0),
+             Task(2, (1,), 3.0, 30.0), Task(3, (1, 2), 4.0, 40.0)]
+    g = TaskGraph(tasks, name="c")
+    g.compact_prefix(2)
+    assert g.tid_base == 2 and g.n_tasks == 4 and g.n_rows == 2
+    assert g.task(2).tid == 2 and g.dur_of(3) == 4.0
+    assert g.size_of(2) == 30.0
+    assert list(g.inputs_of(3)) == [1, 2]       # values stay global
+    assert list(g.consumers_of(2)) == [3]
+    lo, hi = g.extend([Task(4, (3,), 5.0, 50.0)])
+    assert (lo, hi) == (4, 5)
+    assert list(g.consumers_of(3)) == [4]
+    assert g.dur_of(4) == 5.0
+
+
+def test_warm_cluster_bounded_rows_over_many_epochs():
+    """Many submit/release epochs on one Cluster: compaction keeps the
+    graph's stored rows (and the reactor mirror) bounded while tids keep
+    growing — the PR-4 ROADMAP leftover."""
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 compact_threshold=50, timeout=60.0) as c:
+        max_rows = 0
+        for i in range(300):
+            f = c.client.submit(_add, i, 1)
+            assert f.result(10.0) == i + 1
+            f.release()
+            max_rows = max(max_rows, c.runtime.g.n_rows)
+        rt = c.runtime
+        assert rt.g.n_tasks == 300              # tids stay dense/global
+        assert rt.n_compactions >= 3
+        assert rt.g.tid_base >= 200
+        assert max_rows < 150                   # bounded, not ever-growing
+        assert rt.g.n_rows == len(rt.g.tasks)
+        # reactor mirror and ledgers compacted in lockstep
+        assert rt.reactor.tid_base == rt.g.tid_base
+        assert len(rt._completed) <= rt.g.n_rows
+        assert rt.run_stats()["tid_base"] == rt.g.tid_base
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_compaction_preserves_cross_epoch_deps(server):
+    """Live keys above the base keep working as dependencies while the
+    released prefix compacts away beneath them."""
+    with Cluster(server=server, runtime="thread", n_workers=2,
+                 compact_threshold=20, timeout=60.0) as c:
+        # a churned-and-released prefix below the held key (a held tid
+        # blocks the prefix, so compaction starts above it only once
+        # everything before it is released)
+        for i in range(30):
+            f = c.client.submit(_add, i, 0)
+            assert f.result(10.0) == i
+            f.release()
+        keep = c.client.submit(_add, 100, 0)
+        assert keep.result(10.0) == 100
+        for i in range(60):
+            f = c.client.submit(_add, keep, 1)  # depends on held key
+            assert f.result(10.0) == 101
+            f.release()
+        assert c.runtime.n_compactions >= 1
+        assert 0 < c.runtime.g.tid_base <= keep.tid
+        # the held dependency survived every compaction
+        assert keep.result(10.0) == 100
+        # compacted keys are definitively released
+        with pytest.raises(ReleasedKeyError):
+            type(keep)(c, "x", 1, 0).result(1.0)
+
+
+def test_compaction_on_process_runtime():
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 compact_threshold=30, timeout=60.0) as c:
+        for i in range(100):
+            f = c.client.submit(_add, i, i)
+            assert f.result(15.0) == 2 * i
+            f.release()
+        assert c.runtime.n_compactions >= 1
+        assert c.runtime.g.tid_base >= 30
+        assert c.runtime.run_stats()["n_compactions"] >= 1
+
+
+@pytest.mark.parametrize("wire_name", ["dask", "rsds"])
+def test_wire_compact_frame_roundtrip(wire_name):
+    """OP_COMPACT tells workers to shed task-table/store rows below the
+    base, so their footprint tracks the live window too."""
+    wire = msg.make_wire(wire_name)
+    (frame,) = wire.encode_compact(4096)
+    op, recs, payloads = wire.decode(frame)
+    assert op == msg.OP_COMPACT
+    assert int(recs[0]) == 4096 and payloads is None
+
+
+def test_all_done_in_fully_compacted_range_is_done():
+    """A (lo, hi) range entirely below the compaction base must read as
+    done on both reactors — a stale gather for a compacted tid fails
+    fast instead of parking forever (negative-slice regression)."""
+    from repro.core.array_reactor import ArrayReactor
+    from repro.core.graph import Task, TaskGraph
+    from repro.core.reactor import ObjectReactor
+    from repro.core.schedulers import make_scheduler
+
+    for cls, sched in ((ArrayReactor, "rsds_ws"),
+                       (ObjectReactor, "dask_ws")):
+        g = TaskGraph([Task(i, ()) for i in range(6)], name="adc")
+        r = cls(g, make_scheduler(sched), 2, simulate_codec=False)
+        r.start()
+        r.handle_finished([(i, 0) for i in range(6)])
+        # mark 0..3 RELEASED directly, as the refcount GC would
+        if cls is ArrayReactor:
+            r.state[:4] = 4
+        else:
+            for i in range(4):
+                r.tasks[r._key(i)]["state"] = 4
+        assert r.released_prefix() == 4
+        r.compact_prefix(4)
+        assert r.all_done_in(0, 2)          # fully below the base
+        assert r.all_done_in(2, 6)          # straddling the base
+        assert r.is_released(1)
+
+
+def test_submit_depending_on_compacted_tid_rejected():
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 compact_threshold=10, timeout=60.0) as c:
+        futs = [c.client.submit(_add, i, 0) for i in range(40)]
+        for f in futs:
+            f.result(10.0)
+            f.release()
+        deadline = __import__("time").time() + 5.0
+        while __import__("time").time() < deadline \
+                and c.runtime.g.tid_base == 0:
+            __import__("time").sleep(0.01)
+        assert c.runtime.g.tid_base > 0
+        with pytest.raises(ReleasedKeyError):
+            c.client.submit(_add, futs[0], 1)
+
+
+# ---------------------------------------------------------------------------
+# opportunistic uvloop driver
+# ---------------------------------------------------------------------------
+
+def test_uvloop_driver_gated_on_importability():
+    from repro.core.runtime import has_uvloop
+    if has_uvloop():
+        r = run_graph(benchgraphs.merge(30, dur_ms=0.0), server="uvloop",
+                      n_workers=2, simulate_durations=False, timeout=60.0)
+        assert not r.timed_out
+        assert r.stats["server_driver"] == "uvloop"
+    else:
+        from repro.core.array_reactor import ArrayReactor
+        from repro.core.graph import TaskGraph
+        from repro.core.runtime import ProcessRuntime
+        from repro.core.schedulers import make_scheduler
+
+        g = TaskGraph([], name="u")
+        reactor = ArrayReactor(g, make_scheduler("rsds_ws"), 2,
+                               simulate_codec=False)
+        with pytest.raises(RuntimeError, match="uvloop"):
+            ProcessRuntime(g, reactor, 2, driver="uvloop")
