@@ -59,6 +59,39 @@ def _bench_spill(runtime: str, n_workers: int) -> list[tuple]:
     return rows
 
 
+def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
+                  n_tasks: int = 300) -> list[tuple]:
+    """Observability overhead: identical warm epochs on one Cluster
+    with the event feed off (the default) vs on (ring buffer).  The
+    first epoch is discarded (jit/codec warmup); the ratio is the price
+    of leaving events on, gated < 5 % by docs/events.md — the disabled
+    path is a single ``is None`` check per publish site and is priced
+    at ~0 by construction."""
+    graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_graphs)]
+    per: dict[str, float] = {}
+    rows: list[tuple] = []
+    n_events = 0
+    for mode, spec in (("off", None), ("on", True)):
+        with Cluster(server="rsds", runtime=runtime, n_workers=n_workers,
+                     simulate_durations=False, timeout=120.0,
+                     events=spec) as c:
+            warm = []
+            for g in graphs:
+                t0 = time.perf_counter()
+                c.client.submit_graph(g).result(120.0)
+                warm.append(time.perf_counter() - t0)
+            if mode == "on":
+                n_events = c.runtime.run_stats()["n_events"]
+        per[mode] = float(np.mean(warm[1:])) * 1e3
+        rows.append((f"client-{runtime}/events-{mode}",
+                     round(per[mode], 3),
+                     f"epochs=2..{n_graphs};tasks={n_tasks}"))
+    ratio = per["on"] / max(per["off"], 1e-9)
+    rows.append((f"client-{runtime}/events-overhead", "",
+                 f"on/off={ratio:.3f};n_events={n_events};gate=<1.05"))
+    return rows
+
+
 def _bench_compaction(n_epochs: int = 400) -> list[tuple]:
     """Bounded footprint over many submit/release epochs: with prefix
     compaction the graph's stored rows stay ~flat while the logical tid
@@ -195,6 +228,9 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
         if runtime == "process":
             rows.extend(_bench_data_plane(server, n_workers))
     rows.extend(_bench_spill(runtime, n_workers))
+    rows.extend(_bench_events(runtime, n_workers,
+                              n_graphs=max(3, n_graphs),
+                              n_tasks=n_tasks))
     rows.extend(_bench_ingest())
     rows.extend(_bench_compaction())
     return rows

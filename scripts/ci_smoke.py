@@ -4,8 +4,10 @@ Runs merge+tree graphs through the simulator, the thread runtime and the
 process runtime (both servers, both server drivers — blocking selector
 AND the asyncio event loop), plus a warm persistent Cluster submitting
 back-to-back epochs on each runtime, data-plane relay/p2p byte-split
-checks, and a memory-pressure spill case (tiny memory_limit must force
-object-store spill with bit-correct results), each under a short
+checks, a memory-pressure spill case (tiny memory_limit must force
+object-store spill with bit-correct results), and an observability
+case (record a JSONL event log, replay it, require agreement with
+RunResult.stats), each under a short
 watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
 seconds instead of waiting out the 300 s benchmark timeout.
 
@@ -91,6 +93,38 @@ def _spill_case(server: str):
     return r
 
 
+def _events_case(server: str):
+    """Observability under the watchdog: record a process-runtime run
+    to a JSONL log, replay it, and require the reconstruction to agree
+    with RunResult.stats — the docs/events.md replay contract."""
+    import os
+    import tempfile
+
+    from repro.core import benchgraphs, run_graph
+    from repro.core.events import load_jsonl, replay
+
+    g = benchgraphs.merge(60)
+    with tempfile.TemporaryDirectory() as td:
+        log = os.path.join(td, "run.jsonl")
+        r = run_graph(g, server=server, runtime="process", n_workers=3,
+                      simulate_durations=False, events=log, timeout=30)
+        if not r.timed_out:
+            s = replay(load_jsonl(log))
+            if r.stats["n_events"] <= 0:
+                raise AssertionError("events=on published nothing")
+            if s["tasks_per_worker"] != r.stats["tasks_per_worker"]:
+                raise AssertionError(
+                    f"replay {s['tasks_per_worker']} != "
+                    f"stats {r.stats['tasks_per_worker']}")
+            if s["n_steals"] != r.stats["n_steals"]:
+                raise AssertionError(
+                    f"replay steals {s['n_steals']} != "
+                    f"stats {r.stats['n_steals']}")
+    r.detail = (f"events={r.stats.get('n_events')} "
+                f"steals={r.stats.get('n_steals')}")
+    return r
+
+
 def _cases():
     from repro.core import benchgraphs, run_graph, simulate
 
@@ -127,6 +161,8 @@ def _cases():
            lambda: _data_plane_case("rsds", True, driver="asyncio"))
     for server in ("dask", "rsds"):
         yield (f"spill/{server}", lambda s=server: _spill_case(s))
+    for server in ("dask", "rsds"):
+        yield (f"events/{server}", lambda s=server: _events_case(s))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

@@ -1,0 +1,241 @@
+#!/usr/bin/env python
+"""Stdlib-only live terminal dashboard over ``ServerCore.observe()``.
+
+Modeled on distributed's status/worker monitors: task-stream tail,
+per-worker occupancy/queue-depth rows, memory + spill ledgers and event
+counters, redrawn with plain ANSI (no curses, no deps) a few times per
+second.
+
+Two modes:
+
+* **demo** (default) — spins up a local :class:`repro.core.client.
+  Cluster` with ``events=True``, feeds it a rolling synthetic workload
+  and renders the live snapshot; ctrl-C to stop::
+
+      python scripts/dashboard.py
+      python scripts/dashboard.py --runtime process --server asyncio
+      python scripts/dashboard.py --n-workers 8 --memory-limit 2000000
+
+* **replay** — animates a recorded JSONL log (from ``events=<path>``)
+  at recorded relative timing (``--speed`` scales it)::
+
+      python scripts/dashboard.py --replay /tmp/run.jsonl --speed 4
+
+The snapshot API is intentionally poll-shaped (one dict per refresh),
+so the same loop can later serve a web/remote status endpoint — the
+ROADMAP's trace-driven scale harness ingests the same feed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.events import load_jsonl, replay  # noqa: E402
+
+CLEAR = "\x1b[2J\x1b[H"
+BOLD, DIM, RESET = "\x1b[1m", "\x1b[2m", "\x1b[0m"
+
+
+def _fmt_bytes(n: int | None) -> str:
+    if not n:
+        return "0"
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024:
+            return f"{n:.0f}{unit}"
+        n /= 1024
+    return f"{n:.1f}TB"
+
+
+def _bar(frac: float, width: int = 24) -> str:
+    frac = max(0.0, min(frac, 1.0))
+    fill = int(round(frac * width))
+    return "#" * fill + "." * (width - fill)
+
+
+def render(snap: dict, title: str) -> str:
+    """One frame from an ``observe()`` snapshot (or a replay-built
+    pseudo-snapshot with the same keys)."""
+    lines = [f"{BOLD}{title}{RESET}  driver={snap.get('driver', '?')}  "
+             f"workers={snap.get('n_workers', '?')}  "
+             f"finished={snap.get('n_finished', 0)}  "
+             f"steals={snap.get('n_steals', 0)}  "
+             f"rehints={snap.get('n_rehints', 0)}  "
+             f"events={snap.get('n_events', 0)}"]
+    limit = snap.get("memory_limit")
+    lines.append(f"mem_limit={_fmt_bytes(limit) if limit else 'unbounded'}"
+                 f"  spill={_fmt_bytes(snap.get('spill_bytes', 0))}"
+                 f"  unspill={_fmt_bytes(snap.get('unspill_bytes', 0))}"
+                 f"  epochs={snap.get('n_epochs', 0)}"
+                 f" (open: {len(snap.get('open_epochs', []))})"
+                 f"  server_busy={snap.get('server_busy', 0.0):.3f}s")
+    lines.append("")
+    tpw = {int(k): v for k, v in snap.get("tasks_per_worker", {}).items()}
+    queues = {int(k): v for k, v in snap.get("queues", {}).items()}
+    mem = {int(k): v for k, v in snap.get("worker_mem", {}).items()}
+    dead = set(snap.get("dead", ()))
+    pressured = set(snap.get("mem_pressured", ()))
+    peak = max(tpw.values(), default=1) or 1
+    wids = sorted(set(range(snap.get("n_workers", 0)))
+                  | set(tpw) | set(queues) | {w for w in mem if w >= 0})
+    lines.append(f"{BOLD}{'wid':>4} {'done':>6} {'queue':>6} "
+                 f"{'mem':>8}  share{RESET}")
+    for wid in wids:
+        flags = (" DEAD" if wid in dead
+                 else " PRESSURED" if wid in pressured else "")
+        lines.append(
+            f"{wid:>4} {tpw.get(wid, 0):>6} {queues.get(wid, 0):>6} "
+            f"{_fmt_bytes(mem.get(wid, 0)):>8}  "
+            f"[{_bar(tpw.get(wid, 0) / peak)}]{flags}")
+    counts = snap.get("event_counts", {})
+    if counts:
+        lines.append("")
+        top = sorted(counts.items(), key=lambda kv: -kv[1])[:8]
+        lines.append(DIM + "  ".join(f"{k}={v}" for k, v in top) + RESET)
+    tail = snap.get("last_events", ())
+    if tail:
+        lines.append("")
+        lines.append(f"{BOLD}task stream (last {len(tail)} events){RESET}")
+        for ev in tail:
+            extra = " ".join(f"{k}={v}" for k, v in ev.items()
+                             if k not in ("v", "seq", "t", "type"))
+            lines.append(f"{DIM}{ev['seq']:>7}{RESET} "
+                         f"{ev['type']:<16} {extra}")
+    return CLEAR + "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# demo mode: a local cluster under synthetic load
+# ---------------------------------------------------------------------------
+
+def _demo_graph(n: int, seed: int):
+    import random
+
+    from repro.core.graph import Task, TaskGraph
+    rng = random.Random(seed)
+    tasks = [Task(i, (), duration=rng.uniform(0.002, 0.02),
+                  output_size=rng.choice((1024, 65536)))
+             for i in range(n)]
+    tasks.append(Task(n, tuple(range(0, n, 3)), duration=0.002,
+                      output_size=64))
+    return TaskGraph(tasks, name="dash-demo")
+
+
+def run_demo(args) -> int:
+    from repro.core.client import Cluster
+    kw = {}
+    if args.memory_limit:
+        kw["memory_limit"] = args.memory_limit
+    cluster = Cluster(server=args.server, scheduler="ws",
+                      n_workers=args.n_workers, runtime=args.runtime,
+                      name="dashboard", events=True, **kw)
+    stop = threading.Event()
+
+    def feed():
+        i = 0
+        while not stop.is_set():
+            gf = cluster.client.submit_graph(_demo_graph(24, i))
+            gf.wait(30.0)
+            gf.release()
+            i += 1
+            stop.wait(0.1)
+
+    feeder = threading.Thread(target=feed, daemon=True)
+    feeder.start()
+    try:
+        while True:
+            sys.stdout.write(render(cluster.observe(),
+                                    "repro dashboard (demo)"))
+            sys.stdout.flush()
+            time.sleep(1.0 / args.fps)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        stop.set()
+        feeder.join(timeout=5.0)
+        cluster.close()
+        print(RESET + "closed.")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# replay mode: animate a recorded log
+# ---------------------------------------------------------------------------
+
+def run_replay(args) -> int:
+    events = load_jsonl(args.replay)
+    if not events:
+        print(f"empty log: {args.replay}", file=sys.stderr)
+        return 2
+    t0 = events[0].get("t", 0.0)
+    frame_dt = 1.0 / args.fps
+    next_frame = 0.0
+    shown = 0
+    try:
+        for i, ev in enumerate(events):
+            rel = (ev.get("t", t0) - t0) / args.speed
+            if rel >= next_frame or i == len(events) - 1:
+                window = events[:i + 1]
+                s = replay(window)
+                snap = {
+                    "driver": "replay",
+                    "n_workers": len(s["workers"]),
+                    "n_finished": s["n_finished"],
+                    "n_steals": s["n_steals"],
+                    "n_events": s["n_events"],
+                    "spill_bytes": s["spill_bytes"],
+                    "unspill_bytes": s["unspill_bytes"],
+                    "n_epochs": len(s["epochs"]),
+                    "open_epochs": [e for e, d in s["epochs"].items()
+                                    if d["t_close"] is None],
+                    "server_busy": 0.0,
+                    "memory_limit": None,
+                    "tasks_per_worker": s["tasks_per_worker"],
+                    "queues": {}, "worker_mem": {},
+                    "dead": [w for w, d in s["workers"].items()
+                             if d["lost"]],
+                    "mem_pressured": [w for w, d in s["workers"].items()
+                                      if d["pressured"]],
+                    "event_counts": s["by_type"],
+                    "last_events": window[-12:],
+                }
+                sys.stdout.write(render(
+                    snap, f"repro dashboard (replay {shown / args.speed:.1f}s"
+                          f" @ {args.speed}x)"))
+                sys.stdout.flush()
+                time.sleep(frame_dt)
+                next_frame = rel + frame_dt
+                shown = rel * args.speed
+    except KeyboardInterrupt:
+        pass
+    print(RESET)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--replay", metavar="LOG",
+                    help="animate a recorded JSONL log instead of a demo")
+    ap.add_argument("--speed", type=float, default=8.0,
+                    help="replay speed multiplier (default 8x)")
+    ap.add_argument("--fps", type=float, default=5.0,
+                    help="redraw rate (default 5 Hz)")
+    ap.add_argument("--runtime", default="thread",
+                    choices=("thread", "process"))
+    ap.add_argument("--server", default="rsds",
+                    help="rsds|dask|selector|asyncio|uvloop")
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--memory-limit", type=int, default=0,
+                    help="bound the demo pool's object store (bytes)")
+    args = ap.parse_args(argv)
+    if args.replay:
+        return run_replay(args)
+    return run_demo(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

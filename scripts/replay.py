@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Replay a recorded JSONL event log into per-worker occupancy timelines
+and task-stream summaries (postmortem for any run recorded with
+``events=<path>``).
+
+Usage::
+
+    # record
+    python - <<'PY'
+    from repro.core import run_graph
+    from repro.benchmark.workloads import make_workload   # or any graph
+    run_graph(g, server="selector", runtime="process",
+              events="/tmp/run.jsonl")
+    PY
+
+    # replay
+    python scripts/replay.py /tmp/run.jsonl
+    python scripts/replay.py /tmp/run.jsonl --json     # machine-readable
+    python scripts/replay.py /tmp/run.jsonl --stream 40  # longer tail
+
+Rotated logs (``run.jsonl.1`` …) are stitched back oldest-first
+automatically.  The reconstruction is defined to agree with the
+recording run's ``RunResult.stats``: per-worker finished counts match
+``stats["tasks_per_worker"]``, steal counts match ``stats["n_steals"]``
+and spill/unspill byte sums match ``stats["spill_bytes"]`` /
+``stats["unspill_bytes"]`` — ``scripts/ci_smoke.py`` gates on exactly
+this agreement.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.events import format_summary, load_jsonl, replay  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("log", help="JSONL event log (rotations auto-joined)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full summary dict as JSON")
+    ap.add_argument("--stream", type=int, default=12, metavar="N",
+                    help="task-stream rows shown per worker (default 12)")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.log) \
+            and not os.path.exists(args.log + ".1"):
+        print(f"no such log: {args.log}", file=sys.stderr)
+        return 2
+    events = load_jsonl(args.log)
+    if not events:
+        print(f"empty log: {args.log}", file=sys.stderr)
+        return 2
+    summary = replay(events)
+    if args.json:
+        json.dump(summary, sys.stdout, indent=2, default=repr)
+        print()
+    else:
+        print(format_summary(summary, max_stream_rows=args.stream))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

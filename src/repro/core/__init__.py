@@ -5,6 +5,8 @@ overhead isolation, virtual-time cluster simulation and real-time engines
 transport)."""
 from repro.core.array_reactor import ArrayReactor
 from repro.core.client import Client, Cluster, Future, GraphFutures
+from repro.core.events import (EventBus, JsonlEventLog, load_jsonl,
+                               make_bus, replay)
 from repro.core.graph import GraphBuilder, Task, TaskGraph
 from repro.core.reactor import ObjectReactor
 from repro.core.runtime import ProcessRuntime, RunResult, ThreadRuntime, \

@@ -334,6 +334,12 @@ class Cluster:
     epochs — back-to-back graphs reuse warm workers, so per-run startup
     cost stops polluting overhead measurements (the reason the paper's
     RSDS is a long-lived server in the first place).
+
+    ``Cluster(events=True)`` turns on the structured observability feed
+    (:mod:`repro.core.events`); ``events=<path>`` also records it to a
+    rotating JSONL log.  :attr:`events` exposes the live bus and
+    :meth:`observe` snapshots the server state for dashboards
+    (``scripts/dashboard.py``).
     """
 
     def __init__(self, server: str = "rsds", scheduler: str = "ws",
@@ -414,6 +420,17 @@ class Cluster:
     @property
     def n_tasks(self) -> int:
         return self._next_tid
+
+    @property
+    def events(self):
+        """The live :class:`repro.core.events.EventBus` (None unless the
+        cluster was built with ``events=``)."""
+        return self.runtime.events
+
+    def observe(self) -> dict:
+        """Best-effort live snapshot of the server state (see
+        :meth:`repro.core.server.ServerCore.observe`)."""
+        return self.runtime.observe()
 
     def run_result(self, gf: GraphFutures,
                    timed_out: bool = False) -> RunResult:

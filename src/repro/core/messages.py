@@ -37,6 +37,15 @@ worker's listener, and ``stats`` frames report p2p transfer bytes.  Both
 codecs also meter payload bytes (``take_payload_bytes`` /
 ``take_gather_bytes``) so the server-relay vs p2p split is measured, per
 wire, on the data path itself.
+
+The memory subsystem rides the same frames: workers piggyback a compact
+object-store usage record (the ``repro.core.store.USAGE_FIELDS``
+6-tuple — mem/peak bytes, cumulative spill/unspill bytes and counts) on
+finished-batch and stats frames whenever it changed; the server drains
+it via ``take_usage()`` after decode and folds it into its per-worker
+memory ledgers.  ``compact`` frames broadcast the released-tid prefix
+base so long-lived workers shed task-table and store rows in step with
+the server's compaction.
 """
 from __future__ import annotations
 

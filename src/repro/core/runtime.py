@@ -18,6 +18,14 @@ Dask-vs-rsds comparison is really about):
   ``run_graph(..., server="asyncio")`` / ``Cluster(server="asyncio")`` or
   per-engine via ``ProcessRuntime(driver="asyncio")``, so
   selector-vs-asyncio becomes a measurable axis.
+* :class:`UvloopDriver` — the asyncio server on uvloop's libuv loop
+  (optional dependency), the fourth server-architecture point.
+
+All four drivers publish into the same observability feed
+(:mod:`repro.core.events`, enabled via ``events=`` on either runtime or
+on ``Cluster``) because the instrumentation lives in the shared
+ServerCore; the inproc driver additionally publishes worker-side
+``task-started`` events (thread workers share the server's process).
 
 :class:`ThreadRuntime` and :class:`ProcessRuntime` are thin shells over
 :class:`~repro.core.server.ServerCore` preserving the original public
@@ -824,7 +832,7 @@ class ThreadRuntime(ServerCore):
                  balance_interval: float = 0.05, timeout: float = 300.0,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
-                 compact_threshold: int | None = 8192):
+                 compact_threshold: int | None = 8192, events=None):
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
         # thread workers share the server's ObjectStore, so the memory
@@ -833,7 +841,8 @@ class ThreadRuntime(ServerCore):
                          p2p=False, balance_interval=balance_interval,
                          timeout=timeout, memory_limit=memory_limit,
                          spill_dir=spill_dir, high_water=high_water,
-                         compact_threshold=compact_threshold)
+                         compact_threshold=compact_threshold,
+                         events=events)
         self.transport = tp.InprocTransport(n_workers)
         self.driver.transport = self.transport
         self.queued: dict[int, list[int]] = {}
@@ -869,6 +878,9 @@ class ThreadRuntime(ServerCore):
                     # delay the next epoch
                     continue
                 self.running[wid] = tid
+            ev = self.events
+            if ev is not None:
+                ev.publish("task-started", tid=tid, wid=wid)
             if not self.zero_worker:
                 t = self.g.task(tid)
                 if t.fn is not None:
@@ -902,7 +914,7 @@ class ProcessRuntime(ServerCore):
                  driver: str = "selector",
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
-                 compact_threshold: int | None = 8192):
+                 compact_threshold: int | None = 8192, events=None):
         if getattr(reactor, "simulate_codec", False):
             raise ValueError(
                 "ProcessRuntime needs a reactor with simulate_codec=False: "
@@ -923,7 +935,8 @@ class ProcessRuntime(ServerCore):
                          balance_interval=balance_interval,
                          timeout=timeout, memory_limit=memory_limit,
                          spill_dir=spill_dir, high_water=high_water,
-                         compact_threshold=compact_threshold)
+                         compact_threshold=compact_threshold,
+                         events=events)
         # p2p: dependency values move worker-to-worker over who_has hints
         # + direct fetch (Dask/RSDS-faithful data plane); off = every
         # payload rides compute/finished frames through the server
@@ -972,6 +985,12 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     ``spill_dir`` (private temp dirs by default) and unspills on
     access; ``high_water`` (fraction of the limit) marks workers as
     under memory pressure for hinting/stealing decisions.
+
+    Observability (both runtimes): ``events=True`` turns on the
+    structured event feed (:mod:`repro.core.events`), ``events=<path>``
+    additionally records it to a rotating JSONL log replayable with
+    ``scripts/replay.py``; ``RunResult.stats["n_events"]`` reports the
+    publish count.  Off (the default) costs nothing.
 
     Back-compat wrapper over the persistent Cluster/Client API: spins a
     one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a

@@ -12,12 +12,13 @@ different server architectures.  This module is that split:
   or process: all I/O goes through an abstract :class:`Driver`.
 * :class:`Driver` — how bytes move and workers live: poll for events,
   deliver compute/control messages, spawn/kill workers, account worker
-  queues.  Three implementations live in :mod:`repro.core.runtime`:
+  queues.  Four implementations live in :mod:`repro.core.runtime`:
   ``InprocDriver`` (thread workers over object queues), ``SelectorDriver``
-  (OS-process workers behind a blocking-selector loop — Dask's shape) and
-  ``AsyncioDriver`` (the same workers served by an asyncio event loop),
-  so the server-architecture axis is selectable per run while every
-  driver consults this one state machine.
+  (OS-process workers behind a blocking-selector loop — Dask's shape),
+  ``AsyncioDriver`` (the same workers served by an asyncio event loop)
+  and ``UvloopDriver`` (asyncio on a uvloop policy when installed), so
+  the server-architecture axis is selectable per run while every driver
+  consults this one state machine.
 
 Drivers hand the core *normalized events*:
 
@@ -38,9 +39,19 @@ The memory subsystem lives here on the control-plane side: every task
 result — server-side and worker-side — sits in a
 :class:`repro.core.store.ObjectStore` (byte-accounted LRU with
 spill-to-disk), workers piggyback usage records on finished/stats
-frames, and the core keeps per-worker memory ledgers that feed dispatch
-hinting (prefer pressure-free holders) and the schedulers' steal-target
-choice (never steal onto a worker above the high-water mark).
+frames (``repro.core.store.USAGE_FIELDS`` 6-tuples), and the core keeps
+per-worker memory ledgers that feed dispatch hinting (prefer
+pressure-free holders) and the schedulers' steal-target choice (never
+steal onto a worker above the high-water mark).
+
+Observability rides the same single-state-machine design: with
+``events=`` set, the core publishes a typed event
+(:mod:`repro.core.events`) at every point the state machine mutates —
+dispatch, finish, steal, rehint, worker loss, memory pressure, spill,
+epoch open/close, gather, release, compaction — so one instrumentation
+pass covers all four drivers.  The default (``events=None``) keeps the
+hot path untouched: every publish site is a single ``is None`` check.
+:meth:`ServerCore.observe` snapshots the live state for dashboards.
 """
 from __future__ import annotations
 
@@ -51,6 +62,7 @@ import threading
 import time
 from typing import Any
 
+from repro.core.events import make_bus
 from repro.core.graph import Task, TaskGraph
 from repro.core.store import ObjectStore
 
@@ -285,7 +297,8 @@ class ServerCore:
                  balance_interval: float = 0.05, timeout: float = 300.0,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
-                 compact_threshold: int | None = 8192):
+                 compact_threshold: int | None = 8192,
+                 events=None):
         self.g = graph
         self.reactor = reactor
         self.n_workers = n_workers
@@ -304,6 +317,20 @@ class ServerCore:
         limit_here = None if driver.remote_results else memory_limit
         self.results: ObjectStore = ObjectStore(
             memory_limit=limit_here, spill_dir=spill_dir, name="server")
+        # observability: None (the default) keeps every publish site at
+        # one attribute check — see repro.core.events
+        self.events = make_bus(events)
+        if self.events is not None and not driver.remote_results:
+            # in-process drivers share this one store with their
+            # workers: stream its spill/unspill transitions directly
+            # (wid=-1 = the node-level shared store).  Remote drivers
+            # derive the same events from piggybacked usage deltas.
+            bus = self.events
+            self.results.event_cb = (
+                lambda kind, tid, nb: bus.publish(kind, wid=-1,
+                                                  nbytes=nb, tid=tid))
+        self._finished_by_worker: dict[int, int] = {}
+        self.n_steals = 0
         # per-worker memory ledgers (fed by piggybacked usage records)
         self.worker_mem: dict[int, int] = {}
         self.mem_pressured: set[int] = set()
@@ -396,6 +423,10 @@ class ServerCore:
         e.spill_bytes0, e.unspill_bytes0 = self._spill_totals()
         self._range_los.append(lo)
         self._range_epochs.append(e)
+        ev = self.events
+        if ev is not None:
+            ev.publish("epoch-open", eid=e.eid, n_tasks=e.n_tasks,
+                       lo=lo, hi=hi)
         if e.remaining == 0:
             self._finish_epoch(e)
 
@@ -409,6 +440,10 @@ class ServerCore:
         e.relay_bytes1 = self.relay_bytes
         e.p2p_bytes1 = self.p2p_bytes
         e.spill_bytes1, e.unspill_bytes1 = self._spill_totals()
+        ev = self.events
+        if ev is not None:
+            ev.publish("epoch-close", eid=e.eid,
+                       error=repr(e.error) if e.error else None)
         e.done_evt.set()
 
     def _fail_epoch(self, e: EpochStats, error: BaseException) -> None:
@@ -560,6 +595,9 @@ class ServerCore:
 
     def _do_release(self, tids) -> None:
         released = self._charge(self.reactor.release_keys, tids)
+        ev = self.events
+        if ev is not None and released:
+            ev.publish("release", n=len(released))
         for tid in released:
             self.results.discard(tid)
         # drain the reclaim log (it contains ``released``) so the same
@@ -636,13 +674,21 @@ class ServerCore:
             st["wid"] = wid
             st["tried"].add(wid)
             by_wid.setdefault(wid, []).append(tid)
+        ev = self.events
         for wid, ts in by_wid.items():
+            if ev is not None:
+                ev.publish("gather", wid=wid, n=len(ts))
             self.driver.send_gather(wid, ts)
 
     def _on_gather_reply(self, wid: int, absent, payloads) -> None:
         """Gather replies are explicit frames — they never re-enter the
         finished path, so completion/epoch accounting cannot be double
         counted by a re-sent result."""
+        ev = self.events
+        if ev is not None:
+            ev.publish("gather-reply", wid=wid,
+                       n_present=len(payloads) if payloads else 0,
+                       n_absent=len(absent) if absent else 0)
         if payloads:
             self.results.update(payloads)
             for tid in payloads:
@@ -665,6 +711,18 @@ class ServerCore:
         if wid in self.dead:
             return
         mem, peak, sb, ub, sc, uc = (int(x) for x in usage)
+        ev = self.events
+        if ev is not None and self.driver.remote_results:
+            # usage records are cumulative per worker: publish the
+            # deltas, so summing spill/unspill events over a replayed
+            # log reproduces _spill_totals() exactly (the ledgers are
+            # retained for dead workers for the same reason)
+            d_sb = sb - self._w_spill_b.get(wid, 0)
+            d_ub = ub - self._w_unspill_b.get(wid, 0)
+            if d_sb > 0:
+                ev.publish("spill", wid=wid, nbytes=d_sb)
+            if d_ub > 0:
+                ev.publish("unspill", wid=wid, nbytes=d_ub)
         self.worker_mem[wid] = mem
         # the worker reports its own store-tracked peak, so transient
         # put-then-evict spikes between flushes are not lost
@@ -682,6 +740,9 @@ class ServerCore:
                 self.mem_pressured.add(wid)
             else:
                 self.mem_pressured.discard(wid)
+            if ev is not None:
+                ev.publish("worker-pressure", wid=wid,
+                           pressured=pressured, mem_bytes=mem)
             self._charge(self.reactor.handle_memory_pressure, wid,
                          pressured)
 
@@ -753,6 +814,12 @@ class ServerCore:
     def _send_compute(self, wid: int, items,
                       tried: dict[int, set] | None = None) -> None:
         data, deps, hints = self._compute_extras(wid, items, tried)
+        ev = self.events
+        if ev is not None:
+            # published BEFORE the send so an inproc worker's
+            # task-started always carries a later seq than its dispatch
+            for tid, _ in items:
+                ev.publish("task-dispatched", tid=int(tid), wid=wid)
         self.driver.send_compute(wid, items, data, deps, hints)
 
     def _dispatch(self, assignments) -> None:
@@ -764,6 +831,7 @@ class ServerCore:
             base = self.g.tid_base
             rerouted: list = []
             by_wid: dict[int, list] = {}
+            ev = self.events
             for tid, wid in pending:
                 if wid in self.dead \
                         or not self.driver.queue_push(wid, int(tid)):
@@ -771,6 +839,8 @@ class ServerCore:
                                        wid, [tid])
                     rerouted.extend(out)
                     continue
+                if ev is not None:
+                    ev.publish("task-queued", tid=int(tid), wid=wid)
                 by_wid.setdefault(wid, []).append(
                     (int(tid), float(durations[tid - base])))
             for wid, items in by_wid.items():
@@ -783,6 +853,10 @@ class ServerCore:
         server relay) once the deps are materialized again."""
         if wid in self.dead or tid in self.results:
             return
+        ev = self.events
+        if ev is not None:
+            ev.publish("fetch-failed", tid=int(tid), wid=wid,
+                       n_missing=len(missing))
         st = self._parked.setdefault(
             int(tid), {"wid": wid, "missing": set(), "tried": {}})
         st["wid"] = wid
@@ -855,6 +929,9 @@ class ServerCore:
             self.driver.send_retract(ow, [tid])
             self._send_compute(ow, [(tid, self.g.dur_of(tid))])
             self.n_rehints += 1
+            ev = self.events
+            if ev is not None:
+                ev.publish("task-rehint", tid=tid, wid=ow)
 
     # ------------------------------------------------------------------
     # protocol: worker loss and stealing
@@ -865,6 +942,11 @@ class ServerCore:
         if first:
             self._lost_handled.add(wid)
             self.dead.add(wid)
+            ev = self.events
+            if ev is not None:
+                # n_lost=-1: queue snapshot reclaimed below / by caller
+                ev.publish("worker-lost", wid=wid,
+                           n_lost=len(lost) if lost is not None else -1)
             self.driver.drop(wid)
             self._data_addrs.pop(wid, None)
             self.worker_mem.pop(wid, None)
@@ -906,6 +988,13 @@ class ServerCore:
         real_moves, failed = self.driver.retract_moves(moves)
         for tid in failed:
             self.reactor.steal_failed(tid)
+        self.n_steals += len(real_moves)
+        ev = self.events
+        if ev is not None:
+            for tid, wid in real_moves:
+                ev.publish("task-steal", tid=int(tid), wid=wid)
+            for tid in failed:
+                ev.publish("steal-failed", tid=int(tid))
         self._dispatch(real_moves)
         return real_moves
 
@@ -922,6 +1011,10 @@ class ServerCore:
 
     def _bootstrap(self) -> None:
         self.driver.connect()
+        ev = self.events
+        if ev is not None:
+            for wid in range(self.n_workers):
+                ev.publish("worker-join", wid=wid)
         if self._run_to_done:
             self._t_deadline = time.perf_counter() + self.timeout
         init = self._charge(self.reactor.start)
@@ -1014,6 +1107,14 @@ class ServerCore:
             self._do_balance()
 
     def _handle_finished(self, finished) -> None:
+        ev = self.events
+        for tid, wid in finished:
+            # same site as the per-worker counter so replayed event
+            # streams agree with RunResult.stats["tasks_per_worker"]
+            self._finished_by_worker[wid] = \
+                self._finished_by_worker.get(wid, 0) + 1
+            if ev is not None:
+                ev.publish("task-finished", tid=tid, wid=wid)
         out = self._charge(self.reactor.handle_finished, finished)
         if self.p2p and self.driver.remote_results:
             # a finished fn-task implies its worker now holds all of its
@@ -1095,6 +1196,9 @@ class ServerCore:
         # otherwise keep every (fn, args) ever shipped via update-graph
         self.driver.broadcast_compact(new_base)
         self.n_compactions += 1
+        ev = self.events
+        if ev is not None:
+            ev.publish("compact", base=new_base)
 
     # -- one-shot result collection (p2p: results live worker-side) ----
 
@@ -1162,6 +1266,8 @@ class ServerCore:
             if self._server.is_alive():
                 force = True
         self.driver.teardown(force=force)
+        if self.events is not None:
+            self.events.close()     # flush sinks; ring stays readable
 
     def run(self) -> RunResult:
         """One-shot run over the pre-loaded graph: start -> one epoch ->
@@ -1175,6 +1281,8 @@ class ServerCore:
         makespan = time.perf_counter() - t_start
         # a timed-out run force-kills: no zombie worker processes
         self.driver.teardown(force=self._timed_out)
+        if self.events is not None:
+            self.events.close()
         # materialize to a plain dict (unspilling anything the bounded
         # store pushed to disk): the legacy one-shot surface is eager
         return RunResult(makespan=makespan, n_tasks=self.g.n_tasks,
@@ -1186,11 +1294,56 @@ class ServerCore:
 
     def run_stats(self) -> dict:
         """Reactor stats plus the driver's wire/codec meters plus the
-        memory subsystem's meters."""
+        memory subsystem's meters plus the observability counters (see
+        ``docs/meters.md`` for the authoritative key table)."""
         stats = self.reactor.stats.as_dict()
         stats.update(self.driver.stats_extra())
         stats.update(self.memory_stats())
+        stats["n_steals"] = self.n_steals
+        stats["n_rehints"] = self.n_rehints
+        stats["tasks_per_worker"] = dict(self._finished_by_worker)
+        stats["n_events"] = (self.events.n_published
+                             if self.events is not None else 0)
         return stats
+
+    def observe(self) -> dict:
+        """Best-effort live snapshot for dashboards (no lock on the
+        server loop: counters are read racily, which is fine for a
+        display refreshed a few times per second).  Works with or
+        without an event bus."""
+        try:
+            queues = {int(w): len(ts) for w, ts in
+                      self.driver.queue_snapshot().items()}
+        except Exception:
+            queues = {}     # driver mid-teardown / snapshot racing
+        with self._epoch_lock:
+            epochs = list(self._epochs)
+        open_eids = [e.eid for e in epochs if not e.done_evt.is_set()]
+        spill_b, unspill_b = self._spill_totals()
+        ev = self.events
+        return {
+            "t": time.perf_counter(),
+            "driver": self.driver.name,
+            "n_workers": self.n_workers,
+            "dead": sorted(self.dead),
+            "queues": queues,
+            "tasks_per_worker": dict(self._finished_by_worker),
+            "n_finished": sum(self._finished_by_worker.values()),
+            "n_steals": self.n_steals,
+            "n_rehints": self.n_rehints,
+            "worker_mem": dict(self.worker_mem),
+            "mem_pressured": sorted(self.mem_pressured),
+            "memory_limit": self.memory_limit,
+            "spill_bytes": spill_b,
+            "unspill_bytes": unspill_b,
+            "server_busy": self.server_busy,
+            "n_epochs": len(epochs),
+            "open_epochs": open_eids,
+            "tid_base": self.g.tid_base,
+            "n_events": ev.n_published if ev is not None else 0,
+            "event_counts": dict(ev.counts) if ev is not None else {},
+            "last_events": ev.tail(20) if ev is not None else [],
+        }
 
     def memory_stats(self) -> dict:
         """Aggregated object-store meters.  In-process drivers read the

@@ -17,9 +17,17 @@ Dask-style frameworks scale past RAM; this module is that subsystem.
   transparently *unspilled* on access, so readers never see the tiers.
 * **meters** — ``mem_bytes``/``peak_bytes`` (in-memory tier),
   ``spill_bytes``/``unspill_bytes`` (cumulative bytes written/read
-  back), ``spill_count``/``unspill_count`` and ``disk_bytes`` — the
-  numbers the server aggregates into per-worker memory ledgers and
-  surfaces on ``RunResult.stats`` / ``EpochStats``.
+  back), ``spill_count``/``unspill_count`` and ``disk_bytes``.  Workers
+  snapshot these as a 6-tuple :meth:`ObjectStore.usage` record (layout:
+  :data:`USAGE_FIELDS`) piggybacked on finished/stats wire frames; the
+  server folds those into per-worker memory ledgers and surfaces the
+  aggregates on ``RunResult.stats`` / ``EpochStats`` (see
+  ``docs/meters.md``).
+* **event hook** — setting :attr:`ObjectStore.event_cb` to a callable
+  ``(kind, tid, nbytes)`` streams every ``"spill"``/``"unspill"``
+  transition into the observability feed (``repro.core.events``); the
+  default ``None`` costs one attribute check per transition, not per
+  operation.
 
 The store is a :class:`collections.abc.MutableMapping`, so it drops into
 every place a raw result dict used to live (worker caches, the server's
@@ -136,6 +144,9 @@ class ObjectStore(collections.abc.MutableMapping):
         self.unspill_count = 0
         # keys whose value could not be pickled: pinned in memory
         self._pinned: set[int] = set()
+        # optional observability hook: callable (kind, tid, nbytes),
+        # invoked under self._lock on every spill/unspill transition
+        self.event_cb = None
 
     # ------------------------------------------------------------------
     # spill machinery (callers hold self._lock)
@@ -180,6 +191,8 @@ class ObjectStore(collections.abc.MutableMapping):
         self.disk_bytes += len(blob)
         self.spill_bytes += len(blob)
         self.spill_count += 1
+        if self.event_cb is not None:
+            self.event_cb("spill", victim, len(blob))
         return True
 
     def _shrink(self) -> None:
@@ -214,6 +227,8 @@ class ObjectStore(collections.abc.MutableMapping):
         self.disk_bytes -= nbytes
         self.unspill_bytes += nbytes
         self.unspill_count += 1
+        if self.event_cb is not None:
+            self.event_cb("unspill", tid, nbytes)
         est = sizeof(value)
         self._mem[tid] = (value, est)
         self._mem_add(est)
@@ -324,6 +339,8 @@ class ObjectStore(collections.abc.MutableMapping):
                         pass
                 self.unspill_bytes += nbytes
                 self.unspill_count += 1
+                if self.event_cb is not None:
+                    self.event_cb("unspill", tid, nbytes)
                 return value
         if default:
             return default[0]

@@ -14,10 +14,18 @@ boundary was simulated.  This module makes it pluggable:
   with any start method (workers connect by address).
 * :class:`AsyncioTransport` — the same byte channels (pipe or socket)
   wrapped in **asyncio** StreamReader/StreamWriter endpoints for the
-  asyncio server driver: per-worker reader coroutines feed one event
-  queue, sends buffer on StreamWriters and drain in batches.  Workers
-  stay on the blocking endpoints — the server architecture is the only
-  variable, which is exactly the axis the paper measures.
+  asyncio (and uvloop) server drivers: per-worker reader coroutines
+  feed one event queue, sends buffer on StreamWriters and drain in
+  batches.  Workers stay on the blocking endpoints — the server
+  architecture is the only variable, which is exactly the axis the
+  paper measures.
+
+The worker↔worker **data plane** (p2p PR) also lives here:
+:class:`DataPlaneListener` serves a worker's stored values to peers
+from a background accept loop, and :class:`PeerChannel` is the caller
+side — one persistent connection per (fetcher, holder) pair carrying
+length-prefixed fetch/fetch-reply frames, so dependency payloads move
+directly between workers instead of relaying through the server.
 
 Server sides of the selector transports are *selector-driven and
 never block on send*: outbound frames go through a non-blocking buffered

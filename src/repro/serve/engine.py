@@ -12,7 +12,14 @@ The compute itself rides the persistent Cluster/Client futures API: the
 engine owns one warm single-executor :class:`repro.core.client.Cluster`
 and submits every prefill and batched decode step to it, so back-to-back
 steps (and back-to-back requests) reuse the warm pool — the same
-long-lived-server shape the paper's RSDS exposes to Dask clients.
+long-lived-server shape the paper's RSDS exposes to Dask clients.  The
+pool is byte-bounded (``memory_limit``) like every other Cluster in the
+repo, and with ``events=`` the engine publishes per-request
+``request-enter``/``request-admit``/``request-exit`` events — keyed by
+a caller-supplied ``tenant`` — into the same structured feed the
+runtime's control-plane events ride (:mod:`repro.core.events`), so a
+serving deployment's request streams are visible per tenant next to the
+task stream serving them.
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ class Request:
         default_factory=threading.Event)
     submit_t: float = 0.0
     finish_t: float = 0.0
+    tenant: str = "default"       # event-stream key (multi-tenant views)
 
 
 def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
@@ -51,9 +59,18 @@ def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
     return ((n + 1023) // 1024) * 1024
 
 
+#: default byte bound on the serving pool's object store.  Engine
+#: results are transient (every future is released after one read), so
+#: a modest bound keeps a long-lived engine's footprint flat without
+#: ever spilling in practice.
+DEFAULT_MEMORY_LIMIT = 256 * 2**20
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256,
+                 memory_limit: int | None = DEFAULT_MEMORY_LIMIT,
+                 events=None):
         assert not cfg.vision_dim, "engine example supports pure-LM archs"
         self.cfg = cfg
         self.params = params
@@ -80,11 +97,25 @@ class ServingEngine:
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
         # warm single-executor pool: every prefill/decode is a client
-        # submission, reused across steps and requests
+        # submission, reused across steps and requests.  memory_limit
+        # bounds its store like every other Cluster (ROADMAP PR-5
+        # follow-up); events= threads the request stream into the same
+        # observability feed the runtime's control plane publishes to
         self._cluster = Cluster(server="rsds", scheduler="ws",
                                 n_workers=1, runtime="thread",
-                                name="serving")
+                                name="serving", memory_limit=memory_limit,
+                                events=events)
         self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    @property
+    def events(self):
+        """The engine's event bus (None unless built with ``events=``)."""
+        return self._cluster.events
+
+    def observe(self) -> dict:
+        """Live snapshot of the pool serving this engine (see
+        :meth:`repro.core.server.ServerCore.observe`)."""
+        return self._cluster.observe()
 
     def _call(self, fn, *args):
         """Run one compute on the warm pool and free its key."""
@@ -103,10 +134,14 @@ class ServingEngine:
         self._cluster.close()
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: int = -1) -> Request:
+               eos_id: int = -1, tenant: str = "default") -> Request:
         self._rid += 1
         req = Request(self._rid, np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id, submit_t=time.perf_counter())
+                      max_new_tokens, eos_id,
+                      submit_t=time.perf_counter(), tenant=tenant)
+        ev = self._cluster.events
+        if ev is not None:
+            ev.publish("request-enter", rid=req.rid, tenant=tenant)
         self.inbox.put(req)
         return req
 
@@ -141,6 +176,10 @@ class ServingEngine:
             self.pos[slot] = s - 1
             self._next_in[slot] = int(req.prompt[-1])
             self.active[slot] = req
+            ev = self._cluster.events
+            if ev is not None:
+                ev.publish("request-admit", rid=req.rid,
+                           tenant=req.tenant, slot=slot)
 
     def _loop(self) -> None:
         while not self._stop.is_set():
@@ -168,5 +207,11 @@ class ServingEngine:
                         or self.pos[i] >= self.max_len - 1)
                 if done:
                     req.finish_t = time.perf_counter()
+                    ev = self._cluster.events
+                    if ev is not None:
+                        ev.publish("request-exit", rid=req.rid,
+                                   tenant=req.tenant,
+                                   n_tokens=len(req.out_tokens),
+                                   latency_s=req.finish_t - req.submit_t)
                     req.done.set()
                     self.active[i] = None

@@ -140,15 +140,25 @@ class MicrobatchCoordinator:
     a ROADMAP item.
     """
 
+    #: default byte bound on the coordinator's pool (ROADMAP PR-5
+    #: follow-up: trainer/serving pools are bounded like everyone
+    #: else's).  Microbatch tasks return small ints (gradients ride the
+    #: closure), so the bound is slack in practice.
+    DEFAULT_MEMORY_LIMIT = 256 * 2**20
+
     def __init__(self, cfg: ModelConfig, *, n_executors: int = 4,
                  n_microbatches: int = 8, scheduler: str = "rsds_ws",
                  slow_workers: dict[int, float] | None = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 memory_limit: int | None = DEFAULT_MEMORY_LIMIT,
+                 events=None):
         self.cfg = cfg
         self.n_executors = n_executors
         self.n_micro = n_microbatches
         self.scheduler_name = scheduler
         self.slow = slow_workers or {}
+        self.memory_limit = memory_limit
+        self._events = events
         self.opt = make_optimizer(cfg.optimizer)
         key = jax.random.PRNGKey(seed)
         self.params = model_lib.init_params(key, cfg)
@@ -172,7 +182,9 @@ class MicrobatchCoordinator:
         c = Cluster(server=server, scheduler=sched,
                     n_workers=self.n_executors, runtime="thread",
                     name="microbatch", balance_interval=0.002,
-                    timeout=120.0, autostart=False)
+                    timeout=120.0, autostart=False,
+                    memory_limit=self.memory_limit,
+                    events=self._events)
         rt = c.runtime
         if self.slow:
             orig = rt._worker_loop
@@ -264,6 +276,10 @@ class MicrobatchCoordinator:
         loss = futs.raw_results().get(self.n_micro) if ok else None
         futs.release()   # per-step values are consumed; free the keys
         self.step += 1
+        ev = cluster.events
+        if ev is not None:
+            ev.publish("train-step", step=self.step,
+                       makespan=epoch.makespan)
         return {"step": self.step, "loss": loss,
                 "makespan": epoch.makespan, "timed_out": not ok,
                 "server_busy": epoch.server_busy}
