@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Run the repro.analysis invariant checker from a checkout, without
+needing PYTHONPATH set up first:
+
+    python scripts/check_invariants.py [--format text|json] [--rules …]
+
+Exits nonzero on any finding — suitable as a pre-commit or CI gate.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,8 @@ back-to-back epochs on each runtime, data-plane relay/p2p byte-split
 checks, a memory-pressure spill case (tiny memory_limit must force
 object-store spill with bit-correct results), and an observability
 case (record a JSONL event log, replay it, require agreement with
-RunResult.stats), each under a short
+RunResult.stats), and a static-analysis case (`python -m
+repro.analysis` must report zero invariant findings), each under a short
 watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
 seconds instead of waiting out the 300 s benchmark timeout.
 
@@ -125,8 +126,38 @@ def _events_case(server: str):
     return r
 
 
+def _analysis_case():
+    """The static invariant checker must report zero findings — run in
+    a subprocess (same interpreter, repo root as --root) so the smoke
+    pass also exercises the `python -m repro.analysis` entry point CI's
+    analysis job uses."""
+    import json
+    import os
+    import subprocess
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format", "json",
+         "--root", repo],
+        capture_output=True, text=True, timeout=WATCHDOG_S,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(repo, "src")})
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"invariant checker exit {proc.returncode}:\n"
+            f"{proc.stdout}{proc.stderr}")
+    blob = json.loads(proc.stdout)
+    r = types.SimpleNamespace(timed_out=False,
+                              n_tasks=len(blob["rules"]))
+    r.detail = (f"findings={blob['n_findings']} "
+                f"allowlisted={blob['n_suppressed']}")
+    return r
+
+
 def _cases():
     from repro.core import benchgraphs, run_graph, simulate
+
+    yield ("analysis/invariants", _analysis_case)
 
     graphs = [benchgraphs.merge(60), benchgraphs.tree(5)]
     for g in graphs:

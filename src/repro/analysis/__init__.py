@@ -1,0 +1,23 @@
+"""repro.analysis — AST-based invariant checker for the runtime.
+
+Five hand-maintained invariant surfaces, five rules (see
+``docs/analysis.md`` for the catalog):
+
+* **RA1** wire-codec conformance (``core/messages.py``)
+* **RA2** event-schema conformance (``EVENT_TYPES`` vs publish sites
+  vs ``docs/events.md``)
+* **RA3** meter drift (stats surfaces vs ``docs/meters.md``)
+* **RA4** blocking calls inside ``async def`` bodies
+* **RA5** lock discipline (``ObjectStore`` / ``ServerCore`` state)
+
+Pure stdlib + source parsing: the checker never imports the modules it
+lints, so it runs in a bare interpreter and in CI before dependencies
+are installed.  Entry points: ``python -m repro.analysis`` or
+``scripts/check_invariants.py``; programmatic use via
+:func:`repro.analysis.engine.run_rules`.
+"""
+from repro.analysis.engine import (DEFAULT_ALLOWLIST, Finding, rule_ids,
+                                   rule_titles, run_rules)
+
+__all__ = ["DEFAULT_ALLOWLIST", "Finding", "rule_ids", "rule_titles",
+           "run_rules"]

@@ -307,6 +307,8 @@ class DaskWire(_ByteCounters):
                 payloads
         if op == OP_RETRACT:
             return op, list(m["keys"]), None
+        if op == OP_SHUTDOWN:
+            return op, [], None
         if op == OP_UPDATE_GRAPH:
             payloads = None
             if "fn" in m:
@@ -510,6 +512,8 @@ class StaticWire(_ByteCounters):
             recs = [rec.unpack_from(raw, off + i * rec.size)[0]
                     for i in range(count)]
             off += count * rec.size
+        elif op == OP_SHUTDOWN:
+            recs = []           # a bare header: no records, no payload
         else:
             recs = []
         payloads = pickle.loads(raw[off:]) if has_blob else None

@@ -327,6 +327,7 @@ class ServerCore:
             # derive the same events from piggybacked usage deltas.
             bus = self.events
             self.results.event_cb = (
+                # ra: event-types spill,unspill
                 lambda kind, tid, nb: bus.publish(kind, wid=-1,
                                                   nbytes=nb, tid=tid))
         self._finished_by_worker: dict[int, int] = {}
@@ -550,17 +551,21 @@ class ServerCore:
         if not missing:
             return True
         # stale failure markers from an earlier fetch must not fail this
-        # one before the server even processes it (the fresh gather
-        # resets the tried-holder memory server-side)
-        self._gather_failed.difference_update(missing)
-        self._submit_q.put(("gather", missing))
+        # one before the server even processes it.  The loop's fresh
+        # _do_gather discards them; until it has run (ack set) the
+        # markers are ignored here rather than cleared from this thread
+        # (_gather_failed is loop-owned — a client-side clear races the
+        # loop's rebind of the set during tid compaction)
+        ack = threading.Event()
+        self._submit_q.put(("gather", missing, ack))
         self.driver.wake()
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
             if all(t in self.results for t in missing):
                 return True
-            if any(t in self._gather_failed and t not in self.results
-                   for t in missing):
+            if ack.is_set() and \
+                    any(t in self._gather_failed and t not in self.results
+                        for t in missing):
                 return False
             if self._loop_exited.is_set():
                 break
@@ -1063,6 +1068,7 @@ class ServerCore:
                 self._do_release(item[1])
             elif kind == "gather":
                 self._do_gather(item[1])
+                item[2].set()   # fetch() may now trust failure markers
             elif kind == "stop":
                 self._stop_requested = True
         self.driver.drain_kills()

@@ -459,13 +459,15 @@ class AsyncioTransport:
                 rfd = self._w2s[wid][0]
                 wfd = self._s2w[wid][1]
                 reader = asyncio.StreamReader()
+                # one-time loop setup: fdopen only wraps the already-
+                # open pipe fds (no I/O), it never runs per-frame
                 rtr, _ = await loop.connect_read_pipe(
                     lambda r=reader: asyncio.StreamReaderProtocol(r),
-                    os.fdopen(rfd, "rb", 0))
+                    os.fdopen(rfd, "rb", 0))   # ra: allow-blocking
                 self._rtransports[wid] = rtr
                 wt, wp = await loop.connect_write_pipe(
                     asyncio.streams.FlowControlMixin,
-                    os.fdopen(wfd, "wb", 0))
+                    os.fdopen(wfd, "wb", 0))   # ra: allow-blocking
                 writer = asyncio.StreamWriter(wt, wp, None, loop)
                 self._register(wid, reader, writer)
         else:

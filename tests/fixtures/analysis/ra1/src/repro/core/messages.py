@@ -1,0 +1,67 @@
+"""RA1 fixture: a mini wire layer with seeded codec drift.
+
+Seeded violations (EXPECT markers drive tests/test_analysis.py):
+
+* ``OP_PONG``   — worker->server but never normalized by frame_event;
+* ``OP_DROP``   — no encoder in StaticWire, no decode branch in DaskWire;
+* ``OP_MYSTERY``— no machine-readable direction comment at all.
+
+``OP_PING`` is fully conformant and must NOT be flagged.
+"""
+
+OP_PING = 1     # server -> worker: liveness probe
+OP_PONG = 2     # worker -> server: liveness reply       EXPECT:RA1
+OP_DROP = 3     # server -> worker: drop cached keys     EXPECT:RA1
+OP_MYSTERY = 4  # (direction comment deliberately absent) EXPECT:RA1
+
+
+class DaskWire:
+    def encode_ping(self):
+        return [("op", OP_PING)]
+
+    def encode_pong(self):
+        return [("op", OP_PONG)]
+
+    def encode_drop(self):
+        return [("op", OP_DROP)]
+
+    def encode_mystery(self):
+        return [("op", OP_MYSTERY)]
+
+    def decode(self, raw):
+        op = raw[0]
+        if op == OP_PING:
+            return op, [], None
+        if op == OP_PONG:
+            return op, [], None
+        # OP_DROP deliberately has no decode branch here.
+        if op == OP_MYSTERY:
+            return op, [], None
+        return op, [], None
+
+
+class StaticWire:
+    def encode_ping(self):
+        return [("op", OP_PING)]
+
+    def encode_pong(self):
+        return [("op", OP_PONG)]
+
+    # encode_drop deliberately missing.
+
+    def encode_mystery(self):
+        return [("op", OP_MYSTERY)]
+
+    def decode(self, raw):
+        op = raw[0]
+        if op in (OP_PING, OP_PONG, OP_DROP, OP_MYSTERY):
+            return op, [], None
+        return op, [], None
+
+
+def frame_event(op, wid, recs, payload):
+    # Normalizes OP_PING (which is server->worker, so irrelevant) but
+    # not OP_PONG — the one worker->server op that must appear here.
+    if op == OP_PING:
+        return ("ping", wid)
+    return None

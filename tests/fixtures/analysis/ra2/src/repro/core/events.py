@@ -1,0 +1,8 @@
+"""RA2 fixture: a mini event vocabulary with seeded drift."""
+
+EVENT_TYPES: dict[str, tuple[str, ...]] = {
+    "alpha": ("x", "y"),
+    "beta": ("n",),
+    "never-used": ("z",),       # EXPECT:RA2 (declared, never published)
+    "undoc": ("q",),            # EXPECT:RA2 (missing from docs table)
+}

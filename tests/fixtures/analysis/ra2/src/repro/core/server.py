@@ -1,0 +1,12 @@
+"""RA2 fixture: publish sites, four of them wrong."""
+
+
+class MiniServer:
+    def emit(self, bus, kind):
+        bus.publish("alpha", x=1, y=2)          # conformant
+        bus.publish("alpha", x=1)               # EXPECT:RA2 (missing y)
+        bus.publish("beta", n=1, extra=2)       # EXPECT:RA2 (extra field)
+        bus.publish("ghost", a=1)               # EXPECT:RA2 (unknown type)
+        bus.publish(kind, x=1, y=2)             # EXPECT:RA2 (no pragma)
+        bus.publish(kind, n=1)                  # ra: event-types beta
+        bus.publish("undoc", q=1)               # conformant vs code

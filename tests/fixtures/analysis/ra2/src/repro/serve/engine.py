@@ -1,0 +1,1 @@
+"""RA2 fixture stub: scanned, publishes nothing."""

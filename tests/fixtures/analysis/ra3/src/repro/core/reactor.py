@@ -1,0 +1,9 @@
+"""RA3 fixture: reactor layer contributing one undocumented meter."""
+
+
+class ReactorStats:
+    def as_dict(self):
+        return {
+            "msgs_in": 0,
+            "mystery_meter": 1,     # EXPECT:RA3 (not in docs)
+        }

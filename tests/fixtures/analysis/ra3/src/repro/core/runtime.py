@@ -1,0 +1,6 @@
+"""RA3 fixture: driver layer, fully documented (negative case)."""
+
+
+class _ProcessDriver:
+    def stats_extra(self):
+        return dict(wire_bytes=0)

@@ -1,0 +1,30 @@
+"""RA3 fixture: the three server-side meter surfaces, each drifting."""
+
+
+class EpochStats:
+    def as_dict(self):
+        return {
+            "eid": 0,
+            "secret": 1,            # EXPECT:RA3 (not in docs)
+        }
+
+
+class RunResult:
+    makespan: float
+
+
+class ServerCore:
+    def memory_stats(self):
+        return {"memory_limit": None}
+
+    def run_stats(self):
+        stats = {}
+        stats["n_steals"] = 0
+        stats["undocumented_stat"] = 1      # EXPECT:RA3 (not in docs)
+        return stats
+
+    def observe(self):
+        return {
+            "t": 0.0,
+            "rogue": 1,             # EXPECT:RA3 (not in docs)
+        }

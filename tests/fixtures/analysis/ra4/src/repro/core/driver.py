@@ -1,0 +1,27 @@
+"""RA4 fixture: one coroutine, four seeded stalls, four negatives."""
+import asyncio
+import os
+import time
+
+
+class MiniAsyncDriver:
+    async def _serve(self, q, sock, fd):
+        time.sleep(0.1)                         # EXPECT:RA4
+        fh = open("state.bin", "rb")            # EXPECT:RA4
+        os.fdopen(fd, "wb")                     # EXPECT:RA4
+        q.get()                                 # EXPECT:RA4
+        sock.accept()                           # EXPECT:RA4
+
+        time.sleep(0.2)  # ra: allow-blocking (teardown; pragma'd out)
+
+        await asyncio.wait_for(q.get(), 1.0)    # awaited Queue: fine
+        q.get_nowait()                          # non-blocking: fine
+        q.get(timeout=0.1)                      # has a timeout arg: fine
+
+        def _callback():
+            time.sleep(1.0)                     # nested def: skipped
+
+        return fh, _callback
+
+    def sync_path(self):
+        time.sleep(0.1)                         # not async: fine

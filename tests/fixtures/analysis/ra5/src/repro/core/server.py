@@ -1,0 +1,33 @@
+"""RA5 fixture: a ServerCore whose ledgers leak off the loop thread."""
+import threading
+
+
+class ServerCore:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._epoch_lock = threading.Lock()
+        self.dead = set()
+        self.results = {}
+        self._gather_failed = set()
+        self._epochs = []
+
+    def _serve(self):
+        self._loop_tick()
+
+    def _loop_tick(self):
+        self.dead.add(1)                    # loop context: fine
+        self._indirect()
+
+    def _indirect(self):
+        self.results[1] = "x"               # closure of _serve: fine
+
+    def fetch(self, tids):
+        # caller-thread method touching a loop-owned ledger
+        self._gather_failed.difference_update(tids)     # EXPECT:RA5
+
+    def client_poke(self):
+        self.dead.add(9)                    # EXPECT:RA5
+
+    def wait_epoch(self):
+        with self._epoch_lock:
+            self._epochs.append(1)          # locked: fine

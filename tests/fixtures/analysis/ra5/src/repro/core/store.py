@@ -1,0 +1,31 @@
+"""RA5 fixture: an ObjectStore with three lock-discipline holes."""
+import threading
+
+
+class ObjectStore:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._mem = {}
+        self.mem_bytes = 0
+
+    def put(self, key, value):
+        with self._lock:
+            self._mem[key] = value          # locked: fine
+
+    def racy_put(self, key, value):
+        self._mem[key] = value              # EXPECT:RA5
+
+    def racy_meter(self, n):
+        self.mem_bytes += n                 # EXPECT:RA5
+
+    def racy_helper_call(self):
+        self._shrink()                      # EXPECT:RA5
+
+    def safe_helper_call(self):
+        with self._lock:
+            self._shrink()                  # locked: fine
+
+    def _shrink(self):
+        # documented callers-hold-the-lock helper: its own writes are
+        # exempt, calling it without the lock is the violation
+        self._mem.clear()

@@ -1,0 +1,218 @@
+"""The invariant checker checks itself: every rule must flag its
+seeded fixture at exactly the marked lines, and the repo must be clean.
+
+Fixture trees under ``tests/fixtures/analysis/<rule>/`` are mini-repos
+mirroring the real relative paths the rules scan.  Every line that must
+be flagged carries an ``EXPECT:<rule>`` marker (in a comment for .py,
+in a table cell for .md); the tests collect the markers and require the
+rule's findings to hit exactly that ``{(path, line)}`` set — no missed
+violations, no false positives on the deliberate negative cases the
+fixtures also contain.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import engine
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+RULES = ("RA1", "RA2", "RA3", "RA4", "RA5")
+
+_EXPECT = re.compile(r"EXPECT:(RA\d)\b")
+
+
+def expected_lines(root: Path, rule: str) -> set[tuple[str, int]]:
+    """``(relpath, lineno)`` of every EXPECT marker for ``rule``."""
+    out = set()
+    for p in sorted(root.rglob("*")):
+        if p.suffix not in (".py", ".md"):
+            continue
+        for i, line in enumerate(p.read_text().splitlines(), start=1):
+            for m in _EXPECT.finditer(line):
+                if m.group(1) == rule:
+                    out.add((p.relative_to(root).as_posix(), i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tentpole: each rule catches its seeded fixture at the right lines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", RULES)
+def test_rule_flags_fixture_at_marked_lines(rule):
+    root = FIXTURES / rule.lower()
+    want = expected_lines(root, rule)
+    assert want, f"fixture for {rule} has no EXPECT markers"
+    findings, n_suppressed = engine.run_rules(root, [rule],
+                                              allowlist=None)
+    assert n_suppressed == 0
+    assert all(f.rule == rule for f in findings)
+    got = {(f.path, f.line) for f in findings}
+    assert got == want, (
+        f"{rule} drifted from its fixture:\n"
+        f"  missed:   {sorted(want - got)}\n"
+        f"  spurious: {sorted(got - want)}")
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_rule_findings_carry_stable_keys(rule):
+    """Every finding is allowlistable: non-empty key, no line numbers
+    baked in (moving code must not invalidate suppressions)."""
+    findings, _ = engine.run_rules(FIXTURES / rule.lower(), [rule],
+                                   allowlist=None)
+    for f in findings:
+        assert f.key and f.key.startswith(rule + ":")
+        assert f.severity == "error"
+        # RA4's key ends with the line by design (a blocking call is a
+        # per-site fact with an in-source pragma, not an allowlist key)
+        if rule != "RA4":
+            assert str(f.line) not in f.key.split(":"), \
+                f"line number leaked into key {f.key!r}"
+
+
+# ---------------------------------------------------------------------------
+# e2e: the repo itself is clean under the default allowlist
+# ---------------------------------------------------------------------------
+
+def test_repo_is_clean():
+    findings, n_suppressed = engine.run_rules(REPO)
+    assert findings == [], "\n" + engine.format_text(
+        findings, n_suppressed, list(RULES))
+    assert n_suppressed >= 2     # the documented optional-tid entries
+
+
+def test_repo_findings_without_allowlist_are_only_the_allowlisted():
+    """Disabling suppression exposes exactly the allowlist's entries —
+    the allowlist documents real sites, nothing more hides behind it."""
+    allow, problems = engine.load_allowlist(engine.DEFAULT_ALLOWLIST)
+    assert problems == []
+    findings, n_suppressed = engine.run_rules(REPO, allowlist=None)
+    assert n_suppressed == 0
+    assert {f.key for f in findings} == set(allow)
+
+
+# ---------------------------------------------------------------------------
+# allowlist machinery
+# ---------------------------------------------------------------------------
+
+def test_allowlist_suppresses_by_stable_key(tmp_path):
+    allowfile = tmp_path / "allow.txt"
+    allowfile.write_text(
+        "# comment\n\n"
+        "RA1:direction:OP_MYSTERY -- fixture op, direction is a test\n")
+    base, _ = engine.run_rules(FIXTURES / "ra1", ["RA1"],
+                               allowlist=None)
+    kept, n_suppressed = engine.run_rules(FIXTURES / "ra1", ["RA1"],
+                                          allowlist=allowfile)
+    assert n_suppressed == 1
+    assert len(kept) == len(base) - 1
+    assert "RA1:direction:OP_MYSTERY" not in {f.key for f in kept}
+
+
+def test_allowlist_entry_without_justification_is_a_finding(tmp_path):
+    allowfile = tmp_path / "allow.txt"
+    allowfile.write_text("RA1:direction:OP_MYSTERY\n")
+    kept, n_suppressed = engine.run_rules(FIXTURES / "ra1", ["RA1"],
+                                          allowlist=allowfile)
+    assert n_suppressed == 0                 # malformed = no suppression
+    bad = [f for f in kept if f.rule == "RA0"]
+    assert len(bad) == 1 and bad[0].line == 1
+    assert "justification" in bad[0].message
+
+
+def test_unused_allowlist_entry_warns_only_for_rules_that_ran(tmp_path):
+    allowfile = tmp_path / "allow.txt"
+    allowfile.write_text("RA2:unknown-type:nope -- long gone\n")
+    kept, _ = engine.run_rules(FIXTURES / "ra1", ["RA1"],
+                               allowlist=allowfile)
+    assert not any(f.rule == "RA0" for f in kept)    # RA2 did not run
+    kept, _ = engine.run_rules(FIXTURES / "ra2", ["RA2"],
+                               allowlist=allowfile)
+    stale = [f for f in kept if f.key == "RA0:unused:RA2:unknown-type:nope"]
+    assert len(stale) == 1 and stale[0].severity == "warn"
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_applies_to_own_line_and_line_above():
+    sf = engine.SourceFile("x.py", (
+        "# ra: allow-blocking\n"
+        "a = f()\n"
+        "b = g()  # ra: allow-blocking\n"
+        "\n"
+        "c = h()\n"))
+    calls = [n for n in ast.walk(sf.tree) if isinstance(n, ast.Call)]
+    by_line = {c.lineno: c for c in calls}
+    # standalone pragma line above, and trailing pragma on the line
+    # itself, both apply; a pragma two lines up does not
+    assert sf.pragma_for(by_line[2], "allow-blocking") is not None
+    assert sf.pragma_for(by_line[3], "allow-blocking") is not None
+    assert sf.pragma_for(by_line[5], "allow-blocking") is None
+    assert sf.pragma_for(by_line[2], "event-types") is None
+
+
+# ---------------------------------------------------------------------------
+# output formats and CLI entry points
+# ---------------------------------------------------------------------------
+
+def test_json_format_round_trips():
+    findings, n_suppressed = engine.run_rules(FIXTURES / "ra1", ["RA1"],
+                                              allowlist=None)
+    blob = json.loads(engine.format_json(findings, n_suppressed,
+                                         ["RA1"]))
+    assert blob["n_findings"] == len(findings) > 0
+    assert blob["n_suppressed"] == 0
+    assert blob["findings"][0].keys() == {
+        "rule", "path", "line", "message", "severity", "key"}
+
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+
+
+def test_cli_clean_repo_exits_zero():
+    proc = _cli("--format", "json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout)["n_findings"] == 0
+
+
+def test_cli_dirty_tree_exits_one():
+    proc = _cli("--root", str(FIXTURES / "ra1"), "--rules", "RA1",
+                "--allowlist", "none")
+    assert proc.returncode == 1
+    assert "RA1" in proc.stdout
+
+
+def test_cli_rejects_unknown_rule_and_bad_root():
+    assert _cli("--rules", "RA9").returncode == 2
+    assert _cli("--root", str(FIXTURES / "ra2" / "docs")).returncode == 2
+
+
+def test_cli_list_rules():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULES:
+        assert rid in proc.stdout
+
+
+def test_wrapper_script_agrees_with_module():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_invariants.py"),
+         "--format", "json"],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout)["n_findings"] == 0

@@ -17,6 +17,7 @@ Covers the PR-4 tentpole and its satellites:
 """
 import dataclasses
 import inspect
+import threading
 import time
 
 import pytest
@@ -272,3 +273,58 @@ def test_thread_pool_survives_scale_to_zero_then_up():
         time.sleep(0.1)                   # let the loss event process
         ec.scale_up(1)
         assert c.client.submit(_sq, 4).result(10.0) == 16
+
+
+# ---------------------------------------------------------------------------
+# regression: fetch() and the loop-owned failure markers (found by RA5)
+# ---------------------------------------------------------------------------
+
+class _RecordingSet(set):
+    """Set that records the thread ident of every mutating call."""
+
+    def __init__(self, items, log):
+        super().__init__(items)
+        self._log = log
+
+    def _rec(self):
+        self._log.append(threading.get_ident())
+
+
+for _name in ("add", "discard", "remove", "pop", "clear", "update",
+              "difference_update", "intersection_update",
+              "symmetric_difference_update"):
+    def _wrap(name=_name):
+        base = getattr(set, name)
+
+        def method(self, *a, **kw):
+            self._rec()
+            return base(self, *a, **kw)
+        return method
+    setattr(_RecordingSet, _name, _wrap())
+
+
+def test_fetch_never_mutates_gather_failed_from_caller_thread():
+    """A stale failure marker must be discarded by the server loop's
+    fresh gather, never cleared client-side: fetch() mutating the
+    loop-owned _gather_failed ledger from the caller thread races the
+    loop's own rebind/discard of the set (the exact cross-thread write
+    repro.analysis rule RA5 flags).  The stale marker must also not
+    fail the fetch before the loop has processed it."""
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 driver="asyncio", transport="socket",
+                 timeout=60.0) as c:
+        core = c.runtime
+        f = c.client.submit(_leaf, 77)
+        assert f.result(30.0) == 77
+        # force a real wire gather: drop the server-side copy, leaving
+        # the value only in the worker's cache
+        core.results.pop(f.tid, None)
+        mutators: list[int] = []
+        core._gather_failed.add(f.tid)            # plant a stale marker
+        core._gather_failed = _RecordingSet(core._gather_failed,
+                                            mutators)
+        assert core.fetch([f.tid], timeout=20.0)  # marker is stale
+        assert core.results[f.tid] == 77
+        assert threading.get_ident() not in mutators, \
+            "fetch() mutated the loop-owned ledger from the caller thread"
+        assert mutators, "loop never discarded the stale marker"

@@ -60,6 +60,16 @@ def test_static_wire_roundtrip():
     assert op == msg.OP_SHUTDOWN and recs == []
 
 
+def test_shutdown_roundtrip_both_wires():
+    """Regression (found by repro.analysis RA1): DaskWire had no decode
+    branch for OP_SHUTDOWN — its own shutdown frame fell off the end of
+    decode().  Both codecs must round-trip the bare-header frame."""
+    for wire in (msg.DaskWire(), msg.StaticWire()):
+        op, recs, payloads = wire.decode(wire.encode_shutdown())
+        assert op == msg.OP_SHUTDOWN
+        assert recs == [] and payloads is None
+
+
 def test_codec_asymmetry_bytes():
     """Static batched frames are far smaller than per-message msgpack for
     the same event batch (the paper's protocol modification)."""
