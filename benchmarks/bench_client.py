@@ -62,16 +62,32 @@ def _bench_spill(runtime: str, n_workers: int) -> list[tuple]:
 def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
                   n_tasks: int = 300) -> list[tuple]:
     """Observability overhead: identical warm epochs on one Cluster
-    with the event feed off (the default) vs on (ring buffer).  The
-    first epoch is discarded (jit/codec warmup); the ratio is the price
-    of leaving events on, gated < 5 % by docs/events.md — the disabled
-    path is a single ``is None`` check per publish site and is priced
-    at ~0 by construction."""
+    with the event feed off (the default), on (ring buffer), and on
+    with the online protocol-conformance checker attached
+    (``repro.analysis.trace.ConformanceSink``).  The first epoch is
+    discarded (jit/codec warmup); the on/off ratio is the price of
+    leaving events on (gated < 5 % by docs/events.md) and conf/off the
+    price of live spec-checking every event (same gate,
+    docs/protocol.md) — the disabled path is a single ``is None`` check
+    per publish site and is priced at ~0 by construction."""
+    from repro.analysis.trace import ConformanceSink
+    from repro.core.events import EventBus
+
     graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_graphs)]
     per: dict[str, float] = {}
     rows: list[tuple] = []
     n_events = 0
-    for mode, spec in (("off", None), ("on", True)):
+    n_findings = -1
+    for mode in ("off", "on", "conf"):
+        sink = None
+        if mode == "off":
+            spec = None
+        elif mode == "on":
+            spec = True
+        else:
+            spec = EventBus()
+            sink = ConformanceSink(path=f"<bench:{runtime}>")
+            spec.add_sink(sink)
         with Cluster(server="rsds", runtime=runtime, n_workers=n_workers,
                      simulate_durations=False, timeout=120.0,
                      events=spec) as c:
@@ -80,8 +96,10 @@ def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
                 t0 = time.perf_counter()
                 c.client.submit_graph(g).result(120.0)
                 warm.append(time.perf_counter() - t0)
-            if mode == "on":
+            if mode != "off":
                 n_events = c.runtime.run_stats()["n_events"]
+        if sink is not None:
+            n_findings = len(sink.findings) + sink.n_internal_errors
         per[mode] = float(np.mean(warm[1:])) * 1e3
         rows.append((f"client-{runtime}/events-{mode}",
                      round(per[mode], 3),
@@ -89,6 +107,11 @@ def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
     ratio = per["on"] / max(per["off"], 1e-9)
     rows.append((f"client-{runtime}/events-overhead", "",
                  f"on/off={ratio:.3f};n_events={n_events};gate=<1.05"))
+    conf = per["conf"] / max(per["off"], 1e-9)
+    marginal = per["conf"] / max(per["on"], 1e-9)
+    rows.append((f"client-{runtime}/conformance-overhead", "",
+                 f"conf/off={conf:.3f};conf/on={marginal:.3f};"
+                 f"findings={n_findings};gate=conf/on<1.05"))
     return rows
 
 

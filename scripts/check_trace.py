@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Trace conformance from a checkout, without PYTHONPATH setup:
+
+    python scripts/check_trace.py run.jsonl [more.jsonl ...] \
+        [--format text|json] [--allowlist FILE]
+
+Positional arguments are recorded JSONL event logs (rotation chains
+are followed automatically); each is validated against the protocol
+spec (``repro.analysis.protocol``) by the RA6/RA7 trace checker.
+Dependency-free — runs on a bare interpreter, no numpy/msgpack.
+Exits nonzero on any finding — suitable as a CI gate over recorded
+benchmark artifacts.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+VALUE_FLAGS = {"--format", "--allowlist", "--root", "--rules"}
+
+
+def _rewrite(argv: list) -> list:
+    """Turn bare positionals into ``--trace`` options so the shared
+    CLI parses them."""
+    out, i = [], 0
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("-"):
+            out.append(a)
+            if a in VALUE_FLAGS and i + 1 < len(argv):
+                out.append(argv[i + 1])
+                i += 1
+        else:
+            out.extend(["--trace", a])
+        i += 1
+    return out
+
+
+if __name__ == "__main__":
+    sys.exit(main(_rewrite(sys.argv[1:])))

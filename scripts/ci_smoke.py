@@ -5,10 +5,12 @@ process runtime (both servers, both server drivers — blocking selector
 AND the asyncio event loop), plus a warm persistent Cluster submitting
 back-to-back epochs on each runtime, data-plane relay/p2p byte-split
 checks, a memory-pressure spill case (tiny memory_limit must force
-object-store spill with bit-correct results), and an observability
+object-store spill with bit-correct results), an observability
 case (record a JSONL event log, replay it, require agreement with
-RunResult.stats), and a static-analysis case (`python -m
-repro.analysis` must report zero invariant findings), each under a short
+RunResult.stats AND protocol-spec conformance of the recorded trace),
+a static-analysis case (`python -m repro.analysis` must report zero
+invariant findings), and schedule-exploration cases (200 distinct
+simulated interleavings per server, all conformant), each under a short
 watchdog, and exits nonzero on any timeout/hang/error — so CI fails in
 seconds instead of waiting out the 300 s benchmark timeout.
 
@@ -121,9 +123,35 @@ def _events_case(server: str):
                 raise AssertionError(
                     f"replay steals {s['n_steals']} != "
                     f"stats {r.stats['n_steals']}")
+            from repro.analysis.trace import run_trace
+            findings, _ = run_trace([log])
+            if findings:
+                raise AssertionError(
+                    "recorded trace violates the protocol spec:\n"
+                    + "\n".join(f"  {f.key}: {f.message}"
+                                for f in findings[:10]))
     r.detail = (f"events={r.stats.get('n_events')} "
                 f"steals={r.stats.get('n_steals')}")
     return r
+
+
+def _explore_case(server: str):
+    """Schedule exploration under the watchdog: 200 distinct simulated
+    interleavings under the seeded controller, every recorded stream
+    conformance-checked.  A failure prints the replay seed + shrunk
+    decision list."""
+    from repro.analysis.explore import explore_sim
+
+    r = explore_sim(server, n_schedules=200, seed=0)
+    if not r.ok:
+        raise AssertionError(
+            f"schedule exploration found protocol violations "
+            f"(replay with explore_sim('{server}', seed={r.seed}, "
+            f"width={r.width})):\n"
+            + "\n".join(f"  {v}" for v in r.violations[:5]))
+    out = types.SimpleNamespace(timed_out=False, n_tasks=r.n_runs)
+    out.detail = f"distinct={r.n_distinct} seed={r.seed}"
+    return out
 
 
 def _analysis_case():
@@ -194,6 +222,8 @@ def _cases():
         yield (f"spill/{server}", lambda s=server: _spill_case(s))
     for server in ("dask", "rsds"):
         yield (f"events/{server}", lambda s=server: _events_case(s))
+    for server in ("dask", "rsds"):
+        yield (f"explore/{server}", lambda s=server: _explore_case(s))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

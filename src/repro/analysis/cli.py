@@ -6,6 +6,11 @@ Same entry three ways::
     python scripts/check_invariants.py ...
     repro-check-invariants ...          # console script (pip install -e .)
 
+``--trace LOG.jsonl`` (repeatable; also the whole argument list of
+``scripts/check_trace.py``) switches from static rules to trace
+conformance: the RA6/RA7 protocol checker over recorded event logs,
+with the same formats, allowlist and exit codes.
+
 Exit status: 0 clean, 1 findings, 2 bad usage.
 """
 from __future__ import annotations
@@ -31,7 +36,9 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.analysis",
         description="AST-based invariant checker: wire/event/meter "
-                    "conformance and concurrency lints (RA1..RA5).")
+                    "conformance, concurrency lints and protocol-spec "
+                    "drift (RA1..RA8), plus trace conformance "
+                    "(--trace).")
     ap.add_argument("--root", default=None,
                     help="repo root to check (default: autodetected)")
     ap.add_argument("--format", choices=("text", "json"),
@@ -42,6 +49,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="allowlist file (default: the packaged "
                          "src/repro/analysis/allowlist.txt); "
                          "'none' disables suppression")
+    ap.add_argument("--trace", action="append", default=[],
+                    metavar="LOG.jsonl",
+                    help="conformance-check this recorded event log "
+                         "instead of running static rules (repeatable)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and exit")
     args = ap.parse_args(argv)
@@ -51,6 +62,22 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{rid}  {title}")
         return 0
 
+    allowlist = (None if args.allowlist == "none"
+                 else args.allowlist or engine.DEFAULT_ALLOWLIST)
+
+    if args.trace:
+        from repro.analysis import trace
+        if args.rules:
+            print("error: --rules applies to static analysis, not "
+                  "--trace", file=sys.stderr)
+            return 2
+        findings, n_suppressed = trace.run_trace(
+            args.trace, allowlist=allowlist)
+        fmt = (engine.format_json if args.format == "json"
+               else engine.format_text)
+        print(fmt(findings, n_suppressed, list(trace.TRACE_RULES)))
+        return 1 if findings else 0
+
     root = Path(args.root) if args.root else default_root()
     if not (root / "src" / "repro").is_dir():
         print(f"error: {root} does not look like the repo root "
@@ -58,8 +85,6 @@ def main(argv: list[str] | None = None) -> int:
         return 2
     rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
              if args.rules else None)
-    allowlist = (None if args.allowlist == "none"
-                 else args.allowlist or engine.DEFAULT_ALLOWLIST)
     try:
         findings, n_suppressed = engine.run_rules(
             root, rules, allowlist=allowlist)

@@ -231,13 +231,17 @@ def load_allowlist(path: str | Path | None) -> tuple[dict[str, str],
 
 def _registry() -> dict:
     from repro.analysis import (ra1_wire, ra2_events, ra3_meters,
-                                ra4_async, ra5_locks)
+                                ra4_async, ra5_locks, ra6_protocol,
+                                ra7_invariants, ra8_protocol_docs)
     return {
         "RA1": (ra1_wire.check, ra1_wire.TITLE),
         "RA2": (ra2_events.check, ra2_events.TITLE),
         "RA3": (ra3_meters.check, ra3_meters.TITLE),
         "RA4": (ra4_async.check, ra4_async.TITLE),
         "RA5": (ra5_locks.check, ra5_locks.TITLE),
+        "RA6": (ra6_protocol.check, ra6_protocol.TITLE),
+        "RA7": (ra7_invariants.check, ra7_invariants.TITLE),
+        "RA8": (ra8_protocol_docs.check, ra8_protocol_docs.TITLE),
     }
 
 

@@ -35,6 +35,7 @@ DOCS_SECTION = "Event types"
 SCAN = (
     "src/repro/core/events.py",
     "src/repro/core/server.py",
+    "src/repro/core/simulator.py",
     "src/repro/core/store.py",
     "src/repro/core/runtime.py",
     "src/repro/serve/engine.py",

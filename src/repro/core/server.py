@@ -365,6 +365,10 @@ class ServerCore:
         # hints in the last compute frame: tid -> (owner, {dep: holder})
         self._hinted: dict[int, tuple[int, dict[int, int]]] = {}
         self._lost_handled: set[int] = set()
+        # schedule explorer hook (repro.analysis.explore): a callable
+        # that may reorder/defer the control-event batch before the
+        # loop consumes it.  None (the default) costs one attr check.
+        self.schedule_hook = None
         self._tasks_table: dict[int, tuple] = {}
         self._submit_q: queue.Queue = queue.Queue()
         self._lock = threading.Lock()
@@ -443,6 +447,13 @@ class ServerCore:
         e.spill_bytes1, e.unspill_bytes1 = self._spill_totals()
         ev = self.events
         if ev is not None:
+            if e.t_ingest == 0.0:
+                # Never ingested (quarantined before wiring, or failed
+                # open at shutdown): publish the open the bind path
+                # would have, with an empty tid range, so every
+                # epoch-close pairs with an epoch-open.
+                ev.publish("epoch-open", eid=e.eid, n_tasks=e.n_tasks,
+                           lo=0, hi=0)
             ev.publish("epoch-close", eid=e.eid,
                        error=repr(e.error) if e.error else None)
         e.done_evt.set()
@@ -602,7 +613,10 @@ class ServerCore:
         released = self._charge(self.reactor.release_keys, tids)
         ev = self.events
         if ev is not None and released:
-            ev.publish("release", n=len(released))
+            # tids is optional (schema-additive): the conformance
+            # checker uses it to prove gathers never target these keys
+            ev.publish("release", n=len(released),
+                       tids=[int(t) for t in released])
         for tid in released:
             self.results.discard(tid)
         # drain the reclaim log (it contains ``released``) so the same
@@ -682,7 +696,9 @@ class ServerCore:
         ev = self.events
         for wid, ts in by_wid.items():
             if ev is not None:
-                ev.publish("gather", wid=wid, n=len(ts))
+                # tids optional (schema-additive), keys gather targets
+                ev.publish("gather", wid=wid, n=len(ts),
+                           tids=[int(t) for t in ts])
             self.driver.send_gather(wid, ts)
 
     def _on_gather_reply(self, wid: int, absent, payloads) -> None:
@@ -1074,6 +1090,9 @@ class ServerCore:
         self.driver.drain_kills()
 
     def _process_events(self, events) -> None:
+        hook = self.schedule_hook
+        if hook is not None:
+            events = hook(events)
         finished: list[tuple[int, int]] = []
         for ev in events:
             kind = ev[0]

@@ -23,6 +23,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.core.events import EventBus, make_bus
 from repro.core.graph import TaskGraph
 
 
@@ -40,6 +41,14 @@ class SimConfig:
     timeout: float = 300.0            # paper: 300 s benchmark timeout
     seed: int = 0
     failures: tuple = ()              # ((virtual_time, wid), ...)
+    events: object = None             # same knob as run_graph(events=...)
+    controller: object = None         # schedule explorer hook: an object
+                                      # with .width and .choose(n) that
+                                      # picks among the n earliest pending
+                                      # events (repro.analysis.explore)
+    fixed_server_cost: float = None   # charge this instead of measured
+                                      # wall time -> fully deterministic
+                                      # event order for the explorer
 
 
 @dataclasses.dataclass
@@ -85,11 +94,29 @@ class Simulator:
         self.moves = 0
         self.failures_handled = 0
         self.dead: set[int] = set()
+        self.bus = make_bus(cfg.events)
+        self._own_bus = not isinstance(cfg.events, EventBus)
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
         self._seq += 1
         heapq.heappush(self.events, (t, self._seq, kind, payload))
+
+    def _pop(self):
+        """Next event — or, under an explorer controller, one of the
+        ``width`` earliest events, chosen by the controller.  Causality
+        is safe by construction: an event only exists in the heap once
+        its cause ran, so any pop order the controller picks is a
+        schedule the real cluster could have produced."""
+        ctl = self.cfg.controller
+        if ctl is None or len(self.events) <= 1:
+            return heapq.heappop(self.events)
+        k = min(len(self.events), ctl.width)
+        cands = [heapq.heappop(self.events) for _ in range(k)]
+        ev = cands.pop(ctl.choose(len(cands)))
+        for c in cands:
+            heapq.heappush(self.events, c)
+        return ev
 
     def _to_server(self, item, now: float) -> None:
         self.inbox.append(item)
@@ -101,22 +128,41 @@ class Simulator:
 
     def _charge_server(self, now: float, fn, *args):
         """Run a reactor call, measure real wall time, charge virtual
-        time; returns (result, completion_time)."""
+        time; returns (result, completion_time).  With
+        ``fixed_server_cost`` set the charge is constant instead of
+        measured, making the virtual timeline deterministic (the
+        schedule explorer needs replayable heaps)."""
         t0 = time.perf_counter()
         result = fn(*args)
-        dt = (time.perf_counter() - t0) * self.cfg.server_scale
+        if self.cfg.fixed_server_cost is not None:
+            dt = self.cfg.fixed_server_cost
+        else:
+            dt = (time.perf_counter() - t0) * self.cfg.server_scale
         start = max(now, self.server_free)
         self.server_free = start + dt
         self.server_busy_total += dt
         return result, self.server_free
 
     def _dispatch(self, assignments, t: float) -> None:
+        ev = self.bus
         for tid, wid in assignments:
+            if ev is not None:
+                # published at send time, like ServerCore: the server
+                # decided before the message reaches the (maybe dying)
+                # worker, and never targets a worker it knows is dead
+                ev.publish("task-queued", tid=int(tid), wid=int(wid))
+                ev.publish("task-dispatched", tid=int(tid), wid=int(wid))
             self._push(t + self.cfg.latency, "assign", (tid, wid))
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
         cfg = self.cfg
+        ev = self.bus
+        if ev is not None:
+            for w in self.workers:
+                ev.publish("worker-join", wid=w.wid)
+            ev.publish("epoch-open", eid=0, n_tasks=self.g.n_tasks,
+                       lo=0, hi=self.g.n_tasks)
         self._last_balance = 0.0
         assignments, t_done = self._charge_server(0.0, self.reactor.start)
         self._dispatch(assignments, t_done)
@@ -124,7 +170,10 @@ class Simulator:
             self._push(ft, "fail", fw)
         now = 0.0
         while self.events and not self.reactor.done():
-            now, _, kind, payload = heapq.heappop(self.events)
+            t, _, kind, payload = self._pop()
+            # under a controller events can pop out of time order;
+            # virtual time stays monotonic
+            now = max(now, t)
             if now > cfg.timeout:
                 return self._result(now, timed_out=True)
             if kind == "assign":
@@ -171,6 +220,10 @@ class Simulator:
                     self._push(self.server_free, "server", None)
                     continue
                 batch, self.inbox = self.inbox, []
+                if self.bus is not None:
+                    for tid, wid in batch:
+                        self.bus.publish("task-finished", tid=int(tid),
+                                         wid=int(wid))
                 out, td = self._charge_server(
                     now, self.reactor.handle_finished, batch)
                 self._dispatch(out, td)
@@ -233,6 +286,9 @@ class Simulator:
                 w.busy = True
                 w.running = tid
                 self.started[tid] = True
+                if self.bus is not None:
+                    self.bus.publish("task-started", tid=int(tid),
+                                     wid=w.wid)
                 self._push(now + float(self.g.durations[tid]), "done",
                            (tid, w.wid))
                 return
@@ -252,10 +308,15 @@ class Simulator:
             if old is None:
                 # retraction failed: already started (paper §IV-C)
                 self.reactor.steal_failed(tid)
+                if self.bus is not None:
+                    self.bus.publish("steal-failed", tid=int(tid))
                 continue
             old.queue.remove(tid)
             self.moves += 1
-            self._push(td + self.cfg.latency, "assign", (tid, new_wid))
+            if self.bus is not None:
+                self.bus.publish("task-steal", tid=int(tid),
+                                 wid=int(new_wid))
+            self._dispatch([(tid, new_wid)], td)
 
     def _fail_worker(self, wid: int, now: float) -> None:
         """Node failure: running+queued tasks lost, data lost; the reactor
@@ -268,11 +329,18 @@ class Simulator:
         w.running = -1
         w.data_at.clear()
         self.failures_handled += 1
+        if self.bus is not None:
+            self.bus.publish("worker-lost", wid=wid, n_lost=len(lost))
         out, td = self._charge_server(
             now, self.reactor.handle_worker_lost, wid, lost)
         self._dispatch(out, td)
 
     def _result(self, now: float, timed_out: bool = False) -> SimResult:
+        if self.bus is not None:
+            self.bus.publish("epoch-close", eid=0,
+                             error="timeout" if timed_out else None)
+            if self._own_bus:
+                self.bus.close()
         return SimResult(makespan=now, server_busy=self.server_busy_total,
                          n_tasks=self.g.n_tasks, timed_out=timed_out,
                          stats=self.reactor.stats.as_dict(),

@@ -1,0 +1,7 @@
+"""RA2 fixture: the simulator's publish sites are scanned too."""
+
+
+class MiniSim:
+    def run(self, bus):
+        bus.publish("beta", n=3)                # conformant
+        bus.publish("alpha", y=2)               # EXPECT:RA2 (missing x)

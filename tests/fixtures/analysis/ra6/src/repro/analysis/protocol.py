@@ -1,0 +1,38 @@
+"""RA6 fixture: a mini protocol spec with seeded drift."""
+
+EVENT_FIELDS = {                        # EXPECT:RA6 (no 'orphan' entry)
+    "task-go": ("tid",),
+    "task-done": ("tid", "ok"),         # EXPECT:RA6 (fields drifted)
+    "worker-hi": ("wid",),
+    "two-sets": ("q",),                 # EXPECT:RA6 (in two partitions)
+    "ghost-type": ("z",),               # EXPECT:RA6 (stale + unpartitioned)
+}
+
+TASK_EVENTS = ("task-go", "task-done", "two-sets")
+WORKER_EVENTS = (
+    "worker-hi",
+    "two-sets",
+    "not-declared",                     # EXPECT:RA6 (not in EVENT_FIELDS)
+)
+EPOCH_EVENTS = ()
+STATELESS_EVENTS = ()
+
+TASK_STATES = (
+    "idle",
+    "busy",
+    "zombie",                           # EXPECT:RA6 (unreachable)
+)
+WORKER_STATES = ("fresh", "up")
+
+TASK_TRANSITIONS = {
+    ("idle", "task-go"): "busy",
+    ("busy", "task-done"): "idle",
+    ("busy", "two-sets"): "busy",
+    ("idle", "worker-hi"): "busy",      # EXPECT:RA6 (not a task event)
+    ("limbo", "task-go"): "idle",       # EXPECT:RA6 (undeclared source)
+}
+WORKER_TRANSITIONS = {
+    ("fresh", "worker-hi"): "up",
+    ("fresh", "two-sets"): "up",
+    ("fresh", "not-declared"): "up",
+}

@@ -1,0 +1,13 @@
+"""RA6 fixture: the event vocabulary the mini-spec must mirror.
+
+No markers here — every RA6 finding lands in ``protocol.py``, where
+the drift lives.
+"""
+
+EVENT_TYPES: dict[str, tuple[str, ...]] = {
+    "task-go": ("tid",),
+    "task-done": ("tid",),
+    "worker-hi": ("wid",),
+    "two-sets": ("q",),
+    "orphan": ("x",),        # declared here, no protocol semantics
+}

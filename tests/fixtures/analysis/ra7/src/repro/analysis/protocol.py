@@ -1,0 +1,7 @@
+"""RA7 fixture: an invariant registry with seeded drift."""
+
+INVARIANTS = {
+    "good-one": ("RA6", "registered and enforced"),
+    "never-checked": ("RA7", "no checker code"),   # EXPECT:RA7
+    "wrong-owner": ("RA9", "bad owning rule"),     # EXPECT:RA7
+}

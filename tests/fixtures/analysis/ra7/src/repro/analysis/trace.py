@@ -1,0 +1,9 @@
+"""RA7 fixture: a checker implementing one phantom invariant."""
+
+
+class TraceChecker:
+    IMPLEMENTS = (
+        "good-one",
+        "wrong-owner",
+        "phantom",          # EXPECT:RA7 (implemented, never registered)
+    )

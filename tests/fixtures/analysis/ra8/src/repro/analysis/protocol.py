@@ -1,0 +1,18 @@
+"""RA8 fixture: a mini spec whose docs page drifted.
+
+No markers here — every RA8 finding lands in ``docs/protocol.md``.
+"""
+
+TASK_TRANSITIONS = {
+    ("a", "go"): "b",
+    ("b", "stop"): "a",
+    ("b", "skip"): "a",      # undocumented edge
+}
+WORKER_TRANSITIONS = {
+    ("w", "join"): "x",
+}
+INVARIANTS = {
+    "inv-ok": ("RA6", "documented correctly"),
+    "inv-missing-doc": ("RA7", "has no docs row"),
+    "inv-rule-drift": ("RA7", "docs credit the wrong rule"),
+}

@@ -25,7 +25,7 @@ from repro.analysis import engine
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "fixtures" / "analysis"
-RULES = ("RA1", "RA2", "RA3", "RA4", "RA5")
+RULES = ("RA1", "RA2", "RA3", "RA4", "RA5", "RA6", "RA7", "RA8")
 
 _EXPECT = re.compile(r"EXPECT:(RA\d)\b")
 

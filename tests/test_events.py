@@ -225,6 +225,50 @@ def test_broken_sink_is_contained():
     assert ev["n"] == 1
 
 
+def test_conformance_sink_is_crash_contained():
+    """The online protocol checker is a sink like any other: a checker
+    that blows up internally must never take the publish path down —
+    it counts the error and keeps consuming the stream."""
+    from repro.analysis.trace import ConformanceSink
+
+    bus = EventBus()
+    sink = ConformanceSink()
+    bus.add_sink(sink)
+
+    def boom(ev):
+        raise RuntimeError("checker bug")
+    sink._checker.feed = boom            # simulate an internal crash
+    ev = bus.publish("release", n=1)     # must not raise
+    assert ev["n"] == 1
+    assert sink.n_internal_errors == 1   # counted, not swallowed
+    # and even an unconfigured double-failure path stays contained:
+    # the bus's own try/except is the second belt
+    bus.add_sink(lambda ev: 1 / 0)
+    bus.publish("release", n=2)
+
+
+def test_conformance_sink_windowed_on_ring_overflow():
+    """A sink attached after the ring dropped events sees a seq gap;
+    the checker must downgrade to windowed checking (no false
+    positives from the missing history) instead of flagging the
+    replayed tail."""
+    from repro.analysis.trace import ConformanceSink
+
+    bus = EventBus(capacity=4)
+    for tid in range(8):                 # dispatch history falls off
+        bus.publish("task-queued", tid=tid, wid=0)
+        bus.publish("task-dispatched", tid=tid, wid=0)
+    assert bus.n_dropped > 0
+    sink = ConformanceSink()
+    bus.add_sink(sink)                   # ring replay starts mid-stream
+    for tid in range(8):                 # finishes whose dispatches the
+        bus.publish("task-finished", tid=tid, wid=0)   # sink never saw
+    assert not sink.strict               # gap detected -> windowed
+    assert sink.n_gaps >= 1
+    assert sink.findings == []           # no false positives
+    assert sink.n_internal_errors == 0
+
+
 def test_make_bus_normalization(tmp_path):
     assert make_bus(None) is None
     assert make_bus(False) is None

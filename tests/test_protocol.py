@@ -1,0 +1,459 @@
+"""Protocol model checker: seeded illegal traces, clean traces,
+shrinking, and schedule exploration.
+
+Every hand-written trace below is a minimal legal stream plus exactly
+one protocol violation; the test requires the checker to detect it by
+its exact finding key.  The clean-trace tests pin the opposite
+direction — the documented races (optimistic steal retraction,
+in-flight finishes from lost workers, lineage re-execution) must NOT be
+flagged.  The explorer tests drive the simulator and the real thread
+runtime through many interleavings and require conformance throughout,
+plus deterministic shrinking of injected failures.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.explore import (Controller, explore_inproc,
+                                    explore_sim, shrink)
+from repro.analysis.trace import ConformanceSink, TraceChecker, run_trace
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def mk(seq: int, type_: str, **payload) -> dict:
+    """Event with a well-formed envelope."""
+    ev = {"v": 1, "seq": seq, "t": float(seq), "type": type_}
+    ev.update(payload)
+    return ev
+
+
+def stream(*events) -> list[dict]:
+    """Prefix with stream-open and number the envelope."""
+    out = [mk(0, "stream-open", wall=0.0, pid=1)]
+    for i, (type_, payload) in enumerate(events, start=1):
+        out.append(mk(i, type_, **payload))
+    return out
+
+
+def check(events) -> list:
+    checker = TraceChecker(path="<test>")
+    checker.check_many(events)
+    return checker.findings
+
+
+def keys(events) -> set[str]:
+    return {f.key for f in check(events)}
+
+
+# ---------------------------------------------------------------------------
+# seeded illegal traces, one exact key each
+# ---------------------------------------------------------------------------
+
+W0 = ("worker-join", {"wid": 0})
+
+
+def test_double_finish():
+    got = keys(stream(
+        W0,
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:double-finish:0"}
+
+
+def test_finish_without_dispatch():
+    got = keys(stream(
+        W0,
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:finish-without-dispatch:0"}
+
+
+def test_lost_worker_finish():
+    # the first finish consumed the only credential; the second finish
+    # from the now-lost worker has no in-flight dispatch behind it
+    got = keys(stream(
+        W0,
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+        ("worker-lost", {"wid": 0, "n_lost": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:lost-worker-finish:0"}
+
+
+def test_start_without_dispatch():
+    got = keys(stream(
+        W0,
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-started", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:start-without-dispatch:0"}
+
+
+def test_dispatch_to_lost_worker():
+    got = keys(stream(
+        W0,
+        ("worker-lost", {"wid": 0, "n_lost": 0}),
+        ("task-queued", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:dispatch-to-lost:0"}
+
+
+def test_double_join():
+    got = keys(stream(W0, W0))
+    assert got == {"RA6:double-join:w0"}
+
+
+def test_double_lost():
+    got = keys(stream(
+        W0,
+        ("worker-lost", {"wid": 0, "n_lost": 0}),
+        ("worker-lost", {"wid": 0, "n_lost": 0}),
+    ))
+    assert got == {"RA6:double-lost:w0"}
+
+
+def test_illegal_task_transition():
+    # stealing a task nobody ever queued
+    got = keys(stream(
+        W0,
+        ("task-steal", {"tid": 0, "wid": 0}),
+    ))
+    assert got == {"RA6:illegal-transition:task:new:task-steal"}
+
+
+def test_out_of_order_seq():
+    events = stream(W0, ("worker-join", {"wid": 1}))
+    events[2]["seq"] = 1                 # duplicate of the previous seq
+    assert "RA7:out-of-order-seq:seq1" in {f.key for f in check(events)}
+
+
+def test_missing_required_field():
+    got = keys(stream(("task-queued", {"tid": 0})))      # no wid
+    assert got == {"RA7:missing-field:task-queued:wid"}
+
+
+def test_negative_ledger():
+    got = keys(stream(
+        W0,
+        ("worker-pressure", {"wid": 0, "pressured": True,
+                             "mem_bytes": -5}),
+    ))
+    assert got == {"RA7:negative-ledger:worker-pressure:mem_bytes"}
+
+
+def test_gather_after_release():
+    got = keys(stream(
+        W0,
+        ("release", {"n": 1, "tids": [3]}),
+        ("gather", {"wid": 0, "n": 1, "tids": [3]}),
+    ))
+    assert got == {"RA7:gather-after-release:3"}
+
+
+def test_epoch_close_with_pending():
+    got = keys(stream(
+        W0,
+        ("epoch-open", {"eid": 0, "n_tasks": 2, "lo": 0, "hi": 2}),
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+        ("epoch-close", {"eid": 0, "error": None}),      # task 1 pending
+    ))
+    assert got == {"RA7:epoch-close-with-pending:e0"}
+
+
+def test_close_unopened_epoch():
+    got = keys(stream(("epoch-close", {"eid": 7, "error": None})))
+    assert got == {"RA7:close-unopened-epoch:e7"}
+
+
+def test_double_epoch_close():
+    got = keys(stream(
+        ("epoch-open", {"eid": 0, "n_tasks": 0, "lo": 0, "hi": 0}),
+        ("epoch-close", {"eid": 0, "error": None}),
+        ("epoch-close", {"eid": 0, "error": None}),
+    ))
+    assert got == {"RA7:double-epoch-close:e0"}
+
+
+def test_spill_without_put():
+    got = keys(stream(
+        W0,
+        ("spill", {"wid": 0, "nbytes": 10}),
+    ))
+    assert got == {"RA7:spill-without-put:w0"}
+
+
+# ---------------------------------------------------------------------------
+# clean traces: the documented races are legal
+# ---------------------------------------------------------------------------
+
+def test_clean_lifecycle_with_races():
+    events = stream(
+        W0,
+        ("worker-join", {"wid": 1}),
+        ("epoch-open", {"eid": 0, "n_tasks": 3, "lo": 0, "hi": 3}),
+        # t0: plain lifecycle
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-started", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+        # t1: stolen, then the optimistic retraction loses the race --
+        # both workers hold a credential, both finishes are legal
+        ("task-queued", {"tid": 1, "wid": 1}),
+        ("task-dispatched", {"tid": 1, "wid": 1}),
+        ("task-steal", {"tid": 1, "wid": 0}),
+        ("task-queued", {"tid": 1, "wid": 0}),
+        ("task-dispatched", {"tid": 1, "wid": 0}),
+        ("task-finished", {"tid": 1, "wid": 1}),
+        ("task-finished", {"tid": 1, "wid": 0}),
+        # t2: worker dies, resubmitted elsewhere
+        ("task-queued", {"tid": 2, "wid": 1}),
+        ("task-dispatched", {"tid": 2, "wid": 1}),
+        ("worker-lost", {"wid": 1, "n_lost": 1}),
+        ("task-queued", {"tid": 2, "wid": 0}),
+        ("task-dispatched", {"tid": 2, "wid": 0}),
+        ("task-started", {"tid": 2, "wid": 0}),
+        ("task-finished", {"tid": 2, "wid": 0}),
+        ("epoch-close", {"eid": 0, "error": None}),
+        ("release", {"n": 3, "tids": [0, 1, 2]}),
+        ("compact", {"base": 3}),
+    )
+    assert check(events) == []
+
+
+def test_in_flight_finish_from_lost_worker_is_legal():
+    # the completion was dispatched before the loss: legal, and the
+    # redundant resubmitted copy may then be stolen and re-run
+    events = stream(
+        W0,
+        ("worker-join", {"wid": 1}),
+        ("worker-join", {"wid": 2}),
+        ("task-queued", {"tid": 0, "wid": 1}),
+        ("task-dispatched", {"tid": 0, "wid": 1}),
+        ("worker-lost", {"wid": 1, "n_lost": 1}),
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 1}),     # in-flight finish
+        ("task-steal", {"tid": 0, "wid": 2}),        # redundant copy
+        ("task-queued", {"tid": 0, "wid": 2}),
+        ("task-dispatched", {"tid": 0, "wid": 2}),
+        ("task-started", {"tid": 0, "wid": 2}),
+        ("task-finished", {"tid": 0, "wid": 2}),
+    )
+    assert check(events) == []
+
+
+def test_windowed_mode_suppresses_history_guards():
+    # stream starts mid-flight (seq 5): the bare finish must not be
+    # flagged, but memoryless guards (double-lost) still fire
+    events = [
+        mk(5, "task-finished", tid=9, wid=9),
+        mk(6, "worker-lost", wid=3, n_lost=0),
+        mk(7, "worker-lost", wid=3, n_lost=0),
+    ]
+    checker = TraceChecker(path="<late>")
+    checker.check_many(events)
+    assert not checker.strict and checker.n_gaps == 1
+    assert {f.key for f in checker.findings} == {"RA6:double-lost:w3"}
+
+
+def test_concatenated_streams_reset_state():
+    # a second stream-open at seq 0 is a new stream: the same worker
+    # joining again is not a double-join
+    events = stream(W0) + stream(W0)
+    assert check(events) == []
+
+
+# ---------------------------------------------------------------------------
+# offline entry points: run_trace + scripts/check_trace.py
+# ---------------------------------------------------------------------------
+
+def _write_jsonl(path: Path, events) -> None:
+    path.write_text("".join(json.dumps(e) + "\n" for e in events))
+
+
+def test_run_trace_clean_and_violating(tmp_path):
+    clean = tmp_path / "clean.jsonl"
+    _write_jsonl(clean, stream(
+        W0,
+        ("task-queued", {"tid": 0, "wid": 0}),
+        ("task-dispatched", {"tid": 0, "wid": 0}),
+        ("task-finished", {"tid": 0, "wid": 0}),
+    ))
+    findings, n_suppressed = run_trace([clean])
+    assert findings == [] and n_suppressed == 0
+
+    bad = tmp_path / "bad.jsonl"
+    _write_jsonl(bad, stream(
+        W0,
+        ("task-finished", {"tid": 0, "wid": 0}),
+    ))
+    findings, _ = run_trace([bad])
+    assert [f.key for f in findings] == ["RA6:finish-without-dispatch:0"]
+    assert findings[0].path.endswith("bad.jsonl")
+    assert findings[0].line == 3        # 1-based event index
+
+
+def test_run_trace_missing_file(tmp_path):
+    findings, _ = run_trace([tmp_path / "gone.jsonl"])
+    assert [f.key for f in findings] == ["RA0:no-trace:gone.jsonl"]
+
+
+def test_check_trace_script_exit_codes(tmp_path):
+    clean = tmp_path / "ok.jsonl"
+    _write_jsonl(clean, stream(W0))
+
+    def run(*args):
+        return subprocess.run(
+            [sys.executable, str(REPO / "scripts" / "check_trace.py"),
+             *args], capture_output=True, text=True, cwd=REPO)
+
+    assert run(str(clean)).returncode == 0
+    bad = tmp_path / "bad.jsonl"
+    _write_jsonl(bad, stream(("task-steal", {"tid": 0, "wid": 0})))
+    proc = run(str(bad))
+    assert proc.returncode == 1
+    assert "RA6:illegal-transition" in proc.stdout
+    assert run(str(tmp_path / "gone.jsonl")).returncode == 1
+    # --trace and --rules are mutually exclusive (exit 2, like other
+    # CLI usage errors)
+    assert run(str(clean), "--rules", "RA6").returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# online sink
+# ---------------------------------------------------------------------------
+
+def test_conformance_sink_over_live_bus():
+    from repro.core.events import EventBus
+    bus = EventBus()
+    sink = ConformanceSink(path="<t>")
+    bus.add_sink(sink)
+    bus.publish("worker-join", wid=0)
+    bus.publish("worker-join", wid=0)
+    bus.close()
+    assert [f.key for f in sink.findings] == ["RA6:double-join:w0"]
+    assert sink.n_internal_errors == 0 and sink.strict
+
+
+# ---------------------------------------------------------------------------
+# shrinking
+# ---------------------------------------------------------------------------
+
+def test_shrink_is_minimal_and_deterministic():
+    # failure iff the third decision is 2 (missing decisions read as 0)
+    def still_fails(d):
+        return len(d) >= 3 and d[2] == 2
+
+    a = shrink([1, 2, 2, 1, 2, 0], still_fails)
+    b = shrink([1, 2, 2, 1, 2, 0], still_fails)
+    assert a == b == [0, 0, 2]
+
+
+def test_shrink_keeps_failing_suffix_free():
+    def still_fails(d):
+        return sum(d) >= 4
+
+    out = shrink([1, 1, 1, 1, 1, 1], still_fails)
+    assert still_fails(out) and len(out) == 4
+
+
+def test_controller_replay_matches_taken():
+    ctl = Controller(seed=7, width=3)
+    taken = [ctl.choose(3) for _ in range(20)]
+    replay = Controller(decisions=taken, width=3)
+    assert [replay.choose(3) for _ in range(20)] == taken
+    # past the end of the list the controller follows heap order
+    assert replay.choose(3) == 0
+
+
+# ---------------------------------------------------------------------------
+# schedule exploration
+# ---------------------------------------------------------------------------
+
+def _small_graph():
+    from repro.core import benchgraphs
+    return benchgraphs.merge(12)
+
+
+def test_explore_sim_interleavings_are_clean_and_distinct():
+    r = explore_sim("rsds", graph=_small_graph(), n_workers=3,
+                    n_schedules=20, seed=0, width=3, depth=2)
+    assert r.ok, "\n".join(str(v) for v in r.violations)
+    assert r.n_distinct >= 20
+
+
+def test_explore_sim_with_failure_injection_is_clean():
+    r = explore_sim("dask", graph=_small_graph(), n_workers=3,
+                    n_schedules=8, seed=1, width=2, depth=1,
+                    failures=((0.002, 0),))
+    assert r.ok, "\n".join(str(v) for v in r.violations)
+
+
+def test_explore_sim_is_deterministic():
+    a = explore_sim("rsds", graph=_small_graph(), n_workers=3,
+                    n_schedules=6, seed=3, width=2, depth=1)
+    b = explore_sim("rsds", graph=_small_graph(), n_workers=3,
+                    n_schedules=6, seed=3, width=2, depth=1)
+    assert (a.n_runs, a.n_distinct) == (b.n_runs, b.n_distinct)
+    assert a.ok and b.ok
+
+
+def test_explore_sim_shrinks_injected_violation_deterministically():
+    # corrupt every recorded stream the same way: duplicate the first
+    # finish.  The failure is schedule-independent, so shrinking must
+    # reach the empty decision list -- twice, identically.
+    def dup_first_finish(events, _i):
+        out = list(events)
+        for j, ev in enumerate(out):
+            if ev.get("type") == "task-finished":
+                out.insert(j + 1, dict(ev))
+                break
+        return out
+
+    results = []
+    for _ in range(2):
+        r = explore_sim("rsds", graph=_small_graph(), n_workers=3,
+                        n_schedules=1, seed=0, width=2, depth=1,
+                        trace_mutator=dup_first_finish)
+        assert not r.ok
+        v = r.violations[0]
+        assert any(k.startswith("RA7:out-of-order-seq")
+                   or k.startswith("RA6:double-finish")
+                   for k in v.finding_keys)
+        results.append((v.decisions, tuple(v.finding_keys)))
+    assert results[0] == results[1]
+    assert results[0][0] == []          # fully shrunk
+
+
+def test_explore_inproc_real_runtime_is_clean():
+    r = explore_inproc("rsds", graph=_small_graph(), n_schedules=2,
+                       seed=0, n_workers=3)
+    assert r.ok, "\n".join(str(v) for v in r.violations)
+    assert r.n_runs == 2
+
+
+# ---------------------------------------------------------------------------
+# recorded end-to-end trace through the offline pipeline
+# ---------------------------------------------------------------------------
+
+def test_recorded_runtime_trace_passes_offline_check(tmp_path):
+    from repro.core import run_graph
+    log = tmp_path / "events.jsonl"
+    r = run_graph(_small_graph(), server="rsds", runtime="thread",
+                  n_workers=3, simulate_durations=False, timeout=60.0,
+                  events=str(log))
+    assert not r.timed_out
+    findings, _ = run_trace([log])
+    assert findings == [], [f.key for f in findings]
