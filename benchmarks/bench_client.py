@@ -115,6 +115,43 @@ def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
     return rows
 
 
+def _bench_dispatch(n_workers: int = 8, n_epochs: int = 3,
+                    n_tasks: int = 400) -> list[tuple]:
+    """Per-task dispatch cost, batch envelope on vs off, measured by the
+    ``dispatch_ns_per_task`` meter on pipelined zero-worker epochs (the
+    control-plane-saturating shape of ``benchmarks/bench_scale.py``).
+
+    CI gate: the batched dispatch path must not cost more than 1.1x the
+    per-frame baseline — it normally costs 3-8x LESS (the outbox turns
+    per-frame sends into one envelope per worker per poll iteration), so
+    a gate trip means the coalescing path itself regressed."""
+    graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_epochs)]
+    per: dict[bool, float] = {}
+    rows: list[tuple] = []
+    for batching in (True, False):
+        mode = "dispatch-batched" if batching else "dispatch-unbatched"
+        with Cluster(server="dask", runtime="process",
+                     n_workers=n_workers, zero_worker=True,
+                     simulate_durations=False, batching=batching,
+                     timeout=120.0) as c:
+            c.client.submit_graph(
+                benchgraphs.merge(n_tasks, seed=99)).result(120.0)
+            futs = [c.client.submit_graph(g) for g in graphs]
+            for f in futs:
+                f.result(120.0)
+            st = c.runtime.run_stats()
+        per[batching] = float(st["dispatch_ns_per_task"])
+        rows.append((f"client-process/{mode}", "",
+                     f"dispatch_ns_per_task={st['dispatch_ns_per_task']};"
+                     f"n_frames_sent={st['n_frames_sent']};"
+                     f"frames_coalesced={st['frames_coalesced']}"))
+    ratio = per[True] / max(per[False], 1e-9)
+    verdict = "" if ratio <= 1.1 else "GATE-FAIL;"
+    rows.append(("client-process/dispatch-gate", "",
+                 f"{verdict}batched/unbatched={ratio:.3f};gate=<=1.1"))
+    return rows
+
+
 def _bench_compaction(n_epochs: int = 400) -> list[tuple]:
     """Bounded footprint over many submit/release epochs: with prefix
     compaction the graph's stored rows stay ~flat while the logical tid
@@ -250,6 +287,8 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
                                n_workers))
         if runtime == "process":
             rows.extend(_bench_data_plane(server, n_workers))
+    if runtime == "process":
+        rows.extend(_bench_dispatch(n_workers))
     rows.extend(_bench_spill(runtime, n_workers))
     rows.extend(_bench_events(runtime, n_workers,
                               n_graphs=max(3, n_graphs),
@@ -280,7 +319,10 @@ def main(argv=None) -> int:
                               "n_graphs": args.n_graphs,
                               "n_tasks": args.n_tasks,
                               "bench": "client"})
-    return 0
+    failed = [r for r in rows if "GATE-FAIL" in str(r[2])]
+    for name, _, detail in failed:
+        print(f"GATE FAILED: {name}: {detail}", file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -154,6 +154,38 @@ def _explore_case(server: str):
     return out
 
 
+def _scale_case(driver: str):
+    """Control-plane scale harness under the watchdog: a small
+    pipelined zero-worker sweep point per driver, batched vs per-frame.
+    Asserts the batch envelope actually coalesced frames and that the
+    dispatch-capacity win is present (loose 1.5x bound here; the
+    2x gate proper lives in benchmarks/bench_scale.py)."""
+    import scale_harness as sh
+
+    graphs = sh.make_epochs(2, 200)
+    on = sh.measure_process(graphs, driver=driver, batching=True,
+                            n_workers=8, timeout=45.0)
+    off = sh.measure_process(graphs, driver=driver, batching=False,
+                             n_workers=8, timeout=45.0)
+    if not on["frames_coalesced"]:
+        raise AssertionError("batch envelope never coalesced a frame")
+    if on["n_frames_sent"] >= off["n_frames_sent"]:
+        raise AssertionError(
+            f"batching sent no fewer frames: {on['n_frames_sent']} vs "
+            f"{off['n_frames_sent']}")
+    cap = off["dispatch_ns_per_task"] / max(on["dispatch_ns_per_task"],
+                                            1e-9)
+    if cap < 1.5:
+        raise AssertionError(
+            f"dispatch capacity ratio {cap:.2f} < 1.5 "
+            f"(batched={on['dispatch_ns_per_task']} "
+            f"perframe={off['dispatch_ns_per_task']} ns/task)")
+    r = types.SimpleNamespace(timed_out=False, n_tasks=on["n_tasks"])
+    r.detail = (f"capx={cap:.1f} sends={on['n_frames_sent']}/"
+                f"{off['n_frames_sent']} tps={on['tasks_per_sec']:.0f}")
+    return r
+
+
 def _analysis_case():
     """The static invariant checker must report zero findings — run in
     a subprocess (same interpreter, repo root as --root) so the smoke
@@ -224,6 +256,8 @@ def _cases():
         yield (f"events/{server}", lambda s=server: _events_case(s))
     for server in ("dask", "rsds"):
         yield (f"explore/{server}", lambda s=server: _explore_case(s))
+    for driver in ("selector", "asyncio"):
+        yield (f"scale/{driver}", lambda d=driver: _scale_case(d))
 
 
 def _run_case(name, fn) -> tuple[bool, str]:

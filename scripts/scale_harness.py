@@ -1,0 +1,257 @@
+"""Trace-driven scale harness: find the runtime's knee.
+
+Drives the REAL ``ServerCore`` + process drivers with zero-cost workers
+at increasing worker counts and measures control-plane throughput —
+end-to-end tasks/sec and dispatch capacity (``1e9 /
+dispatch_ns_per_task``) — with the batch envelope on (``batching=True``,
+the default) and off (``batching=False``, the strictly per-frame send
+discipline of the pre-batching control plane).  Three trace sources:
+
+* ``synthetic`` — high-fan-out merge epochs (N independent leaves → one
+  sink), submitted pipelined so every epoch is in flight at once and the
+  control plane, not the client, is the bottleneck;
+* ``replay``    — reconstruct per-epoch task counts from a recorded
+  JSONL event log (the ``epoch-open`` events of docs/events.md) and
+  replay the same epoch shape through the live runtime;
+* ``sim``       — hundreds-to-thousands of virtual workers through the
+  virtual-time :class:`~repro.core.simulator.Simulator` (real reactor
+  cost, no transport), for the far end of the sweep that no container
+  can host as actual processes.
+
+The *knee* is the worker count past which adding workers stops buying
+throughput (marginal gain under 5 %): the point where the runtime — not
+the resource pool — is the bottleneck, which is the paper's central
+object of study.
+
+Usage::
+
+    PYTHONPATH=src python scripts/scale_harness.py --mode synthetic
+    PYTHONPATH=src python scripts/scale_harness.py --mode replay \
+        --trace trace-dask.jsonl
+    PYTHONPATH=src python scripts/scale_harness.py --mode sim \
+        --workers 24,96,384,1512
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import benchgraphs
+from repro.core.client import Cluster
+
+DRIVERS = ("selector", "asyncio")
+
+
+# ---------------------------------------------------------------------------
+# trace sources
+# ---------------------------------------------------------------------------
+
+def make_epochs(n_epochs: int, n_tasks: int, seed: int = 0) -> list:
+    """Synthetic high-fan-out trace: ``n_epochs`` merge graphs
+    (``n_tasks`` independent leaves feeding one sink)."""
+    return [benchgraphs.merge(n_tasks, seed=seed + i)
+            for i in range(n_epochs)]
+
+
+def epochs_from_trace(path: str, cap: int | None = None) -> list:
+    """Rebuild the epoch shape of a recorded run: one merge graph per
+    ``epoch-open`` event, sized to the recorded ``n_tasks`` (the log
+    carries counts and timing, not the dependency structure — the
+    high-fan-out shape is the control-plane-saturating stand-in)."""
+    sizes = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            if ev.get("type") == "epoch-open":
+                sizes.append(max(int(ev["n_tasks"]) - 1, 1))
+    if not sizes:
+        raise SystemExit(f"{path}: no epoch-open events found")
+    if cap:
+        sizes = sizes[:cap]
+    return [benchgraphs.merge(n, seed=i) for i, n in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def measure_process(graphs, *, driver: str, batching: bool,
+                    n_workers: int, server: str = "dask",
+                    transport: str = "socket",
+                    timeout: float = 180.0) -> dict:
+    """Replay ``graphs`` as pipelined epochs on a warm cluster and
+    return control-plane throughput numbers.
+
+    One warmup epoch (same size as the first trace epoch) runs before
+    the clock starts, so pool startup and codec warmup stay out of the
+    window; then every epoch is submitted before any result is awaited,
+    keeping the outbox full — the shape the batch envelope exists for.
+    """
+    n_total = sum(g.n_tasks for g in graphs)
+    warm = benchgraphs.merge(max(graphs[0].n_tasks - 1, 1), seed=10_999)
+    with Cluster(server=server, runtime="process", n_workers=n_workers,
+                 driver=driver, transport=transport, start_method="fork",
+                 zero_worker=True, simulate_durations=False,
+                 batching=batching, timeout=timeout) as c:
+        c.client.submit_graph(warm).result(timeout)
+        t0 = time.perf_counter()
+        futs = [c.client.submit_graph(g) for g in graphs]
+        for f in futs:
+            f.result(timeout)
+        wall = time.perf_counter() - t0
+        st = c.runtime.run_stats()
+    dispatch_ns = float(st["dispatch_ns_per_task"])
+    return {
+        "driver": driver, "server": server, "n_workers": n_workers,
+        "batching": batching, "n_tasks": n_total, "wall_s": round(wall, 4),
+        "tasks_per_sec": round(n_total / wall, 1),
+        "dispatch_ns_per_task": dispatch_ns,
+        "dispatch_tasks_per_sec": round(1e9 / max(dispatch_ns, 1e-9), 1),
+        "n_frames_sent": st["n_frames_sent"],
+        "frames_coalesced": st["frames_coalesced"],
+    }
+
+
+def measure_sim(n_workers: int, n_tasks: int, server: str = "dask") -> dict:
+    """Virtual-time sweep point: zero-worker simulation where the server
+    cost is real measured wall time (simulator contract), so tasks/sec
+    saturates exactly where the runtime does."""
+    from repro.core.simulator import simulate
+    g = benchgraphs.merge(n_tasks)
+    r = simulate(g, server=server, scheduler="ws", n_workers=n_workers,
+                 zero_worker=True)
+    tps = r.n_tasks / max(r.makespan, 1e-9)
+    return {"server": server, "n_workers": n_workers,
+            "n_tasks": r.n_tasks, "makespan_s": round(r.makespan, 4),
+            "server_busy_s": round(r.server_busy, 4),
+            "tasks_per_sec": round(tps, 1),
+            "timed_out": r.timed_out}
+
+
+# ---------------------------------------------------------------------------
+# knee detection + chart
+# ---------------------------------------------------------------------------
+
+def find_knee(points: list[tuple[int, float]],
+              gain: float = 0.05) -> int:
+    """Smallest worker count past which throughput never again improves
+    by more than ``gain`` (default 5 %): the runtime's saturation point.
+    ``points`` is ``[(n_workers, tasks_per_sec), ...]`` sorted by
+    worker count."""
+    if not points:
+        return 0
+    knee = points[0][0]
+    best = points[0][1]
+    for n, tps in points[1:]:
+        if tps > best * (1.0 + gain):
+            knee = n
+        best = max(best, tps)
+    return knee
+
+
+def ascii_chart(points: list[tuple[int, float]], width: int = 48,
+                label: str = "tasks/sec") -> str:
+    """Terminal-friendly knee chart (also saved as a CI artifact)."""
+    if not points:
+        return "(no points)"
+    top = max(tps for _, tps in points) or 1.0
+    knee = find_knee(points)
+    lines = [f"  workers  {label}"]
+    for n, tps in points:
+        bar = "#" * max(int(width * tps / top), 1)
+        mark = "  <- knee" if n == knee else ""
+        lines.append(f"  {n:>7}  {tps:>10.0f} {bar}{mark}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _sweep_process(graphs, worker_counts, drivers) -> list[dict]:
+    out = []
+    for driver in drivers:
+        for nw in worker_counts:
+            for batching in (True, False):
+                m = measure_process(graphs, driver=driver,
+                                    batching=batching, n_workers=nw)
+                out.append(m)
+                print(f"  {driver:>8} w={nw:<3} "
+                      f"{'batched ' if batching else 'perframe'} "
+                      f"{m['tasks_per_sec']:>9.0f} t/s  "
+                      f"dispatch={m['dispatch_ns_per_task']:.0f} ns/task  "
+                      f"sends={m['n_frames_sent']}", flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="synthetic",
+                    choices=("synthetic", "replay", "sim"))
+    ap.add_argument("--trace", default=None,
+                    help="JSONL event log for --mode replay")
+    ap.add_argument("--drivers", default=",".join(DRIVERS))
+    ap.add_argument("--workers", default=None,
+                    help="comma-separated worker counts "
+                         "(default 4,8,16 process / 24,96,384,1512 sim)")
+    ap.add_argument("--n-epochs", type=int, default=4)
+    ap.add_argument("--n-tasks", type=int, default=1000)
+    ap.add_argument("--max-epochs", type=int, default=8,
+                    help="cap on replayed epochs from a long trace")
+    ap.add_argument("--out", default=None,
+                    help="write the sweep as <out>.json")
+    args = ap.parse_args(argv)
+
+    drivers = [d for d in args.drivers.split(",") if d]
+    results: list[dict] = []
+    chart = ""
+
+    if args.mode == "sim":
+        counts = [int(w) for w in
+                  (args.workers or "24,96,384,1512").split(",")]
+        for server in ("dask", "rsds"):
+            pts = []
+            for nw in counts:
+                m = measure_sim(nw, args.n_tasks, server=server)
+                results.append(m)
+                pts.append((nw, m["tasks_per_sec"]))
+                print(f"  sim/{server} w={nw:<5} "
+                      f"{m['tasks_per_sec']:>10.0f} t/s  "
+                      f"makespan={m['makespan_s']}s", flush=True)
+            chart += (f"\nsim/{server} (virtual workers, real server "
+                      f"cost):\n{ascii_chart(pts)}\n"
+                      f"knee: {find_knee(pts)} workers\n")
+    else:
+        if args.mode == "replay":
+            if not args.trace:
+                ap.error("--mode replay requires --trace")
+            graphs = epochs_from_trace(args.trace, cap=args.max_epochs)
+            print(f"replaying {len(graphs)} epochs from {args.trace} "
+                  f"({sum(g.n_tasks for g in graphs)} tasks)")
+        else:
+            graphs = make_epochs(args.n_epochs, args.n_tasks)
+        counts = [int(w) for w in (args.workers or "4,8,16").split(",")]
+        results = _sweep_process(graphs, counts, drivers)
+        for driver in drivers:
+            pts = sorted((m["n_workers"], m["tasks_per_sec"])
+                         for m in results
+                         if m["driver"] == driver and m["batching"])
+            chart += (f"\n{driver} (batched):\n{ascii_chart(pts)}\n"
+                      f"knee: {find_knee(pts)} workers\n")
+
+    print(chart)
+    if args.out:
+        with open(f"{args.out}.json", "w") as fh:
+            json.dump({"mode": args.mode, "results": results,
+                       "chart": chart}, fh, indent=1)
+        print(f"wrote {args.out}.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,6 +46,16 @@ it via ``take_usage()`` after decode and folds it into its per-worker
 memory ledgers.  ``compact`` frames broadcast the released-tid prefix
 base so long-lived workers shed task-table and store rows in step with
 the server's compaction.
+
+The high-volume control plane adds a ``batch`` envelope to both codecs
+(``encode_batch``): already-encoded frames destined for the same worker
+within one server-loop iteration are coalesced into a single transport
+send (one syscall, one length prefix) — the Dask wire keeps its
+per-message msgpack cost on every sub-frame (only the sends are
+coalesced, mirroring dask.distributed's BatchedSend), the static wire
+concatenates fixed-layout sub-frames.  ``frame_event`` expands a
+decoded worker->server batch into its constituent events, so the
+server core never sees the envelope.
 """
 from __future__ import annotations
 
@@ -107,6 +117,11 @@ OP_DATA_ADDR = 12    # worker -> server: my data-plane listener address
 OP_STATS = 13        # worker -> server: p2p transfer-bytes delta
 OP_COMPACT = 14      # server -> worker: tid prefix below base compacted
 #                      (drop local task-table/store rows for good)
+OP_BATCH = 15        # server -> worker: coalesced control sub-frames
+#                      (high-volume batching: one transport send carries
+#                      many logical frames; workers send them too when
+#                      the runtime's batching knob is on, and
+#                      frame_event expands them server-side)
 
 _NO_RESULT = object()   # worker-side marker: task produced no value
 
@@ -223,8 +238,10 @@ class DaskWire(_ByteCounters):
         return frames
 
     def encode_release(self, tids: Iterable[int]) -> list[bytes]:
-        """Per-key release messages (Dask frees keys one message each)."""
-        return [pack({"op": OP_RELEASE, "key": int(t)}) for t in tids]
+        """One keys-list frame, like retract/gather.  Dask historically
+        freed keys one message each; the high-volume control plane
+        coalesces the whole release set into a single frame."""
+        return [pack({"op": OP_RELEASE, "keys": [int(t) for t in tids]})]
 
     def encode_gather(self, tids: Iterable[int]) -> list[bytes]:
         return [pack({"op": OP_GATHER, "keys": [int(t) for t in tids]})]
@@ -273,6 +290,14 @@ class DaskWire(_ByteCounters):
             m["usage"] = [int(x) for x in usage]
         return [pack(m)]
 
+    def encode_batch(self, frames: Sequence[bytes]) -> list[bytes]:
+        """Coalesce already-encoded frames into ONE transport send.
+        Sub-frames stay individually msgpack'd — the per-message
+        serialization cost profile is preserved; only the transport
+        sends are coalesced (Dask's BatchedSend shape)."""
+        return [pack({"op": OP_BATCH, "frames": [bytes(f)
+                                                 for f in frames]})]
+
     def decode(self, raw: bytes):
         """-> (op, records, payloads) with one record per frame.  For
         OP_COMPUTE the third slot is an *extras* dict with optional
@@ -315,7 +340,7 @@ class DaskWire(_ByteCounters):
                 payloads = {m["key"]: pickle.loads(m["fn"])}
             return op, [(m["key"], m["duration"])], payloads
         if op == OP_RELEASE:
-            return op, [m["key"]], None
+            return op, list(m["keys"]), None
         if op == OP_GATHER:
             return op, list(m["keys"]), None
         if op in (OP_GATHER_REPLY, OP_FETCH_REPLY):
@@ -337,6 +362,11 @@ class DaskWire(_ByteCounters):
             if "usage" in m:
                 self._last_usage = tuple(int(x) for x in m["usage"])
             return op, [(m["p2p_bytes"], m["fetches"])], None
+        if op == OP_BATCH:
+            # records are the decoded sub-triples, in send order; the
+            # usage side channel ends up holding the LAST sub-frame's
+            # record (a batch piggybacks usage on its last message)
+            return op, [self.decode(f) for f in m["frames"]], None
         return op, [], None
 
 
@@ -365,6 +395,7 @@ class StaticWire(_ByteCounters):
     _RETRACT = struct.Struct("<q")
     _STATS = struct.Struct("<qq")
     _USAGE = struct.Struct("<qqqqqq")
+    _SUB = struct.Struct("<I")      # batch sub-frame length prefix
 
     def encode_compute_batch(self, items: Sequence[tuple[int, float]],
                              payloads: dict[int, Any] | None = None,
@@ -483,9 +514,25 @@ class StaticWire(_ByteCounters):
         return [self._HDR.pack(OP_STATS, 2 if usage is not None else 0, 1)
                 + head + body]
 
+    def encode_batch(self, frames: Sequence[bytes]) -> list[bytes]:
+        """Coalesce already-encoded static frames into ONE transport
+        send: header (count = sub-frame count) + length-prefixed
+        sub-frames — fixed-record layout, no codec cost beyond the
+        length prefixes."""
+        body = b"".join(self._SUB.pack(len(f)) + f for f in frames)
+        return [self._HDR.pack(OP_BATCH, 0, len(frames)) + body]
+
     def decode(self, raw: bytes):
         op, has_blob, count = self._HDR.unpack_from(raw)
         off = self._HDR.size
+        if op == OP_BATCH:
+            recs = []
+            for _ in range(count):
+                (n,) = self._SUB.unpack_from(raw, off)
+                off += self._SUB.size
+                recs.append(self.decode(raw[off:off + n]))
+                off += n
+            return op, recs, None
         if has_blob & 2:        # fixed-layout usage record (finished/stats)
             self._last_usage = self._USAGE.unpack_from(raw, off)
             off += self._USAGE.size
@@ -557,4 +604,12 @@ def frame_event(op: int, wid: int, recs, payloads):
         return ("data-addr", int(recs[0]), tuple(payloads))
     if op == OP_STATS:
         return ("stats", recs)
+    if op == OP_BATCH:
+        # a batch's records are decoded sub-triples: normalize each and
+        # hand back a ("batch", [events]) envelope the driver expands —
+        # ServerCore._process_events only ever sees the flat vocabulary
+        evs = [frame_event(sub_op, wid, sub_recs, sub_payloads)
+               for sub_op, sub_recs, sub_payloads in recs]
+        evs = [e for e in evs if e is not None]
+        return ("batch", evs) if evs else None
     return None

@@ -200,7 +200,8 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                  zero_worker: bool, simulate_durations: bool,
                  tasks_table, cleanup_fds, p2p: bool = False,
                  memory_limit: int | None = None,
-                 spill_dir: str | None = None) -> None:
+                 spill_dir: str | None = None,
+                 batching: bool = True) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
     finished frames.  Mirrors the paper's one-thread-per-worker setup —
     and is identical under every server driver (the architecture axis is
@@ -320,22 +321,77 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         # (finished batch preferred; stats otherwise) when it changed
         usage = store.usage()
         new_u = usage if usage != sent_usage[0] else None
+        frames: list[bytes] = []
         if out:
-            for frame in wire.encode_finished_batch(wid, out, new_u):
-                ep.send(frame)
+            frames.extend(wire.encode_finished_batch(wid, out, new_u))
             out.clear()
             if new_u is not None:
                 sent_usage[0] = usage
                 new_u = None
         if xfer["bytes"] > xfer["bytes_sent"] or new_u is not None:
-            for frame in wire.encode_stats(
-                    xfer["bytes"] - xfer["bytes_sent"],
-                    xfer["fetches"] - xfer["fetches_sent"], new_u):
-                ep.send(frame)
+            frames.extend(wire.encode_stats(
+                xfer["bytes"] - xfer["bytes_sent"],
+                xfer["fetches"] - xfer["fetches_sent"], new_u))
             if new_u is not None:
                 sent_usage[0] = usage
             xfer["bytes_sent"] = xfer["bytes"]
             xfer["fetches_sent"] = xfer["fetches"]
+        if batching and len(frames) > 1:
+            # one transport send per flush: frame_event expands the
+            # envelope server-side, the usage side channel still ends up
+            # on the batch's LAST sub-frame (piggyback contract)
+            frames = wire.encode_batch(frames)
+        for frame in frames:
+            ep.send(frame)
+
+    def handle(op: int, recs, payloads) -> None:
+        nonlocal alive
+        if op == msg.OP_BATCH:
+            # recs are the decoded sub-triples in send order: apply each
+            # as if it had arrived as its own frame
+            for sub_op, sub_recs, sub_payloads in recs:
+                handle(sub_op, sub_recs, sub_payloads)
+        elif op == msg.OP_COMPUTE:
+            extra = payloads or {}
+            data = extra.get("data") or {}
+            deps = extra.get("deps") or {}
+            hints = extra.get("hints") or {}
+            for tid, dur in recs:
+                pending.append((tid, dur, data.get(tid),
+                                deps.get(tid), hints.get(tid)))
+        elif op == msg.OP_UPDATE_GRAPH:
+            if payloads:
+                table.update(payloads)
+        elif op == msg.OP_RELEASE:
+            for tid in recs:
+                store.discard(int(tid))      # both tiers + spill file
+        elif op == msg.OP_GATHER:
+            present, absent = {}, []
+            for t in recs:
+                t = int(t)
+                v = store.get(t, _MISS)      # unspills on demand
+                if v is not _MISS:
+                    present[t] = v
+                else:
+                    absent.append(t)
+            for frame in wire.encode_gather_reply(present, absent):
+                ep.send(frame)
+        elif op == msg.OP_RETRACT:
+            retracted.update(int(t) for t in recs)
+        elif op == msg.OP_COMPACT:
+            # the server compacted the tid prefix for good: shed the
+            # local task table (fn/args pinned per tid), retraction
+            # markers and any stray store rows below the base, so a
+            # long-lived worker's footprint tracks the live window
+            base = int(recs[0])
+            for t in [t for t in table if t < base]:
+                del table[t]
+            retracted.difference_update(
+                [t for t in retracted if t < base])
+            for t in [t for t in store.keys() if t < base]:
+                store.discard(t)
+        elif op == msg.OP_SHUTDOWN:
+            alive = False
 
     while alive or pending:
         block = alive and not pending
@@ -351,46 +407,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
             if raw is None:
                 break
             op, recs, payloads = wire.decode(raw)
-            if op == msg.OP_COMPUTE:
-                extra = payloads or {}
-                data = extra.get("data") or {}
-                deps = extra.get("deps") or {}
-                hints = extra.get("hints") or {}
-                for tid, dur in recs:
-                    pending.append((tid, dur, data.get(tid),
-                                    deps.get(tid), hints.get(tid)))
-            elif op == msg.OP_UPDATE_GRAPH:
-                if payloads:
-                    table.update(payloads)
-            elif op == msg.OP_RELEASE:
-                for tid in recs:
-                    store.discard(int(tid))      # both tiers + spill file
-            elif op == msg.OP_GATHER:
-                present, absent = {}, []
-                for t in recs:
-                    t = int(t)
-                    v = store.get(t, _MISS)      # unspills on demand
-                    if v is not _MISS:
-                        present[t] = v
-                    else:
-                        absent.append(t)
-                for frame in wire.encode_gather_reply(present, absent):
-                    ep.send(frame)
-            elif op == msg.OP_RETRACT:
-                retracted.update(int(t) for t in recs)
-            elif op == msg.OP_COMPACT:
-                # the server compacted the tid prefix for good: shed the
-                # local task table (fn/args pinned per tid), retraction
-                # markers and any stray store rows below the base, so a
-                # long-lived worker's footprint tracks the live window
-                base = int(recs[0])
-                for t in [t for t in table if t < base]:
-                    del table[t]
-                retracted = {t for t in retracted if t >= base}
-                for t in [t for t in store.keys() if t < base]:
-                    store.discard(t)
-            elif op == msg.OP_SHUTDOWN:
-                alive = False
+            handle(op, recs, payloads)
             timeout = 0
         if not pending:
             if not alive:
@@ -422,9 +439,12 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         # p2p: results stay in the worker cache; the finished frame is a
         # pure completion event (the server gathers on demand)
         out.append((tid, msg._NO_RESULT if p2p else result))
-        # dask wire is per-message anyway; for the static wire, batch up
-        # completions while more work is queued (RSDS batching)
-        if not wire.batched or not pending or len(out) >= 64:
+        # accumulate completions while more work is queued: the static
+        # wire batches natively (RSDS), the dask wire rides the batch
+        # envelope when the batching knob is on (BatchedSend); with both
+        # off the dask wire stays strictly per-message
+        if (not wire.batched and not batching) or not pending \
+                or len(out) >= 64:
             flush()
     flush()
     if listener is not None:
@@ -449,11 +469,19 @@ class _ProcessDriver(Driver):
     def __init__(self, *, transport: str = "pipe",
                  start_method: str | None = None,
                  zero_worker: bool = False,
-                 simulate_durations: bool = True):
+                 simulate_durations: bool = True,
+                 batching: bool = True):
         self.transport_kind = transport
         self.start_method = start_method
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
+        # high-volume control plane: frames queued during one poll
+        # iteration are coalesced into one batch envelope per worker at
+        # flush_sends() (called by the core at iteration boundaries)
+        self.batching = batching
+        self._outbox: dict[int, list[bytes]] = {}
+        self.n_frames_sent = 0
+        self.frames_coalesced = 0
         self.wire = None
         self.procs: list = []
         self._tp = None
@@ -496,7 +524,8 @@ class _ProcessDriver(Driver):
                           core._tasks_table or None,
                           self._tp.child_cleanup(wid)
                           if ctx_name == "fork" else [],
-                          core.p2p, core.memory_limit, core.spill_dir),
+                          core.p2p, core.memory_limit, core.spill_dir,
+                          self.batching),
                     daemon=True)
                 p.start()
                 self.procs.append(p)
@@ -575,11 +604,38 @@ class _ProcessDriver(Driver):
     # -- sends ----------------------------------------------------------
 
     def _send_frames(self, wid: int, frames) -> None:
+        if self.batching:
+            # defer: the outbox is flushed once per loop iteration so
+            # every frame queued toward one worker shares one send
+            self._outbox.setdefault(wid, []).extend(frames)
+            return
         core = self.core
         for frame in frames:
             core.wire_bytes += len(frame)
             core.wire_frames += 1
+            self.n_frames_sent += 1
             self._tp.send(wid, frame)
+
+    def flush_sends(self) -> None:
+        if not self._outbox:
+            return
+        core = self.core
+        dead = core.dead
+        for wid, frames in self._outbox.items():
+            # a worker declared dead between queueing and flush gets
+            # nothing (its tasks were already rerouted)
+            if not frames or wid in dead:
+                continue
+            if len(frames) > 1:
+                self.frames_coalesced += len(frames)
+                frames = core._charge_codec(self.wire.encode_batch,
+                                            frames)
+            for frame in frames:
+                core.wire_bytes += len(frame)
+                core.wire_frames += 1
+                self.n_frames_sent += 1
+                self._tp.send(wid, frame)
+        self._outbox.clear()
 
     def send_compute(self, wid: int, items, data=None, deps=None,
                      hints=None) -> None:
@@ -640,7 +696,12 @@ class _ProcessDriver(Driver):
                 continue      # stale frame from a failed worker
             ev = msg.frame_event(op, wid, recs, payloads)
             if ev is not None:
-                out.append(ev)
+                if ev[0] == "batch":
+                    # expand the worker's coalesced envelope: the core
+                    # only ever sees ordinary protocol events
+                    out.extend(ev[1])
+                else:
+                    out.append(ev)
             usage = self.wire.take_usage()
             if usage is not None:
                 out.append(("usage", wid, usage))
@@ -651,6 +712,7 @@ class _ProcessDriver(Driver):
     def finalize(self, force: bool) -> None:
         if force or self._tp is None:
             return
+        self.flush_sends()      # nothing queued may outlive the loop
         bye = self.wire.encode_shutdown()
         for wid in range(self.core.n_workers):
             if wid not in self.core.dead:
@@ -696,6 +758,9 @@ class _ProcessDriver(Driver):
                     p2p_bytes=core.p2p_bytes,
                     gather_bytes=core.gather_bytes,
                     p2p_fetches=core.n_p2p_fetches,
+                    batching=self.batching,
+                    n_frames_sent=self.n_frames_sent,
+                    frames_coalesced=self.frames_coalesced,
                     server_driver=self.name)
 
 
@@ -763,6 +828,7 @@ class AsyncioDriver(_ProcessDriver):
     async def _a_finalize(self, force: bool) -> None:
         if force:
             return
+        self.flush_sends()      # nothing queued may outlive the loop
         bye = self.wire.encode_shutdown()
         for wid in range(self.core.n_workers):
             if wid not in self.core.dead:
@@ -911,7 +977,7 @@ class ProcessRuntime(ServerCore):
                  simulate_durations: bool = True,
                  balance_interval: float = 0.05, timeout: float = 300.0,
                  start_method: str | None = None, p2p: bool = True,
-                 driver: str = "selector",
+                 driver: str = "selector", batching: bool = True,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
                  compact_threshold: int | None = 8192, events=None):
@@ -927,7 +993,8 @@ class ProcessRuntime(ServerCore):
         drv = _PROCESS_DRIVERS[driver](
             transport=transport, start_method=start_method,
             zero_worker=zero_worker,
-            simulate_durations=simulate_durations)
+            simulate_durations=simulate_durations,
+            batching=batching)
         # memory_limit bounds each worker PROCESS's store; spilling and
         # unspilling happen worker-side and are reported back on
         # finished/stats frames (the server's ledger + meters)
@@ -973,8 +1040,12 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     ``transport="pipe"|"socket"``, ``start_method``, ``p2p`` (default
     True: dependency values move worker-to-worker over who_has hints +
     direct fetch; False: every payload is relayed through the server),
-    and ``driver="selector"|"asyncio"|"uvloop"`` (the server's
-    event-loop architecture; uvloop needs the optional dependency).
+    ``driver="selector"|"asyncio"|"uvloop"`` (the server's
+    event-loop architecture; uvloop needs the optional dependency),
+    and ``batching`` (default True: control frames queued toward one
+    worker within a poll iteration coalesce into one batch envelope —
+    the high-volume control plane; False restores strictly per-frame
+    sends, the pre-batching cost profile).
     ``server="selector"|"asyncio"|"uvloop"`` is accepted as shorthand
     for the RSDS wire on that driver (forces the process runtime) — the
     paper's server-architecture axis in one kwarg.

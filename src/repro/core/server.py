@@ -89,6 +89,14 @@ class EpochStats:
     spill_bytes1: int = 0
     unspill_bytes0: int = 0        # cumulative unspill-from-disk snapshots
     unspill_bytes1: int = 0
+    frames_sent0: int = 0          # transport-send snapshots (outbox)
+    frames_sent1: int = 0
+    frames_coalesced0: int = 0     # sub-frames folded into batch envelopes
+    frames_coalesced1: int = 0
+    dispatch_s0: float = 0.0       # cumulative _dispatch wall-time
+    dispatch_s1: float = 0.0
+    n_dispatched0: int = 0         # cumulative dispatched-task count
+    n_dispatched1: int = 0
     error: BaseException | None = None
     done_evt: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -126,6 +134,25 @@ class EpochStats:
         flight."""
         return max(self.unspill_bytes1 - self.unspill_bytes0, 0)
 
+    @property
+    def frames_sent(self) -> int:
+        """Transport sends the driver performed while this epoch was in
+        flight (batch envelopes count once — the point of coalescing)."""
+        return max(self.frames_sent1 - self.frames_sent0, 0)
+
+    @property
+    def frames_coalesced(self) -> int:
+        """Logical control frames that rode inside batch envelopes while
+        this epoch was in flight (0 with the batching knob off)."""
+        return max(self.frames_coalesced1 - self.frames_coalesced0, 0)
+
+    @property
+    def dispatch_ns_per_task(self) -> float:
+        """Server-side dispatch cost per task over this epoch: wall time
+        spent inside ``_dispatch`` divided by tasks handed to workers."""
+        return (max(self.dispatch_s1 - self.dispatch_s0, 0.0) * 1e9
+                / max(self.n_dispatched1 - self.n_dispatched0, 1))
+
     def as_dict(self) -> dict:
         return {"eid": self.eid, "n_tasks": self.n_tasks,
                 "makespan": self.makespan,
@@ -134,6 +161,9 @@ class EpochStats:
                 "p2p_bytes": self.p2p_bytes,
                 "spill_bytes": self.spill_bytes,
                 "unspill_bytes": self.unspill_bytes,
+                "frames_sent": self.frames_sent,
+                "frames_coalesced": self.frames_coalesced,
+                "dispatch_ns_per_task": self.dispatch_ns_per_task,
                 "error": repr(self.error) if self.error else None}
 
 
@@ -179,6 +209,10 @@ class Driver:
     #: gather/update-graph/release half of the protocol is active).
     remote_results = False
     transport_kind = "inproc"
+    #: Outbox accounting (wire drivers override these as instance
+    #: counters; in-process drivers have no frames to count).
+    n_frames_sent = 0
+    frames_coalesced = 0
 
     def bind(self, core: "ServerCore") -> None:
         self.core = core
@@ -258,6 +292,14 @@ class Driver:
 
     def send_gather(self, wid: int, tids) -> None:
         pass
+
+    def flush_sends(self) -> None:
+        """Flush the per-worker outbox: wire drivers coalesce every frame
+        queued during this poll iteration into one batch envelope per
+        worker and hand them to the transport.  The core calls this at
+        the end of ``_bootstrap``/``_drain_control``/``_process_events``
+        so the outbox is always empty between loop iterations.
+        In-process drivers send nothing — no-op."""
 
     def broadcast_compact(self, base: int) -> None:
         """Tell live workers the tid prefix below ``base`` is compacted
@@ -344,6 +386,8 @@ class ServerCore:
         self.dead: set[int] = set()
         self.server_busy = 0.0
         self.codec_s = 0.0
+        self.dispatch_s = 0.0         # wall time inside _dispatch
+        self.n_dispatched = 0         # tasks handed to workers
         self.wire_bytes = 0
         self.wire_frames = 0
         self.relay_bytes = 0          # payload bytes relayed via server
@@ -426,6 +470,10 @@ class ServerCore:
         e.relay_bytes0 = self.relay_bytes
         e.p2p_bytes0 = self.p2p_bytes
         e.spill_bytes0, e.unspill_bytes0 = self._spill_totals()
+        e.frames_sent0 = self.driver.n_frames_sent
+        e.frames_coalesced0 = self.driver.frames_coalesced
+        e.dispatch_s0 = self.dispatch_s
+        e.n_dispatched0 = self.n_dispatched
         self._range_los.append(lo)
         self._range_epochs.append(e)
         ev = self.events
@@ -445,6 +493,10 @@ class ServerCore:
         e.relay_bytes1 = self.relay_bytes
         e.p2p_bytes1 = self.p2p_bytes
         e.spill_bytes1, e.unspill_bytes1 = self._spill_totals()
+        e.frames_sent1 = self.driver.n_frames_sent
+        e.frames_coalesced1 = self.driver.frames_coalesced
+        e.dispatch_s1 = self.dispatch_s
+        e.n_dispatched1 = self.n_dispatched
         ev = self.events
         if ev is not None:
             if e.t_ingest == 0.0:
@@ -847,6 +899,13 @@ class ServerCore:
         """Queue-account and send compute batches; reroutes assignments
         that hit a dead worker (may cascade through handle_worker_lost)."""
         pending = list(assignments)
+        if not pending:
+            return
+        t0 = time.perf_counter()
+        # hot path: hoist lookups out of the per-task loop — this runs
+        # once per dispatched task, the per-task cost the paper measures
+        dead = self.dead
+        queue_push = self.driver.queue_push
         while pending:
             durations = self.g.durations
             base = self.g.tid_base
@@ -854,8 +913,7 @@ class ServerCore:
             by_wid: dict[int, list] = {}
             ev = self.events
             for tid, wid in pending:
-                if wid in self.dead \
-                        or not self.driver.queue_push(wid, int(tid)):
+                if wid in dead or not queue_push(wid, int(tid)):
                     out = self._charge(self.reactor.handle_worker_lost,
                                        wid, [tid])
                     rerouted.extend(out)
@@ -866,7 +924,9 @@ class ServerCore:
                     (int(tid), float(durations[tid - base])))
             for wid, items in by_wid.items():
                 self._send_compute(wid, items)
+                self.n_dispatched += len(items)
             pending = rerouted
+        self.dispatch_s += time.perf_counter() - t0
 
     def _on_fetch_failed(self, wid: int, tid: int, missing) -> None:
         """A worker could not fetch ``tid``'s dependencies from the
@@ -1045,6 +1105,7 @@ class ServerCore:
             self._bind_epoch(e, 0, self.g.n_tasks)
         self._last_balance = time.perf_counter()
         self._dispatch(init)
+        self.driver.flush_sends()
 
     def _loop_tick(self) -> bool:
         """Once per iteration, before polling: stop/timeout/done checks
@@ -1088,6 +1149,7 @@ class ServerCore:
             elif kind == "stop":
                 self._stop_requested = True
         self.driver.drain_kills()
+        self.driver.flush_sends()
 
     def _process_events(self, events) -> None:
         hook = self.schedule_hook
@@ -1130,6 +1192,7 @@ class ServerCore:
             for wid in self.driver.sweep():
                 self._worker_lost(wid)
             self._do_balance()
+        self.driver.flush_sends()
 
     def _handle_finished(self, finished) -> None:
         ev = self.events
@@ -1329,6 +1392,8 @@ class ServerCore:
         stats["tasks_per_worker"] = dict(self._finished_by_worker)
         stats["n_events"] = (self.events.n_published
                              if self.events is not None else 0)
+        stats["dispatch_ns_per_task"] = round(
+            self.dispatch_s * 1e9 / max(self.n_dispatched, 1), 1)
         return stats
 
     def observe(self) -> dict:
@@ -1356,6 +1421,10 @@ class ServerCore:
             "n_finished": sum(self._finished_by_worker.values()),
             "n_steals": self.n_steals,
             "n_rehints": self.n_rehints,
+            "n_frames_sent": self.driver.n_frames_sent,
+            "frames_coalesced": self.driver.frames_coalesced,
+            "dispatch_ns_per_task": (self.dispatch_s * 1e9
+                                     / max(self.n_dispatched, 1)),
             "worker_mem": dict(self.worker_mem),
             "mem_pressured": sorted(self.mem_pressured),
             "memory_limit": self.memory_limit,

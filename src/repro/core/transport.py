@@ -166,6 +166,7 @@ class PipeTransport:
         self._rbufs: dict[int, bytearray] = {}
         self._sel = selectors.DefaultSelector()
         self._open: set[int] = set()
+        self._warmed: set[int] = set()   # wids with EVENT_WRITE armed
 
     # lifecycle ---------------------------------------------------------
     def worker_args(self, wid: int):
@@ -197,27 +198,53 @@ class PipeTransport:
     def send(self, wid: int, data: bytes) -> None:
         if wid not in self._open:
             return
+        self._writers[wid].buf += _LEN.pack(len(data)) + data
+        self._flush_writer(wid)
+
+    def _flush_writer(self, wid: int) -> None:
+        """Flush one writer and keep EVENT_WRITE interest in sync: armed
+        while bytes are parked, disarmed once drained.  Without the
+        arming, a buffered burst (a batch envelope past the pipe buffer)
+        only retries on read events or the poll timeout — and the
+        workers the burst is addressed to are idle, producing no read
+        events, so the buffer trickles out one timeout at a time."""
+        w = self._writers.get(wid)
+        if w is None:
+            return
         try:
-            self._writers[wid].write(_LEN.pack(len(data)) + data)
-        except (BrokenPipeError, OSError):
-            pass  # death is reported via the read side
+            done = w.flush()
+        except OSError:
+            done = True  # peer died; the read side reports it
+        wfd = self._s2w[wid][1]
+        if done and wid in self._warmed:
+            self._warmed.discard(wid)
+            try:
+                self._sel.unregister(wfd)
+            except (KeyError, ValueError, OSError):
+                pass
+        elif not done and wid not in self._warmed:
+            self._warmed.add(wid)
+            try:
+                self._sel.register(wfd, selectors.EVENT_WRITE, wid)
+            except (KeyError, ValueError, OSError):
+                pass
 
     def poll(self, timeout: float) -> list[tuple[int, bytes | None]]:
         """Flush pending sends, then gather complete inbound frames.
 
         Returns ``(wid, frame_bytes)`` entries; ``(wid, None)`` marks EOF
         (worker death)."""
-        for wid in list(self._open):
-            try:
-                self._writers[wid].flush()
-            except OSError:
-                pass  # peer died; the read side reports it
+        for wid in list(self._warmed):
+            self._flush_writer(wid)
         events: list[tuple[int, bytes | None]] = []
         if not self._open:
             time.sleep(min(timeout, 0.01))
             return events
-        for key, _ in self._sel.select(timeout):
+        for key, mask in self._sel.select(timeout):
             wid = key.data
+            if key.events & selectors.EVENT_WRITE:
+                self._flush_writer(wid)
+                continue
             buf = self._rbufs[wid]
             eof = False
             while True:
@@ -247,6 +274,12 @@ class PipeTransport:
             self._sel.unregister(self._w2s[wid][0])
         except (KeyError, ValueError):
             pass
+        if wid in self._warmed:
+            self._warmed.discard(wid)
+            try:
+                self._sel.unregister(self._s2w[wid][1])
+            except (KeyError, ValueError, OSError):
+                pass
         for fd in (self._w2s[wid][0], self._s2w[wid][1]):
             try:
                 os.close(fd)
@@ -290,6 +323,7 @@ class SocketTransport:
         self._rbufs: dict[int, bytearray] = {}
         self._sel = selectors.DefaultSelector()
         self._open: set[int] = set()
+        self._warmed: set[int] = set()   # wids with EVENT_WRITE armed
 
     def worker_args(self, wid: int):
         return ("socket", self.addr, wid)
@@ -316,23 +350,44 @@ class SocketTransport:
     def send(self, wid: int, data: bytes) -> None:
         if wid not in self._open:
             return
+        self._writers[wid].buf += _LEN.pack(len(data)) + data
+        self._flush_writer(wid)
+
+    def _flush_writer(self, wid: int) -> None:
+        """Flush one writer; arm EVENT_WRITE interest while bytes are
+        parked so ``select`` wakes the moment the socket drains (see
+        :meth:`PipeTransport._flush_writer`)."""
+        w = self._writers.get(wid)
+        if w is None:
+            return
         try:
-            self._writers[wid].write(_LEN.pack(len(data)) + data)
+            done = w.flush()
         except OSError:
-            pass
+            done = True  # death is reported via the read side
+        want = (selectors.EVENT_READ if done
+                else selectors.EVENT_READ | selectors.EVENT_WRITE)
+        armed = wid in self._warmed
+        if done is armed:  # interest out of sync with buffer state
+            (self._warmed.discard if done else self._warmed.add)(wid)
+            try:
+                self._sel.modify(self._conns[wid], want, wid)
+            except (KeyError, ValueError, OSError):
+                pass
 
     def poll(self, timeout: float) -> list[tuple[int, bytes | None]]:
-        for wid in list(self._open):
-            try:
-                self._writers[wid].flush()
-            except OSError:
-                pass
+        for wid in list(self._warmed):
+            self._flush_writer(wid)
         events: list[tuple[int, bytes | None]] = []
         if not self._open:
             time.sleep(min(timeout, 0.01))
             return events
-        for key, _ in self._sel.select(timeout):
+        for key, mask in self._sel.select(timeout):
             wid = key.data
+            if mask & selectors.EVENT_WRITE:
+                self._flush_writer(wid)
+                if wid not in self._open or not (
+                        mask & selectors.EVENT_READ):
+                    continue
             buf = self._rbufs[wid]
             eof = False
             while True:
@@ -356,6 +411,7 @@ class SocketTransport:
         if wid not in self._open:
             return
         self._open.discard(wid)
+        self._warmed.discard(wid)
         self._writers.pop(wid, None)
         self._rbufs.pop(wid, None)
         conn = self._conns.pop(wid)
@@ -396,9 +452,11 @@ class AsyncioTransport:
     via :meth:`a_start`, which returns the ``asyncio.Queue`` that the
     per-worker reader tasks feed with ``(wid, frame)`` tuples —
     ``(wid, None)`` marks EOF (worker death).  ``send`` writes
-    synchronously into the StreamWriter's buffer; :meth:`a_flush` awaits
-    the drains in one batch per loop iteration (the asyncio analogue of
-    :class:`_NBWriter`'s flush)."""
+    synchronously into the StreamWriter's buffer; :meth:`a_flush` spawns
+    one drainer task per backlogged worker (the asyncio analogue of
+    :class:`_NBWriter`'s flush) — drains are per-worker backpressure, so
+    awaiting them inline would let ONE slow reader stall dispatch to
+    every other worker."""
 
     def __init__(self, kind: str, n_workers: int):
         if kind not in ("pipe", "socket"):
@@ -412,6 +470,7 @@ class AsyncioTransport:
         # writer's); closed explicitly so fds never wait on cyclic GC
         self._rtransports: dict[int, asyncio.ReadTransport] = {}
         self._tasks: list = []
+        self._drainers: dict[int, asyncio.Task] = {}
         self._dirty: set[int] = set()
         self._open: set[int] = set()
         self._q: asyncio.Queue | None = None
@@ -514,19 +573,38 @@ class AsyncioTransport:
         self._dirty.add(wid)
 
     async def a_flush(self) -> None:
+        """Never awaits a peer inline.  StreamWriter.write already handed
+        the bytes to the loop (which pumps them as the fd drains);
+        ``drain()`` only applies producer backpressure, and that must be
+        per-worker — one drainer task per backlogged writer, so a full
+        pipe to a slow worker cannot stall sends to the rest."""
         for wid in list(self._dirty):
             self._dirty.discard(wid)
-            w = self._writers.get(wid)
-            if w is None:
-                continue
-            try:
-                await w.drain()
-            except (ConnectionError, OSError, RuntimeError):
-                pass  # peer died; the read side reports it
+            if wid in self._drainers or wid not in self._writers:
+                continue    # a drainer is already waiting on this fd
+            t = asyncio.get_running_loop().create_task(self._drain(wid))
+            self._drainers[wid] = t
+            t.add_done_callback(
+                lambda _t, wid=wid: self._drainers.pop(wid, None))
+        # yield once so writers with room complete their drains now and
+        # transient backlog does not accumulate drainer tasks
+        await asyncio.sleep(0)
+
+    async def _drain(self, wid: int) -> None:
+        w = self._writers.get(wid)
+        if w is None:
+            return
+        try:
+            await w.drain()
+        except (ConnectionError, OSError, RuntimeError):
+            pass  # peer died; the read side reports it
 
     def drop(self, wid: int) -> None:
         self._open.discard(wid)
         self._dirty.discard(wid)
+        t = self._drainers.pop(wid, None)
+        if t is not None:
+            t.cancel()      # a drain on a dead peer never completes
         w = self._writers.pop(wid, None)
         if w is not None:
             try:
@@ -547,14 +625,15 @@ class AsyncioTransport:
         return []
 
     async def a_close(self) -> None:
-        for t in self._tasks:
+        for t in list(self._drainers.values()) + self._tasks:
             t.cancel()
-        for t in self._tasks:
+        for t in list(self._drainers.values()) + self._tasks:
             try:
                 await t
             except (asyncio.CancelledError, Exception):
                 pass
         self._tasks = []
+        self._drainers.clear()
         for wid in set(self._writers) | set(self._rtransports):
             self.drop(wid)
         # transport.close() only *schedules* the fd close (call_soon);

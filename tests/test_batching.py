@@ -1,0 +1,334 @@
+"""High-volume control plane: batched frames + pipelined dispatch.
+
+The batch envelope (``OP_BATCH``) coalesces the control frames queued
+toward one worker within a poll iteration into ONE transport send, in
+both wire codecs — the dask wire keeps its per-message msgpack cost on
+the sub-frames (mirroring distributed's BatchedSend: fewer syscalls,
+same codec profile), the static wire concatenates fixed-layout
+sub-frames.  These tests pin:
+
+* batch round-trips in both codecs, including the usage-record
+  piggyback on the batch's LAST message;
+* ``frame_event`` normalization of batched frames (the core never sees
+  the envelope);
+* a parity matrix across selector/asyncio(/uvloop) x dask/rsds with
+  batching on: identical results, ``relay_bytes == 0`` on the p2p data
+  plane;
+* never-blocking dispatch: one slow reader cannot stall sends to other
+  workers (selector ``_NBWriter`` and asyncio per-worker drainers);
+* the new meters (``n_frames_sent``, ``frames_coalesced``,
+  ``dispatch_ns_per_task``) on RunResult.stats / EpochStats / observe().
+"""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import benchgraphs, messages as msg, run_graph
+from repro.core import transport as tp
+from repro.core.client import Cluster
+from repro.core.graph import Task, TaskGraph
+from repro.core.runtime import has_uvloop
+
+DRIVERS = ["selector", "asyncio"] + (["uvloop"] if has_uvloop() else [])
+SERVERS = ["dask", "rsds"]
+
+
+# ---------------------------------------------------------------------------
+# wire round-trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_cls", [msg.DaskWire, msg.StaticWire],
+                         ids=["dask", "rsds"])
+def test_batch_roundtrip_server_to_worker(wire_cls):
+    """A mixed server->worker batch decodes to the sub-triples in send
+    order on both codecs (the dask wire packs one message per task, the
+    static wire one record batch — the envelope preserves both)."""
+    w = wire_cls()
+    frames = []
+    frames += w.encode_compute_batch([(1, 0.5), (2, 0.25)], None,
+                                     lambda t: [])
+    frames += w.encode_retract([3])
+    frames += w.encode_release([4, 5])
+    frames += w.encode_gather([6])
+    frames += w.encode_compact(7)
+    (env,) = w.encode_batch(frames)          # ONE transport frame
+    op, recs, payloads = w.decode(env)
+    assert op == msg.OP_BATCH and payloads is None
+    ops = [r[0] for r in recs]
+    n_compute = 2 if not w.batched else 1    # per-message vs per-batch
+    assert ops == [msg.OP_COMPUTE] * n_compute + [
+        msg.OP_RETRACT, msg.OP_RELEASE, msg.OP_GATHER, msg.OP_COMPACT]
+    assert [t for sub in recs if sub[0] == msg.OP_COMPUTE
+            for t, _ in sub[1]] == [1, 2]
+    assert recs[-3][1] == [4, 5]             # release keys-list intact
+    assert recs[-1][1] == [7]                # compact base
+
+
+@pytest.mark.parametrize("wire_cls", [msg.DaskWire, msg.StaticWire],
+                         ids=["dask", "rsds"])
+def test_batch_usage_piggyback_and_frame_event(wire_cls):
+    """Worker->server: a finished+stats batch normalizes through
+    ``frame_event`` into the plain event vocabulary, and the usage
+    record piggybacked on the batch's LAST message survives exactly
+    once in the drain-on-read side channel."""
+    w = wire_cls()
+    usage = (100, 200, 10, 5, 2, 1)
+    frames = []
+    frames += w.encode_finished_batch(3, [(8, msg._NO_RESULT),
+                                          (9, msg._NO_RESULT)])
+    frames += w.encode_stats(4096, 2, usage)
+    (env,) = w.encode_batch(frames)
+    op, recs, payloads = w.decode(env)
+    ev = msg.frame_event(op, 3, recs, payloads)
+    assert ev[0] == "batch"
+    kinds = [e[0] for e in ev[1]]
+    assert kinds.count("finished") >= 1 and kinds[-1] == "stats"
+    fin = [(t, rw) for e in ev[1] if e[0] == "finished" for t, rw in e[1]]
+    assert fin == [(8, 3), (9, 3)]
+    assert w.take_usage() == usage           # drained exactly once
+    assert w.take_usage() is None
+
+
+def test_frame_event_batch_of_ignored_ops_is_none():
+    """A batch whose sub-frames are all server-ignored ops normalizes to
+    None, not to an empty envelope the core would choke on."""
+    w = msg.StaticWire()
+    frames = w.encode_release([1]) + w.encode_retract([2])
+    (env,) = w.encode_batch(frames)
+    op, recs, payloads = w.decode(env)
+    assert msg.frame_event(op, 0, recs, payloads) is None
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: batching on, every driver x both wires
+# ---------------------------------------------------------------------------
+
+def _leaf(v):
+    return v
+
+
+def _agg(*vals):
+    return sum(vals)
+
+
+def _fn_graph(n_leaves: int = 10) -> TaskGraph:
+    tasks = [Task(i, (), fn=_leaf, args=(i * i,)) for i in range(n_leaves)]
+    tasks.append(Task(n_leaves, tuple(range(n_leaves)), fn=_agg))
+    return TaskGraph(tasks, name="batch-parity")
+
+
+@pytest.mark.parametrize("server", SERVERS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_parity_matrix_batching_on(driver, server):
+    """Identical results with batching on, across every process driver
+    and both wires, on the p2p data plane (relay_bytes stays 0: the
+    batch envelope carries control frames, never payload relays)."""
+    g = _fn_graph()
+    want = {i: i * i for i in range(10)}
+    want[10] = sum(want.values())
+    r = run_graph(g, server=server, runtime="process", driver=driver,
+                  n_workers=3, timeout=60.0)
+    assert not r.timed_out
+    assert r.results == want
+    assert r.stats["batching"] is True
+    assert r.stats["relay_bytes"] == 0
+    assert r.stats["server_driver"] == driver
+
+
+@pytest.mark.parametrize("server", SERVERS)
+def test_batching_off_bit_identical_results(server):
+    """The batching knob changes the transport-frame count, not the
+    outcome: same results bit-for-bit, and on the dask wire an order of
+    magnitude fewer transport sends with the envelope on."""
+    import pickle
+
+    g = benchgraphs.merge(150)
+    on = run_graph(g, server=server, runtime="process", n_workers=3,
+                   zero_worker=True, batching=True, timeout=60.0)
+    off = run_graph(g, server=server, runtime="process", n_workers=3,
+                    zero_worker=True, batching=False, timeout=60.0)
+    assert not on.timed_out and not off.timed_out
+    assert pickle.dumps(on.results) == pickle.dumps(off.results)
+    assert on.stats["frames_coalesced"] > 0
+    assert off.stats["frames_coalesced"] == 0
+    assert on.stats["n_frames_sent"] < off.stats["n_frames_sent"]
+    if server == "dask":    # per-message wire: the win is dramatic
+        assert on.stats["n_frames_sent"] * 10 \
+            <= off.stats["n_frames_sent"]
+
+
+# ---------------------------------------------------------------------------
+# never-blocking dispatch: one slow reader must not stall the rest
+# ---------------------------------------------------------------------------
+
+_FLOOD = 32     # MB of frames queued toward the non-reading worker
+
+
+def test_selector_slow_reader_does_not_stall_dispatch():
+    """_NBWriter audit: flooding a worker that never reads buffers
+    server-side (no blocking send), and a frame to a healthy worker
+    still arrives while the flood is parked."""
+    tpx = tp.SocketTransport(2)
+    stop = threading.Event()
+    got = {}
+
+    def slow_worker():
+        ep = tp.make_worker_endpoint(tpx.worker_args(0))
+        stop.wait(30.0)                  # never reads
+        ep.close()
+
+    def live_worker():
+        ep = tp.make_worker_endpoint(tpx.worker_args(1))
+        got[1] = ep.recv(timeout=20.0)
+        ep.close()
+
+    threads = [threading.Thread(target=slow_worker, daemon=True),
+               threading.Thread(target=live_worker, daemon=True)]
+    for t in threads:
+        t.start()
+    try:
+        tpx.after_start()
+        big = b"x" * (1 << 20)
+        t0 = time.perf_counter()
+        for _ in range(_FLOOD):
+            tpx.send(0, big)             # kernel buffer fills; rest queues
+        sent_dt = time.perf_counter() - t0
+        tpx.send(1, b"hello-live")
+        deadline = time.perf_counter() + 10.0
+        while 1 not in got and time.perf_counter() < deadline:
+            tpx.poll(0.01)               # flush + read, selector style
+        assert sent_dt < 2.0             # sends buffered, never blocked
+        assert got.get(1) == b"hello-live"
+    finally:
+        stop.set()
+        tpx.close()
+        for t in threads:
+            t.join(timeout=5.0)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: tp.PipeTransport(1), lambda: tp.SocketTransport(1)],
+    ids=["pipe", "socket"])
+def test_selector_write_interest_drains_parked_burst(make):
+    """Write-interest arming regression: a burst past the kernel buffer
+    toward a reading-but-silent worker must drain as fast as the worker
+    consumes it.  Without EVENT_WRITE interest the selector only retried
+    buffered sends on read events or the poll timeout — and a worker
+    that is waiting for these very frames produces no read events, so
+    the burst trickled out one poll timeout per buffer-full."""
+    import os
+
+    tpx = make()
+    n_frames, chunk = 64, 1 << 16      # 4 MB total, 64 KB frames
+    got = []
+    done = threading.Event()
+    args = tpx.worker_args(0)
+    if args[0] == "pipe":
+        # in-process pipe test: after_start() closes the worker-side
+        # fds (fork-only design), so hold dups for the fake worker
+        args = (args[0], os.dup(args[1]), os.dup(args[2]))
+
+    def worker():
+        ep = tp.make_worker_endpoint(args)
+        for _ in range(n_frames):
+            got.append(len(ep.recv(timeout=20.0)))
+        done.set()
+        ep.close()
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    try:
+        tpx.after_start()
+        big = b"x" * chunk
+        for _ in range(n_frames):
+            tpx.send(0, big)          # far past the kernel buffer
+        t0 = time.perf_counter()
+        while not done.is_set() and time.perf_counter() - t0 < 10.0:
+            tpx.poll(0.5)             # long timeout: the trickle killer
+        dt = time.perf_counter() - t0
+        assert done.is_set(), f"worker got {len(got)}/{n_frames} frames"
+        # un-armed trickle needs ~one 0.5s timeout per buffer-full;
+        # armed, the whole burst moves in a handful of wakeups
+        assert dt < 5.0
+        assert got == [chunk] * n_frames
+    finally:
+        tpx.close()
+        th.join(timeout=5.0)
+
+
+def test_asyncio_slow_reader_does_not_stall_dispatch():
+    """a_flush regression: drains are per-worker backpressure.  With the
+    old inline ``await drain()`` a full pipe to worker 0 blocked the
+    flush — and with it dispatch to every other worker — forever."""
+    tpx = tp.AsyncioTransport("socket", 2)
+    stop = threading.Event()
+    got = {}
+    flush_dt = []
+
+    def slow_worker():
+        ep = tp.make_worker_endpoint(tpx.worker_args(0))
+        stop.wait(30.0)                  # never reads
+        ep.close()
+
+    def live_worker():
+        ep = tp.make_worker_endpoint(tpx.worker_args(1))
+        got[1] = ep.recv(timeout=20.0)
+        ep.close()
+
+    threads = [threading.Thread(target=slow_worker, daemon=True),
+               threading.Thread(target=live_worker, daemon=True)]
+    for t in threads:
+        t.start()
+
+    async def main():
+        await tpx.a_start()
+        big = b"x" * (1 << 20)
+        for _ in range(_FLOOD):
+            tpx.send(0, big)
+        t0 = time.perf_counter()
+        await tpx.a_flush()              # spawns a drainer; returns now
+        flush_dt.append(time.perf_counter() - t0)
+        tpx.send(1, b"hello-live")
+        await tpx.a_flush()
+        deadline = time.perf_counter() + 10.0
+        while 1 not in got and time.perf_counter() < deadline:
+            await asyncio.sleep(0.01)
+        stop.set()
+        await tpx.a_close()
+
+    try:
+        asyncio.run(main())
+        assert flush_dt[0] < 2.0         # did not await the full pipe
+        assert got.get(1) == b"hello-live"
+    finally:
+        stop.set()
+        tpx.close()
+        for t in threads:
+            t.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# meters
+# ---------------------------------------------------------------------------
+
+def test_batching_meters_on_every_surface():
+    with Cluster(server="rsds", runtime="process", n_workers=2,
+                 simulate_durations=False, timeout=60.0) as c:
+        c.client.submit_graph(benchgraphs.merge(100)).result(60.0)
+        obs = c.runtime.observe()
+        for k in ("n_frames_sent", "frames_coalesced",
+                  "dispatch_ns_per_task"):
+            assert k in obs, k
+        assert obs["n_frames_sent"] > 0
+        st = c.runtime.run_stats()
+        assert st["batching"] is True
+        assert st["n_frames_sent"] > 0
+        assert st["dispatch_ns_per_task"] > 0
+        e = c.runtime.epoch(0).as_dict()
+        for k in ("frames_sent", "frames_coalesced",
+                  "dispatch_ns_per_task"):
+            assert k in e, k
+        assert e["frames_sent"] >= 1
+        assert e["dispatch_ns_per_task"] > 0

@@ -106,12 +106,14 @@ def test_process_runtime_transports(transport):
 def test_process_dask_pays_per_message_codec():
     """The paper's codec asymmetry, measured on a real transport: the
     Dask-style server moves one frame per message, the RSDS-style server
-    a static frame per batch — far fewer frames and bytes."""
+    a static frame per batch — far fewer frames and bytes.  Run with
+    the high-volume batching knob OFF: this test pins the pre-batching
+    cost profile that the knob exists to preserve as a baseline."""
     g = benchgraphs.merge(500)
     rd = run_graph(g, server="dask", runtime="process", n_workers=4,
-                   zero_worker=True, timeout=60.0)
+                   zero_worker=True, batching=False, timeout=60.0)
     rr = run_graph(g, server="rsds", runtime="process", n_workers=4,
-                   zero_worker=True, timeout=60.0)
+                   zero_worker=True, batching=False, timeout=60.0)
     assert not rd.timed_out and not rr.timed_out
     # per-message: at least one frame in each direction per task
     assert rd.stats["wire_frames"] >= 2 * g.n_tasks

@@ -196,9 +196,13 @@ def test_run_result_and_epoch_stats_fields_unchanged():
                      "server_busy1", "relay_bytes0", "relay_bytes1",
                      "p2p_bytes0", "p2p_bytes1", "spill_bytes0",
                      "spill_bytes1", "unspill_bytes0", "unspill_bytes1",
+                     "frames_sent0", "frames_sent1", "frames_coalesced0",
+                     "frames_coalesced1", "dispatch_s0", "dispatch_s1",
+                     "n_dispatched0", "n_dispatched1",
                      "error", "done_evt"]
     for prop in ("makespan", "server_busy", "relay_bytes", "p2p_bytes",
-                 "spill_bytes", "unspill_bytes"):
+                 "spill_bytes", "unspill_bytes", "frames_sent",
+                 "frames_coalesced", "dispatch_ns_per_task"):
         assert isinstance(getattr(EpochStats, prop), property)
 
 

@@ -186,10 +186,11 @@ def test_data_plane_listener_and_peer_channel():
 
 def test_release_and_gather_wire_roundtrip():
     dask = msg.DaskWire()
-    frames = dask.encode_release([3, 9])
-    assert len(frames) == 2                      # per-key release
-    assert dask.decode(frames[0]) == (msg.OP_RELEASE, [3], None)
-    assert dask.decode(frames[1]) == (msg.OP_RELEASE, [9], None)
+    # regression: release historically emitted one frame PER KEY on the
+    # dask wire (retract/gather already used keys-lists) — the
+    # high-volume control plane coalesces the whole set into one frame
+    (rframe,) = dask.encode_release([3, 9])
+    assert dask.decode(rframe) == (msg.OP_RELEASE, [3, 9], None)
     (gframe,) = dask.encode_gather([4, 8, 15])
     assert dask.decode(gframe) == (msg.OP_GATHER, [4, 8, 15], None)
 
