@@ -115,6 +115,47 @@ def _bench_events(runtime: str, n_workers: int, n_graphs: int = 6,
     return rows
 
 
+def _bench_tracing(runtime: str, n_workers: int, n_graphs: int = 6,
+                   n_tasks: int = 300) -> list[tuple]:
+    """Tracing overhead: identical warm epochs on one Cluster with the
+    event feed on (the baseline tracing rides on) and with
+    ``tracing=True`` on top — worker-side clock stamps, piggybacked
+    timing records in the wire codecs, and one ``task-timing`` publish
+    per task.  The first epoch is discarded (warmup) and the *fastest*
+    remaining epoch is compared (min is far more noise-robust than
+    mean at millisecond epoch times); the gate is tracing/events
+    < 1.35x (docs/tracing.md).  The inherent cost is one extra publish
+    per task, which on ~25 us simulated tasks reads as ~1.1-1.2x here;
+    the gate exists to catch structural regressions (an extra frame
+    per task, O(n) work in the hot path — those read 2x+), not to
+    hide that floor."""
+    graphs = [benchgraphs.merge(n_tasks, seed=i) for i in range(n_graphs)]
+    per: dict[str, float] = {}
+    rows: list[tuple] = []
+    n_timing = 0
+    for mode in ("off", "on"):
+        with Cluster(server="rsds", runtime=runtime, n_workers=n_workers,
+                     simulate_durations=False, timeout=120.0,
+                     events=True, tracing=(mode == "on")) as c:
+            warm = []
+            for g in graphs:
+                t0 = time.perf_counter()
+                c.client.submit_graph(g).result(120.0)
+                warm.append(time.perf_counter() - t0)
+            if mode == "on":
+                n_timing = c.runtime.run_stats()["n_timing"]
+        per[mode] = float(np.min(warm[1:])) * 1e3
+        rows.append((f"client-{runtime}/tracing-{mode}",
+                     round(per[mode], 3),
+                     f"epochs=2..{n_graphs};tasks={n_tasks};events=on"))
+    ratio = per["on"] / max(per["off"], 1e-9)
+    verdict = "" if ratio <= 1.35 else "GATE-FAIL;"
+    rows.append((f"client-{runtime}/tracing-overhead", "",
+                 f"{verdict}tracing/events={ratio:.3f};"
+                 f"n_timing={n_timing};gate=<1.35"))
+    return rows
+
+
 def _bench_dispatch(n_workers: int = 8, n_epochs: int = 3,
                     n_tasks: int = 400) -> list[tuple]:
     """Per-task dispatch cost, batch envelope on vs off, measured by the
@@ -293,6 +334,9 @@ def run(runtime: str = "thread", n_graphs: int = 5, n_tasks: int = 300,
     rows.extend(_bench_events(runtime, n_workers,
                               n_graphs=max(3, n_graphs),
                               n_tasks=n_tasks))
+    rows.extend(_bench_tracing(runtime, n_workers,
+                               n_graphs=max(3, n_graphs),
+                               n_tasks=n_tasks))
     rows.extend(_bench_ingest())
     rows.extend(_bench_compaction())
     return rows

@@ -8,6 +8,8 @@ checks, a memory-pressure spill case (tiny memory_limit must force
 object-store spill with bit-correct results), an observability
 case (record a JSONL event log, replay it, require agreement with
 RunResult.stats AND protocol-spec conformance of the recorded trace),
+a tracing case per server (record a traced run, build per-task spans,
+require zero failed reconciliation checks and a conformant stream),
 a static-analysis case (`python -m repro.analysis` must report zero
 invariant findings), and schedule-exploration cases (200 distinct
 simulated interleavings per server, all conformant), each under a short
@@ -135,6 +137,52 @@ def _events_case(server: str):
     return r
 
 
+def _tracing_case(server: str):
+    """Tracing under the watchdog: record a traced process-runtime run,
+    build the spans, and require (a) a worker timing record per task,
+    (b) zero failed reconciliation checks against RunResult.stats, and
+    (c) protocol-spec conformance of the traced log — the
+    docs/tracing.md contract end-to-end."""
+    import os
+    import tempfile
+
+    from repro.core import benchgraphs, run_graph
+    from repro.core.tracing import TraceAnalysis, format_reconciliation
+
+    g = benchgraphs.merge(60)
+    with tempfile.TemporaryDirectory() as td:
+        log = os.path.join(td, "run.jsonl")
+        r = run_graph(g, server=server, runtime="process", n_workers=3,
+                      simulate_durations=False, events=log,
+                      tracing=True, timeout=30)
+        if not r.timed_out:
+            if r.stats.get("n_timing") != g.n_tasks:
+                raise AssertionError(
+                    f"n_timing {r.stats.get('n_timing')} != "
+                    f"{g.n_tasks} tasks")
+            ta = TraceAnalysis.from_jsonl(log)
+            partial = [s.tid for s in ta.spans if s.t_start is None]
+            if partial:
+                raise AssertionError(f"spans without worker timing: "
+                                     f"{partial[:10]}")
+            checks = ta.reconcile(r.stats, makespan=r.makespan)
+            if any(c["ok"] is False for c in checks):
+                raise AssertionError("reconciliation failed:\n"
+                                     + format_reconciliation(checks))
+            from repro.analysis.trace import run_trace
+            findings, _ = run_trace([log])
+            if findings:
+                raise AssertionError(
+                    "traced stream violates the protocol spec:\n"
+                    + "\n".join(f"  {f.key}: {f.message}"
+                                for f in findings[:10]))
+            a = ta.attribution()
+            r.detail = (f"spans={a['n_spans']} "
+                        f"util={a['utilization_pct']:.1f}% "
+                        f"checks={len(checks)}")
+    return r
+
+
 def _explore_case(server: str):
     """Schedule exploration under the watchdog: 200 distinct simulated
     interleavings under the seeded controller, every recorded stream
@@ -254,6 +302,8 @@ def _cases():
         yield (f"spill/{server}", lambda s=server: _spill_case(s))
     for server in ("dask", "rsds"):
         yield (f"events/{server}", lambda s=server: _events_case(s))
+    for server in ("dask", "rsds"):
+        yield (f"tracing/{server}", lambda s=server: _tracing_case(s))
     for server in ("dask", "rsds"):
         yield (f"explore/{server}", lambda s=server: _explore_case(s))
     for driver in ("selector", "asyncio"):

@@ -35,7 +35,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.events import load_jsonl, replay  # noqa: E402
+from repro.core.events import (                   # noqa: E402
+    load_jsonl, replay, stream_integrity)
 
 CLEAR = "\x1b[2J\x1b[H"
 BOLD, DIM, RESET = "\x1b[1m", "\x1b[2m", "\x1b[0m"
@@ -66,6 +67,11 @@ def render(snap: dict, title: str) -> str:
              f"steals={snap.get('n_steals', 0)}  "
              f"rehints={snap.get('n_rehints', 0)}  "
              f"events={snap.get('n_events', 0)}"]
+    dropped = snap.get("n_dropped", 0)
+    if dropped:
+        lines[0] += (f"  {BOLD}DROPPED={dropped}{RESET} "
+                     f"(gaps={snap.get('n_seq_gaps', '?')};"
+                     f" reconstruction is partial)")
     limit = snap.get("memory_limit")
     lines.append(f"mem_limit={_fmt_bytes(limit) if limit else 'unbounded'}"
                  f"  spill={_fmt_bytes(snap.get('spill_bytes', 0))}"
@@ -171,6 +177,14 @@ def run_replay(args) -> int:
     if not events:
         print(f"empty log: {args.replay}", file=sys.stderr)
         return 2
+    integ = stream_integrity(events)
+    if not integ["complete"]:
+        print(f"warning: log is missing {integ['n_missing']} event(s) "
+              f"across {integ['n_gaps']} seq gap(s) (first seq "
+              f"{integ['first_seq']}) — rotated files beyond the "
+              f"retention window or a truncated tail; occupancy and "
+              f"counters below are partial", file=sys.stderr)
+        time.sleep(1.0)
     t0 = events[0].get("t", 0.0)
     frame_dt = 1.0 / args.fps
     next_frame = 0.0
@@ -202,6 +216,8 @@ def run_replay(args) -> int:
                                       if d["pressured"]],
                     "event_counts": s["by_type"],
                     "last_events": window[-12:],
+                    "n_dropped": integ["n_missing"],
+                    "n_seq_gaps": integ["n_gaps"],
                 }
                 sys.stdout.write(render(
                     snap, f"repro dashboard (replay {shown / args.speed:.1f}s"

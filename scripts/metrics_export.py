@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Prometheus text-format snapshot of the cluster's meters.
+
+Renders ``Cluster.observe()`` and/or ``RunResult.stats`` dicts (the
+surfaces documented in docs/meters.md) as Prometheus exposition format
+— ``# HELP`` / ``# TYPE`` lines plus samples — so a run's meters can be
+pushed to a Pushgateway or diffed as text in CI.  Cumulative meters
+(``n_*``, ``*_bytes``, ``msgs_*`` …) become counters, point-in-time
+ones gauges; per-worker dicts become labelled samples
+(``repro_tasks_per_worker{wid="1"}``), per-type event counts become
+``repro_events_by_type_total{type="task-queued"}``.
+
+Usage::
+
+    # from a saved snapshot: {"observe": {...}, "stats": {...}} — or a
+    # bare observe()/stats dict
+    PYTHONPATH=src python scripts/metrics_export.py snapshot.json
+    ... | PYTHONPATH=src python scripts/metrics_export.py -
+
+    # self-contained demo (runs a small graph, prints its metrics)
+    PYTHONPATH=src python scripts/metrics_export.py --demo
+
+Programmatic use::
+
+    from scripts.metrics_export import render_metrics
+    text = render_metrics(observe=cluster.observe(), stats=result.stats)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PREFIX = "repro"
+
+#: metric name -> help line; anything absent falls back to a generic
+#: pointer at docs/meters.md (kept terse on purpose — meters.md is the
+#: authoritative description, this is the scrape-side echo).
+HELP = {
+    "n_workers": "live workers in the pool",
+    "n_finished": "tasks finished since server start",
+    "n_steals": "successful work-stealing retractions",
+    "n_rehints": "placement rehints sent to workers",
+    "n_frames_sent": "control frames handed to the transport",
+    "frames_coalesced": "frames absorbed into batch envelopes",
+    "dispatch_ns_per_task": "mean server-side dispatch+encode cost",
+    "server_busy": "seconds the server loop spent non-idle",
+    "spill_bytes": "bytes spilled to disk by workers",
+    "unspill_bytes": "bytes read back from spill files",
+    "n_events": "events published to the structured feed",
+    "n_timing": "worker timing records folded (tracing=True)",
+    "msgs_in": "protocol messages decoded by the server",
+    "msgs_out": "protocol messages encoded by the server",
+    "bytes_coded": "payload bytes through the wire codec",
+    "tasks_per_worker": "finished-task count per worker",
+    "worker_mem": "resident store bytes per worker",
+    "queues": "dispatched-but-unfinished depth per worker",
+    "events_by_type": "events published per event type",
+    "n_dead_workers": "workers reported lost",
+    "n_mem_pressured": "workers above the memory high-water mark",
+    "n_open_epochs": "epochs ingested but not yet closed",
+}
+
+#: Cumulative ("counter") meters; everything else is a gauge.
+_COUNTER = re.compile(
+    r"^(n_|msgs_|bytes_|frames_|releases$|spill_|unspill_|.*_count$"
+    r"|.*_bytes$|.*_total$)")
+
+#: observe() keys that are not numeric meters (timestamps, raw event
+#: payloads, config echoes) — skipped rather than mangled.
+_SKIP = ("t", "driver", "last_events", "memory_limit", "tid_base",
+         "peak_worker_bytes")
+
+
+def _sample(name: str, value, labels: dict | None = None) -> str:
+    lab = ""
+    if labels:
+        lab = "{" + ",".join(
+            f'{k}="{v}"' for k, v in sorted(labels.items())) + "}"
+    return f"{PREFIX}_{name}{lab} {float(value):g}"
+
+
+def render_metrics(observe: dict | None = None,
+                   stats: dict | None = None) -> str:
+    """Render the two meter surfaces as Prometheus exposition text.
+    Later surfaces win on name collisions (stats is the run's final
+    word; observe is a live snapshot)."""
+    metrics: dict = {}      # name -> (help, type, [sample lines])
+
+    _gauges = ("n_workers", "n_dead_workers", "n_mem_pressured",
+               "n_open_epochs")
+
+    def emit(name, value, labels=None):
+        kind = ("gauge" if name in _gauges
+                else "counter" if _COUNTER.match(name) else "gauge")
+        slot = metrics.setdefault(
+            name, (HELP.get(name, "see docs/meters.md"), kind, []))
+        slot[2].append(_sample(name, value, labels))
+
+    def fold(surface: dict):
+        for key, val in surface.items():
+            if key in _SKIP or val is None:
+                continue
+            if key == "event_counts":
+                for etype, n in sorted(val.items()):
+                    emit("events_by_type", n, {"type": etype})
+            elif key in ("tasks_per_worker", "worker_mem", "queues"):
+                for wid, n in sorted(val.items(), key=lambda kv:
+                                     int(kv[0])):
+                    emit(key, n, {"wid": wid})
+            elif key == "dead":
+                emit("n_dead_workers", len(val))
+            elif key == "mem_pressured":
+                emit("n_mem_pressured", len(val))
+            elif key == "open_epochs":
+                emit("n_open_epochs", len(val))
+            elif isinstance(val, (int, float)) \
+                    and not isinstance(val, bool):
+                emit(key, val)
+
+    for surface in (observe, stats):
+        if surface:
+            # name collision between surfaces: keep the later one
+            probe = dict(surface)
+            for key in list(metrics):
+                if key in probe:
+                    del metrics[key]
+            fold(probe)
+    out = []
+    for name in sorted(metrics):
+        help_, kind, samples = metrics[name]
+        out.append(f"# HELP {PREFIX}_{name} {help_}")
+        out.append(f"# TYPE {PREFIX}_{name} {kind}")
+        out.extend(samples)
+    return "\n".join(out) + "\n"
+
+
+def _demo() -> str:
+    from repro.core import benchgraphs
+    from repro.core.client import Cluster
+    with Cluster(server="rsds", n_workers=2, runtime="thread",
+                 events=True, tracing=True) as c:
+        gf = c.client.submit_graph(benchgraphs.merge(20))
+        if not gf.wait(60):
+            raise SystemExit("demo run timed out")
+        obs = c.observe()
+        stats = c.run_result(gf).stats
+    return render_metrics(observe=obs, stats=stats)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", nargs="?",
+                    help="JSON file with observe()/stats dicts"
+                         " ('-' reads stdin)")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a small in-process graph and print its"
+                         " metrics")
+    args = ap.parse_args(argv)
+    if args.demo:
+        sys.stdout.write(_demo())
+        return 0
+    if not args.snapshot:
+        ap.error("need a snapshot file or --demo")
+    fh = sys.stdin if args.snapshot == "-" else open(args.snapshot)
+    with fh:
+        snap = json.load(fh)
+    observe = snap.get("observe") if isinstance(snap, dict) else None
+    stats = snap.get("stats") if isinstance(snap, dict) else None
+    if observe is None and stats is None:
+        observe = snap          # bare observe()/stats dict
+    sys.stdout.write(render_metrics(observe=observe, stats=stats))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

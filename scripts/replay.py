@@ -35,7 +35,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.events import format_summary, load_jsonl, replay  # noqa: E402
+from repro.core.events import (                    # noqa: E402
+    format_summary, load_jsonl, replay, stream_integrity)
 
 
 def main(argv=None) -> int:
@@ -45,6 +46,10 @@ def main(argv=None) -> int:
                     help="emit the full summary dict as JSON")
     ap.add_argument("--stream", type=int, default=12, metavar="N",
                     help="task-stream rows shown per worker (default 12)")
+    ap.add_argument("--attribution", action="store_true",
+                    help="append the per-segment overhead-attribution"
+                         " report (needs a tracing=True recording for"
+                         " worker-side segments)")
     args = ap.parse_args(argv)
     if not os.path.exists(args.log) \
             and not os.path.exists(args.log + ".1"):
@@ -54,12 +59,21 @@ def main(argv=None) -> int:
     if not events:
         print(f"empty log: {args.log}", file=sys.stderr)
         return 2
+    integ = stream_integrity(events)
+    if not integ["complete"]:
+        print(f"warning: {integ['n_missing']} event(s) missing across "
+              f"{integ['n_gaps']} seq gap(s) — totals below are partial",
+              file=sys.stderr)
     summary = replay(events)
     if args.json:
         json.dump(summary, sys.stdout, indent=2, default=repr)
         print()
     else:
         print(format_summary(summary, max_stream_rows=args.stream))
+    if args.attribution:
+        from repro.core.tracing import TraceAnalysis, format_attribution
+        print()
+        print(format_attribution(TraceAnalysis.from_events(events)))
     return 0
 
 

@@ -40,6 +40,7 @@ import time
 
 from repro.core import benchgraphs
 from repro.core.client import Cluster
+from repro.core.events import load_jsonl
 
 DRIVERS = ("selector", "asyncio")
 
@@ -59,16 +60,11 @@ def epochs_from_trace(path: str, cap: int | None = None) -> list:
     """Rebuild the epoch shape of a recorded run: one merge graph per
     ``epoch-open`` event, sized to the recorded ``n_tasks`` (the log
     carries counts and timing, not the dependency structure — the
-    high-fan-out shape is the control-plane-saturating stand-in)."""
-    sizes = []
-    with open(path) as fh:
-        for line in fh:
-            line = line.strip()
-            if not line:
-                continue
-            ev = json.loads(line)
-            if ev.get("type") == "epoch-open":
-                sizes.append(max(int(ev["n_tasks"]) - 1, 1))
+    high-fan-out shape is the control-plane-saturating stand-in).
+    Rotated logs (``path.1`` …) are stitched back oldest-first."""
+    sizes = [max(int(ev["n_tasks"]) - 1, 1)
+             for ev in load_jsonl(path)
+             if ev.get("type") == "epoch-open"]
     if not sizes:
         raise SystemExit(f"{path}: no epoch-open events found")
     if cap:

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Export a recorded event log as a Chrome-trace / Perfetto JSON file.
+
+Reads a JSONL event log recorded with ``events=<path>`` (and
+``tracing=True`` for worker-side execution slices), assembles per-task
+spans via :mod:`repro.core.tracing`, and writes the Chrome trace-event
+format: one thread lane per worker carrying its execution slices (with
+scheduling/transport/observation segments in each slice's ``args``),
+plus a server lane with one slice per epoch.  Load the output at
+``chrome://tracing`` or https://ui.perfetto.dev.
+
+Usage::
+
+    PYTHONPATH=src python scripts/trace_export.py /tmp/run.jsonl \
+        -o /tmp/run.trace.json
+    PYTHONPATH=src python scripts/trace_export.py /tmp/run.jsonl \
+        --attribution          # also print the text report to stdout
+
+Rotated logs (``run.jsonl.1`` …) are stitched back oldest-first
+automatically; span model and segment definitions: docs/tracing.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.tracing import (                            # noqa: E402
+    TraceAnalysis, format_attribution, format_reconciliation)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("log", help="JSONL event log (rotations auto-joined)")
+    ap.add_argument("-o", "--out", metavar="PATH",
+                    help="output path (default: <log>.trace.json)")
+    ap.add_argument("--attribution", action="store_true",
+                    help="also print the overhead-attribution report")
+    ap.add_argument("--reconcile", action="store_true",
+                    help="also run the span-internal reconciliation"
+                         " checks; exit 1 if any fail")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.log) \
+            and not os.path.exists(args.log + ".1"):
+        print(f"no such log: {args.log}", file=sys.stderr)
+        return 2
+    ta = TraceAnalysis.from_jsonl(args.log)
+    if not ta.spans:
+        print(f"no task spans in {args.log} (recorded without"
+              f" events=/tracing=?)", file=sys.stderr)
+        return 2
+    out = args.out or args.log + ".trace.json"
+    ct = ta.to_chrome_trace()
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(ct, f)
+    print(f"wrote {out}: {len(ct['traceEvents'])} trace events, "
+          f"{len(ta.spans)} spans, {ta.n_workers} workers")
+    if args.attribution:
+        print(format_attribution(ta))
+    if args.reconcile:
+        checks = ta.reconcile()
+        print(format_reconciliation(checks))
+        if any(c["ok"] is False for c in checks):
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,6 +52,7 @@ EVENT_FIELDS = {
     "steal-failed": ("tid",),
     "task-rehint": ("tid", "wid"),
     "fetch-failed": ("tid", "wid", "n_missing"),
+    "task-timing": ("tid", "wid", "recv", "start", "end", "fetch"),
     "worker-join": ("wid",),
     "worker-lost": ("wid", "n_lost"),
     "worker-pressure": ("wid", "pressured", "mem_bytes"),
@@ -79,8 +80,11 @@ WORKER_EVENTS = (
 )
 EPOCH_EVENTS = ("epoch-open", "epoch-close")
 #: No per-entity state: envelope/field/ledger checks only.
+#: ``task-timing`` is stateless by design: it reports worker-clock
+#: measurements about an already-validated finish, and may legally
+#: arrive for a task whose worker was since lost (in-flight frame).
 STATELESS_EVENTS = (
-    "stream-open", "release", "compact",
+    "stream-open", "release", "compact", "task-timing",
     "request-enter", "request-admit", "request-exit", "train-step",
 )
 

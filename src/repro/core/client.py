@@ -432,6 +432,18 @@ class Cluster:
         :meth:`repro.core.server.ServerCore.observe`)."""
         return self.runtime.observe()
 
+    def trace_analysis(self):
+        """Build a :class:`repro.core.tracing.TraceAnalysis` from the
+        live event ring.  Requires the cluster to have been built with
+        ``events=`` (and ``tracing=True`` for worker-side segments —
+        without it the spans carry server-side boundaries only)."""
+        from .tracing import TraceAnalysis
+        bus = self.events
+        if bus is None:
+            raise RuntimeError(
+                "trace_analysis() needs events= (and tracing=True)")
+        return TraceAnalysis.from_events(bus.since(-1))
+
     def run_result(self, gf: GraphFutures,
                    timed_out: bool = False) -> RunResult:
         """Derive a back-compat :class:`RunResult` for one graph epoch

@@ -80,6 +80,9 @@ EVENT_TYPES: dict[str, tuple[str, ...]] = {
     "steal-failed": ("tid",),
     "task-rehint": ("tid", "wid"),           # proactive hint rewrite
     "fetch-failed": ("tid", "wid", "n_missing"),
+    # tracing (Cluster(tracing=True)): worker-clock timestamps in the
+    # worker's own perf_counter domain — repro.core.tracing aligns them
+    "task-timing": ("tid", "wid", "recv", "start", "end", "fetch"),
     # worker membership / memory ledger
     "worker-join": ("wid",),
     "worker-lost": ("wid", "n_lost"),
@@ -307,6 +310,38 @@ def load_jsonl(path: str | os.PathLike,
                 except ValueError:
                     continue
     return events
+
+
+def stream_integrity(events: Iterable[dict]) -> dict:
+    """Completeness report for a recorded stream: seq coverage and gap
+    count.  A recorded log is written by a push sink, so it normally
+    has every seq from 0; missing seqs mean rotated files beyond the
+    ``load_jsonl`` ``max_rotations`` window were dropped, a crash ate a
+    tail, or a ring snapshot (``EventBus.since``) aged events out —
+    either way downstream reconstructions (replay, tracing) are partial
+    and the UIs surface it.  A ``stream-open`` event resets the seq
+    expectation (logs can hold several recording sessions)."""
+    n_events = 0
+    n_gaps = n_missing = 0
+    first_seq = last_seq = None
+    prev = None
+    for ev in events:
+        n_events += 1
+        seq = ev.get("seq")
+        if seq is None:
+            continue
+        if ev.get("type") == "stream-open":
+            prev = None
+        if first_seq is None:
+            first_seq = seq
+        if prev is not None and seq > prev + 1:
+            n_gaps += 1
+            n_missing += seq - prev - 1
+        prev = last_seq = seq
+    return {"n_events": n_events, "first_seq": first_seq,
+            "last_seq": last_seq, "n_gaps": n_gaps,
+            "n_missing": n_missing,
+            "complete": n_gaps == 0 and (first_seq in (None, 0))}
 
 
 def replay(events: Iterable[dict]) -> dict:

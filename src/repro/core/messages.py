@@ -145,6 +145,7 @@ class _ByteCounters:
     _payload_bytes = 0
     _gather_bytes = 0
     _last_usage: tuple | None = None
+    _timing: list | None = None
 
     def take_payload_bytes(self) -> int:
         out, self._payload_bytes = self._payload_bytes, 0
@@ -158,6 +159,24 @@ class _ByteCounters:
         """Usage record from the last decoded finished/stats frame, or
         None when that frame carried none (drained on read)."""
         out, self._last_usage = self._last_usage, None
+        return out
+
+    def _add_timing(self, records: Iterable) -> None:
+        # accumulate (not last-wins like usage): an OP_BATCH decode
+        # recurses through many sub-frames and every timing record must
+        # survive to the driver's drain
+        if self._timing is None:
+            self._timing = []
+        self._timing.extend(
+            tuple(int(x) for x in r) for r in records)
+
+    def take_timing(self) -> list[tuple] | None:
+        """Tracing records decoded since the last drain (``(tid,
+        recv_ns, start_ns, end_ns, fetch_ns)`` in the sending worker's
+        ``perf_counter_ns`` domain), or None when none arrived.  Same
+        take-style side channel as ``take_usage`` — timing rides
+        finished frames, never its own round-trip."""
+        out, self._timing = self._timing, None
         return out
 
 
@@ -197,11 +216,13 @@ class DaskWire(_ByteCounters):
 
     def encode_finished_batch(self, wid: int,
                               items: Sequence[tuple[int, Any]],
-                              usage: tuple | None = None
+                              usage: tuple | None = None,
+                              timing: Sequence[tuple] | None = None
                               ) -> list[bytes]:
-        """``usage`` (the worker's object-store usage record) rides the
-        LAST message of the batch — one extra dict field, keeping the
-        per-message cost profile honest."""
+        """``usage`` (the worker's object-store usage record) and
+        ``timing`` (per-task tracing records, ``(tid, recv_ns, start_ns,
+        end_ns, fetch_ns)``) ride the LAST message of the batch — extra
+        dict fields, keeping the per-message cost profile honest."""
         frames = []
         for i, (tid, result) in enumerate(items):
             m = {"op": OP_FINISHED, "key": int(tid), "worker": int(wid)}
@@ -211,8 +232,11 @@ class DaskWire(_ByteCounters):
                 m["nbytes"] = float(len(blob))
             else:
                 m["nbytes"] = 0.0
-            if usage is not None and i == len(items) - 1:
-                m["usage"] = [int(x) for x in usage]
+            if i == len(items) - 1:
+                if usage is not None:
+                    m["usage"] = [int(x) for x in usage]
+                if timing:
+                    m["timing"] = [[int(x) for x in r] for r in timing]
             frames.append(pack(m))
         return frames
 
@@ -328,6 +352,8 @@ class DaskWire(_ByteCounters):
                 payloads = {m["key"]: pickle.loads(m["data"])}
             if "usage" in m:
                 self._last_usage = tuple(int(x) for x in m["usage"])
+            if "timing" in m:
+                self._add_timing(m["timing"])
             return op, [(m["key"], m["worker"], m.get("nbytes", 0.0))], \
                 payloads
         if op == OP_RETRACT:
@@ -376,7 +402,9 @@ class StaticWire(_ByteCounters):
     header  = op:u8  flags:u8  count:u32
     flags: bit0 = pickled blob trails the records, bit1 = a fixed-size
     usage record (the worker's object-store meters, 6×i64) follows the
-    header on finished/stats frames — static layout, no codec cost
+    header on finished/stats frames, bit2 = a tracing section (count:u32
+    then per-task 5×i64 timing records) follows the usage record on
+    finished frames — static layout, no codec cost
     compute  record = tid:i64  duration:f64
     finished record = tid:i64  wid:i32  nbytes:f64
     retract  record = tid:i64  (also release/gather/fetch/fetch-failed)
@@ -395,6 +423,7 @@ class StaticWire(_ByteCounters):
     _RETRACT = struct.Struct("<q")
     _STATS = struct.Struct("<qq")
     _USAGE = struct.Struct("<qqqqqq")
+    _TIMING = struct.Struct("<qqqqq")   # tid recv start end fetch (ns)
     _SUB = struct.Struct("<I")      # batch sub-frame length prefix
 
     def encode_compute_batch(self, items: Sequence[tuple[int, float]],
@@ -424,7 +453,8 @@ class StaticWire(_ByteCounters):
 
     def encode_finished_batch(self, wid: int,
                               items: Sequence[tuple[int, Any]],
-                              usage: tuple | None = None
+                              usage: tuple | None = None,
+                              timing: Sequence[tuple] | None = None
                               ) -> list[bytes]:
         payloads = {int(t): r for t, r in items if r is not _NO_RESULT}
         blob = pickle.dumps(payloads, protocol=4) if payloads else b""
@@ -433,9 +463,14 @@ class StaticWire(_ByteCounters):
             self._FINISHED.pack(int(t), int(wid),
                                 nb if r is not _NO_RESULT else 0.0)
             for t, r in items)
-        flags = (1 if blob else 0) | (2 if usage is not None else 0)
+        flags = (1 if blob else 0) | (2 if usage is not None else 0) \
+            | (4 if timing else 0)
         head = (self._USAGE.pack(*(int(x) for x in usage))
                 if usage is not None else b"")
+        if timing:
+            head += self._SUB.pack(len(timing))
+            head += b"".join(self._TIMING.pack(*(int(x) for x in r))
+                             for r in timing)
         return [self._HDR.pack(OP_FINISHED, flags, len(items))
                 + head + body + blob]
 
@@ -536,6 +571,13 @@ class StaticWire(_ByteCounters):
         if has_blob & 2:        # fixed-layout usage record (finished/stats)
             self._last_usage = self._USAGE.unpack_from(raw, off)
             off += self._USAGE.size
+        if has_blob & 4:        # tracing section (finished frames)
+            (n_tim,) = self._SUB.unpack_from(raw, off)
+            off += self._SUB.size
+            self._add_timing(
+                self._TIMING.unpack_from(raw, off + i * self._TIMING.size)
+                for i in range(n_tim))
+            off += n_tim * self._TIMING.size
         has_blob &= 1
         if op in (OP_COMPUTE, OP_UPDATE_GRAPH):
             rec, recs = self._COMPUTE, []

@@ -201,7 +201,7 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                  tasks_table, cleanup_fds, p2p: bool = False,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None,
-                 batching: bool = True) -> None:
+                 batching: bool = True, tracing: bool = False) -> None:
     """Single-threaded worker process: recv compute frames, execute, send
     finished frames.  Mirrors the paper's one-thread-per-worker setup —
     and is identical under every server driver (the architecture axis is
@@ -228,7 +228,14 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
     finished frames carry no result data (the server fetches on demand
     over gather frames).  A dependency that cannot be fetched (holder
     died) is reported via a fetch-failed frame and the server re-routes
-    or relays."""
+    or relays.
+
+    With ``tracing`` the worker stamps each task with its own
+    ``perf_counter_ns`` clock — frame receive, execution start/end, and
+    cumulative p2p dep-fetch time — and piggybacks the records on the
+    finished frames (both wire codecs), exactly like the usage records.
+    The server converts them to ``task-timing`` events and
+    :mod:`repro.core.tracing` aligns the per-worker clocks offline."""
     _close_fds(cleanup_fds)
     ep = tp.make_worker_endpoint(endpoint_args)
     wire = msg.make_wire(wire_name)
@@ -244,6 +251,8 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
     peers: dict[tuple, tp.PeerChannel] = {}
     xfer = {"bytes": 0, "fetches": 0, "bytes_sent": 0, "fetches_sent": 0}
     sent_usage: list = [None]
+    timing: list[tuple] = []        # (tid, recv, start, end, fetch) ns
+    fetch_ns = [0]                  # p2p fetch time within current task
     alive = True
 
     listener = None
@@ -300,7 +309,12 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
                 if ch is None:
                     ch = peers[addr] = tp.PeerChannel(addr)
                 (req,) = wire.encode_fetch(ds)
-                raw = ch.request(req)
+                if tracing:
+                    f0 = time.perf_counter_ns()
+                    raw = ch.request(req)
+                    fetch_ns[0] += time.perf_counter_ns() - f0
+                else:
+                    raw = ch.request(req)
                 xfer["bytes"] += len(req) + len(raw)
                 xfer["fetches"] += 1
                 _, _absent, payload = wire.decode(raw)
@@ -323,8 +337,10 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         new_u = usage if usage != sent_usage[0] else None
         frames: list[bytes] = []
         if out:
-            frames.extend(wire.encode_finished_batch(wid, out, new_u))
+            frames.extend(wire.encode_finished_batch(
+                wid, out, new_u, timing=timing or None))
             out.clear()
+            timing.clear()
             if new_u is not None:
                 sent_usage[0] = usage
                 new_u = None
@@ -356,9 +372,10 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
             data = extra.get("data") or {}
             deps = extra.get("deps") or {}
             hints = extra.get("hints") or {}
+            recv = time.perf_counter_ns() if tracing else 0
             for tid, dur in recs:
                 pending.append((tid, dur, data.get(tid),
-                                deps.get(tid), hints.get(tid)))
+                                deps.get(tid), hints.get(tid), recv))
         elif op == msg.OP_UPDATE_GRAPH:
             if payloads:
                 table.update(payloads)
@@ -413,10 +430,13 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
             if not alive:
                 break
             continue
-        tid, dur, data, deps, hints = pending.popleft()
+        tid, dur, data, deps, hints, recv = pending.popleft()
         if tid in retracted:
             retracted.discard(tid)
             continue
+        if tracing:
+            fetch_ns[0] = 0
+            start = time.perf_counter_ns()
         result = msg._NO_RESULT
         if not zero_worker:
             fn, fargs = table.get(tid, (None, ()))
@@ -439,6 +459,11 @@ def _worker_main(wid: int, endpoint_args, wire_name: str,
         # p2p: results stay in the worker cache; the finished frame is a
         # pure completion event (the server gathers on demand)
         out.append((tid, msg._NO_RESULT if p2p else result))
+        if tracing:
+            # start->end brackets dep resolution + execution; fetch is
+            # the p2p dep-fetch time nested inside it
+            timing.append((tid, recv, start, time.perf_counter_ns(),
+                           fetch_ns[0]))
         # accumulate completions while more work is queued: the static
         # wire batches natively (RSDS), the dask wire rides the batch
         # envelope when the batching knob is on (BatchedSend); with both
@@ -525,7 +550,7 @@ class _ProcessDriver(Driver):
                           self._tp.child_cleanup(wid)
                           if ctx_name == "fork" else [],
                           core.p2p, core.memory_limit, core.spill_dir,
-                          self.batching),
+                          self.batching, core.tracing),
                     daemon=True)
                 p.start()
                 self.procs.append(p)
@@ -692,7 +717,8 @@ class _ProcessDriver(Driver):
             core.wire_frames += 1
             op, recs, payloads = core._charge_codec(self.wire.decode, raw)
             if wid in core.dead:
-                self.wire.take_usage()      # drop the stale side-channel
+                self.wire.take_usage()      # drop the stale side-channels
+                self.wire.take_timing()
                 continue      # stale frame from a failed worker
             ev = msg.frame_event(op, wid, recs, payloads)
             if ev is not None:
@@ -705,6 +731,9 @@ class _ProcessDriver(Driver):
             usage = self.wire.take_usage()
             if usage is not None:
                 out.append(("usage", wid, usage))
+            timing = self.wire.take_timing()
+            if timing:
+                out.append(("wtiming", wid, timing))
         return out
 
     # -- lifecycle ------------------------------------------------------
@@ -898,7 +927,8 @@ class ThreadRuntime(ServerCore):
                  balance_interval: float = 0.05, timeout: float = 300.0,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
-                 compact_threshold: int | None = 8192, events=None):
+                 compact_threshold: int | None = 8192, events=None,
+                 tracing: bool = False):
         self.zero_worker = zero_worker
         self.simulate_durations = simulate_durations
         # thread workers share the server's ObjectStore, so the memory
@@ -908,7 +938,7 @@ class ThreadRuntime(ServerCore):
                          timeout=timeout, memory_limit=memory_limit,
                          spill_dir=spill_dir, high_water=high_water,
                          compact_threshold=compact_threshold,
-                         events=events)
+                         events=events, tracing=tracing)
         self.transport = tp.InprocTransport(n_workers)
         self.driver.transport = self.transport
         self.queued: dict[int, list[int]] = {}
@@ -930,6 +960,7 @@ class ThreadRuntime(ServerCore):
             if item is None:
                 return
             tid = item
+            recv = time.perf_counter_ns() if self.tracing else 0
             if wid in self.dead:
                 continue
             with self._lock:
@@ -947,6 +978,7 @@ class ThreadRuntime(ServerCore):
             ev = self.events
             if ev is not None:
                 ev.publish("task-started", tid=tid, wid=wid)
+            start = time.perf_counter_ns() if self.tracing else 0
             if not self.zero_worker:
                 t = self.g.task(tid)
                 if t.fn is not None:
@@ -959,6 +991,11 @@ class ThreadRuntime(ServerCore):
                     time.sleep(t.duration)
             with self._lock:
                 self.running.pop(wid, None)
+            if self.tracing:
+                # same clock domain as the server (thread workers):
+                # _note_timing folds + publishes, offset ends up ~0
+                self._note_timing(
+                    wid, ((tid, recv, start, time.perf_counter_ns(), 0),))
             self.transport.worker_send(wid, ("finished", tid, wid))
 
 
@@ -980,7 +1017,8 @@ class ProcessRuntime(ServerCore):
                  driver: str = "selector", batching: bool = True,
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
-                 compact_threshold: int | None = 8192, events=None):
+                 compact_threshold: int | None = 8192, events=None,
+                 tracing: bool = False):
         if getattr(reactor, "simulate_codec", False):
             raise ValueError(
                 "ProcessRuntime needs a reactor with simulate_codec=False: "
@@ -1003,7 +1041,7 @@ class ProcessRuntime(ServerCore):
                          timeout=timeout, memory_limit=memory_limit,
                          spill_dir=spill_dir, high_water=high_water,
                          compact_threshold=compact_threshold,
-                         events=events)
+                         events=events, tracing=tracing)
         # p2p: dependency values move worker-to-worker over who_has hints
         # + direct fetch (Dask/RSDS-faithful data plane); off = every
         # payload rides compute/finished frames through the server
@@ -1061,7 +1099,11 @@ def run_graph(graph: TaskGraph, server: str = "rsds",
     structured event feed (:mod:`repro.core.events`), ``events=<path>``
     additionally records it to a rotating JSONL log replayable with
     ``scripts/replay.py``; ``RunResult.stats["n_events"]`` reports the
-    publish count.  Off (the default) costs nothing.
+    publish count.  Off (the default) costs nothing.  ``tracing=True``
+    (with ``events=`` set) additionally captures per-task worker-side
+    timestamps as ``task-timing`` events so :mod:`repro.core.tracing`
+    can decompose every task's latency into segments
+    (``scripts/trace_export.py`` / ``scripts/replay.py --attribution``).
 
     Back-compat wrapper over the persistent Cluster/Client API: spins a
     one-shot :class:`repro.core.client.Cluster` up, submits ``graph`` as a

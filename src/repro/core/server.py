@@ -340,7 +340,7 @@ class ServerCore:
                  memory_limit: int | None = None,
                  spill_dir: str | None = None, high_water: float = 0.8,
                  compact_threshold: int | None = 8192,
-                 events=None):
+                 events=None, tracing: bool = False):
         self.g = graph
         self.reactor = reactor
         self.n_workers = n_workers
@@ -360,7 +360,13 @@ class ServerCore:
         self.results: ObjectStore = ObjectStore(
             memory_limit=limit_here, spill_dir=spill_dir, name="server")
         # observability: None (the default) keeps every publish site at
-        # one attribute check — see repro.core.events
+        # one attribute check — see repro.core.events.  tracing=True
+        # additionally asks workers for per-task timing records
+        # (repro.core.tracing builds spans from them); it only produces
+        # events when a bus exists, so tracing without events= publishes
+        # nothing and the hot path stays at the same single check.
+        self.tracing = tracing
+        self.n_timing = 0             # worker timing records folded
         self.events = make_bus(events)
         if self.events is not None and not driver.remote_results:
             # in-process drivers share this one store with their
@@ -478,8 +484,10 @@ class ServerCore:
         self._range_epochs.append(e)
         ev = self.events
         if ev is not None:
+            # t_submit optional (schema-additive): the submit-side
+            # perf_counter stamp prices tracing's submit->ingest segment
             ev.publish("epoch-open", eid=e.eid, n_tasks=e.n_tasks,
-                       lo=lo, hi=hi)
+                       lo=lo, hi=hi, t_submit=e.t_submit)
         if e.remaining == 0:
             self._finish_epoch(e)
 
@@ -505,7 +513,7 @@ class ServerCore:
                 # would have, with an empty tid range, so every
                 # epoch-close pairs with an epoch-open.
                 ev.publish("epoch-open", eid=e.eid, n_tasks=e.n_tasks,
-                           lo=0, hi=0)
+                           lo=0, hi=0, t_submit=e.t_submit)
             ev.publish("epoch-close", eid=e.eid,
                        error=repr(e.error) if e.error else None)
         e.done_evt.set()
@@ -819,6 +827,25 @@ class ServerCore:
             self._charge(self.reactor.handle_memory_pressure, wid,
                          pressured)
 
+    def _note_timing(self, wid: int, records) -> None:
+        """Fold a worker's piggybacked per-task timing records into the
+        event feed (``task-timing``; worker-clock ``perf_counter_ns``
+        values converted to float seconds).  Records ride the finished
+        frame that reported the tasks and are published as that frame is
+        processed, so a ``task-timing`` always precedes its task's
+        ``task-finished`` in seq order — :mod:`repro.core.tracing`
+        aligns the worker clock and assembles the spans offline."""
+        if not records:
+            return
+        self.n_timing += len(records)
+        ev = self.events
+        if ev is None:
+            return
+        for tid, recv, start, end, fetch in records:
+            ev.publish("task-timing", tid=int(tid), wid=wid,
+                       recv=recv / 1e9, start=start / 1e9,
+                       end=end / 1e9, fetch=fetch / 1e9)
+
     # ------------------------------------------------------------------
     # protocol: dispatch, hints, parked tasks
     # ------------------------------------------------------------------
@@ -919,7 +946,15 @@ class ServerCore:
                     rerouted.extend(out)
                     continue
                 if ev is not None:
-                    ev.publish("task-queued", tid=int(tid), wid=wid)
+                    if self.tracing:
+                        # deps optional (schema-additive, tracing only):
+                        # lets critical-path extraction run offline from
+                        # the log alone
+                        ev.publish("task-queued", tid=int(tid), wid=wid,
+                                   deps=[int(d) for d
+                                         in self.g.inputs_of(tid)])
+                    else:
+                        ev.publish("task-queued", tid=int(tid), wid=wid)
                 by_wid.setdefault(wid, []).append(
                     (int(tid), float(durations[tid - base])))
             for wid, items in by_wid.items():
@@ -1179,6 +1214,8 @@ class ServerCore:
                     self.n_p2p_fetches += int(nfetch)
             elif kind == "usage":
                 self._note_usage(int(ev[1]), ev[2])
+            elif kind == "wtiming":
+                self._note_timing(int(ev[1]), ev[2])
         if finished:
             self._handle_finished(finished)
         # payload-byte accounting lives on the codec (it sees the blob
@@ -1394,6 +1431,7 @@ class ServerCore:
                              if self.events is not None else 0)
         stats["dispatch_ns_per_task"] = round(
             self.dispatch_s * 1e9 / max(self.n_dispatched, 1), 1)
+        stats["n_timing"] = self.n_timing
         return stats
 
     def observe(self) -> dict:

@@ -164,6 +164,32 @@ def test_events_off_publishes_nothing(runtime, kw):
     assert r.stats["n_events"] == 0
 
 
+@pytest.mark.parametrize("runtime,kw", CASES, ids=CASE_IDS)
+def test_events_off_with_tracing_publishes_nothing(runtime, kw):
+    """tracing=True with the event feed off: the workers may stamp
+    clocks and piggyback records, but no bus exists, so nothing is
+    published anywhere — tracing rides the events knob, it never
+    creates an output channel of its own."""
+    g = benchgraphs.merge(60)
+    r = run_graph(g, server="rsds", runtime=runtime, n_workers=3,
+                  simulate_durations=False, timeout=60.0, tracing=True,
+                  **kw)
+    assert not r.timed_out
+    assert r.stats["n_events"] == 0
+    assert r.stats["n_timing"] == 61     # records folded, not published
+
+
+def test_tracing_off_publishes_no_timing(tmp_path):
+    """events= without tracing=: the recorded stream carries no
+    task-timing events and no timing counters move — the tracing
+    instrumentation is zero-cost until explicitly enabled."""
+    r, evs = _record(tmp_path, "thread", {})
+    assert r.stats["n_timing"] == 0
+    assert not any(e["type"] == "task-timing" for e in evs)
+    assert not any("deps" in e for e in evs
+                   if e["type"] == "task-queued")
+
+
 def test_cluster_live_surface(tmp_path):
     """events=True on a persistent Cluster: the bus is reachable while
     the pool runs, observe() snapshots agree with the ledger, and the

@@ -1,0 +1,309 @@
+"""Per-task distributed tracing: spans, clock alignment, attribution,
+critical path, reconciliation, Chrome-trace export (docs/tracing.md).
+
+Covers the PR-10 tentpole contract:
+
+* record -> build_spans -> attribution/reconcile on the thread and
+  process engines (one instrumentation pass, every driver), including
+  rotated multi-file logs,
+* the min-delay clock-alignment estimator on synthetic streams with a
+  large worker-clock offset and out-of-order timing arrival,
+* a worker lost mid-span closes the span as ``status="lost"``,
+* reconciliation against ``RunResult.stats`` (zero-worker and
+  array-reduction graphs — the acceptance gate),
+* Chrome-trace export shape: one lane per worker, slices never overlap
+  within a lane, a server lane carries the epoch slices.
+
+Recorded tracing runs must stay protocol-conformant: this module is NOT
+exempt from the autouse conformance fixture, and the rotated-log test
+additionally runs the offline checker over the recorded chain.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import benchgraphs, run_graph
+from repro.core.client import Cluster
+from repro.core.events import EventBus, JsonlEventLog, load_jsonl
+from repro.core.tracing import (SEGMENTS, TaskSpan, TraceAnalysis,
+                                build_spans, format_attribution,
+                                format_reconciliation, worker_offsets)
+
+CASES = [
+    ("thread", {}),
+    ("process", {"driver": "selector", "start_method": "fork"}),
+]
+CASE_IDS = ["inproc", "selector"]
+
+
+def _trace(tmp_path, runtime, kw, graph=None, **extra):
+    log = os.path.join(str(tmp_path), f"tr-{runtime}.jsonl")
+    g = graph if graph is not None else benchgraphs.merge(40)
+    r = run_graph(g, server="rsds", runtime=runtime, n_workers=3,
+                  simulate_durations=False, events=log, tracing=True,
+                  timeout=60.0, **kw, **extra)
+    assert not r.timed_out
+    return r, TraceAnalysis.from_jsonl(log)
+
+
+def _assert_reconciles(ta, r):
+    checks = ta.reconcile(r.stats, makespan=r.makespan)
+    bad = [c for c in checks if c["ok"] is False]
+    assert not bad, format_reconciliation(checks)
+
+
+# ---------------------------------------------------------------------------
+# record -> analyze on the real engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("runtime,kw", CASES, ids=CASE_IDS)
+def test_record_attribute_reconcile(tmp_path, runtime, kw):
+    """Every task yields a complete span on both engines, the segment
+    table covers the full vocabulary, and reconciliation against the
+    run's own meters passes with zero failures."""
+    r, ta = _trace(tmp_path, runtime, kw)
+    assert r.stats["n_timing"] == len(ta.spans) == 41
+    for s in ta.spans:
+        assert s.status == "ok"
+        seg = s.segments()
+        assert set(seg) == set(SEGMENTS), f"span {s.tid} partial: {seg}"
+        assert all(v >= 0 for v in seg.values())
+        assert s.eid == 0
+    a = ta.attribution()
+    assert a["n_ok"] == 41 and a["n_lost"] == 0
+    assert a["worker_seconds"] > 0
+    _assert_reconciles(ta, r)
+    # the sink merge task traced its 40 deps -> critical path is real
+    cp = ta.critical_path()
+    assert len(cp["path"]) >= 2
+    assert cp["path"][-1] == 40              # the merge sink
+    assert cp["length_s"] >= cp["exec_s"]
+
+
+def test_zero_worker_graph_reconciles(tmp_path):
+    """The paper's server-overhead isolation rig: zero-cost workers
+    still produce complete spans where execution is ~nothing and the
+    overhead segments carry the whole story."""
+    r, ta = _trace(tmp_path, "process",
+                   {"driver": "selector", "start_method": "fork"},
+                   zero_worker=True)
+    assert all(s.status == "ok" for s in ta.spans)
+    _assert_reconciles(ta, r)
+    a = ta.attribution()
+    assert a["exec_pure_s"] < a["worker_seconds"]
+
+
+def test_array_reduction_with_p2p_fetch(tmp_path):
+    """Real payloads over the process engine: p2p dep-fetch time is
+    captured nested inside execution (fetch <= started->finished) and
+    reconciliation still passes."""
+    g = benchgraphs.array_reduction(12, elems=512, fan=4)
+    r, ta = _trace(tmp_path, "process",
+                   {"driver": "selector", "start_method": "fork"},
+                   graph=g)
+    _assert_reconciles(ta, r)
+    for s in ta.spans:
+        assert s.fetch_s <= s.segments()["started->finished"] + 1e-9
+
+
+def test_rotated_log_chain(tmp_path):
+    """Tracing over a multi-file rotated log: the chain stitches back
+    oldest-first and spans stay complete; the offline protocol checker
+    is clean over the same chain."""
+    path = os.path.join(str(tmp_path), "rot.jsonl")
+    bus = EventBus()
+    bus.add_sink(JsonlEventLog(path, max_bytes=2048, keep=16,
+                               flush_every=1))
+    r = run_graph(benchgraphs.merge(30), server="rsds", runtime="thread",
+                  n_workers=3, simulate_durations=False, events=bus,
+                  tracing=True, timeout=60.0)
+    assert not r.timed_out
+    assert os.path.exists(f"{path}.1"), "log never rotated"
+    ta = TraceAnalysis.from_jsonl(path)
+    assert len(ta.spans) == 31
+    assert all(s.status == "ok" for s in ta.spans)
+    _assert_reconciles(ta, r)
+    from repro.analysis.trace import run_trace
+    findings, _ = run_trace([path])
+    assert findings == [], findings
+
+
+def test_cluster_trace_analysis_convenience(tmp_path):
+    """Cluster.trace_analysis() reads the live ring; without events=
+    it refuses loudly."""
+    with Cluster(server="rsds", runtime="thread", n_workers=2,
+                 simulate_durations=False, events=True, tracing=True,
+                 name="tr-live") as c:
+        c.client.submit_graph(benchgraphs.merge(20)).result(30)
+        ta = c.trace_analysis()
+        assert len(ta.spans) == 21
+        assert format_attribution(ta).startswith("trace attribution")
+    # no events= -> loud refusal (stubbed: the autouse conformance
+    # fixture injects a bus into any real events-less ServerCore)
+    stub = type("NoEvents", (), {"events": None})()
+    with pytest.raises(RuntimeError):
+        Cluster.trace_analysis(stub)
+
+
+# ---------------------------------------------------------------------------
+# clock alignment on synthetic streams
+# ---------------------------------------------------------------------------
+
+def _ev(seq, t, type_, **f):
+    return {"v": 1, "seq": seq, "t": t, "type": type_, **f}
+
+
+def _synthetic_stream(offset=1000.0, lost=False, shuffle_timing=False):
+    """Two tasks on one worker whose clock reads ``offset`` seconds
+    ahead of the server's; transport delay 1ms on the first dispatch
+    (the min pair), 3ms on the second."""
+    evs = [
+        _ev(0, 0.0, "stream-open", wall=1.0, pid=1),
+        _ev(1, 0.005, "epoch-open", eid=0, n_tasks=2, lo=0, hi=2,
+            t_submit=0.001),
+        _ev(2, 0.010, "task-queued", tid=0, wid=0, deps=[]),
+        _ev(3, 0.012, "task-dispatched", tid=0, wid=0),
+        _ev(4, 0.020, "task-queued", tid=1, wid=0, deps=[0]),
+        _ev(5, 0.022, "task-dispatched", tid=1, wid=0),
+    ]
+    timing = [
+        _ev(6, 0.060, "task-timing", tid=0, wid=0,
+            recv=offset + 0.013, start=offset + 0.014,
+            end=offset + 0.050, fetch=0.002),
+        _ev(7, 0.090, "task-timing", tid=1, wid=0,
+            recv=offset + 0.025, start=offset + 0.052,
+            end=offset + 0.080, fetch=0.0),
+    ]
+    finishes = [
+        _ev(8, 0.062, "task-finished", tid=0, wid=0),
+        _ev(9, 0.092, "task-finished", tid=1, wid=0),
+    ]
+    if shuffle_timing:
+        # timing frames can drain after later finishes (batch coalescing)
+        evs += [finishes[0], finishes[1], timing[1], timing[0]]
+    else:
+        evs += [timing[0], finishes[0], timing[1], finishes[1]]
+    if lost:
+        evs = evs[:6] + [timing[0], finishes[0],
+                         _ev(9, 0.070, "worker-lost", wid=0, n_lost=1)]
+    return evs
+
+
+def test_min_delay_offset_estimation():
+    """offset = min(recv - dispatch) over the worker's tasks: the 1ms
+    minimum pair wins, so the estimated offset absorbs the skew plus
+    the minimum transport delay only."""
+    offs = worker_offsets(_synthetic_stream(offset=1000.0))
+    assert offs == {0: pytest.approx(1000.001)}
+
+
+def test_aligned_spans_and_segments():
+    spans = {s.tid: s for s in build_spans(_synthetic_stream(1000.0))}
+    s0 = spans[0]
+    # aligned times land in the server domain, between dispatch/finish
+    assert s0.t_dispatched - 1e-9 <= s0.t_recv <= s0.t_start \
+        <= s0.t_end <= s0.t_observed + 1e-9
+    seg = s0.segments()
+    assert seg["submit->ingest"] == pytest.approx(0.004)
+    assert seg["ingest->schedulable"] == pytest.approx(0.005)
+    assert seg["schedulable->dispatched"] == pytest.approx(0.002)
+    assert seg["started->finished"] == pytest.approx(0.036)
+    assert s0.exec_s == pytest.approx(0.034)      # fetch nested
+    # task 1 paid 3ms transport against a 1ms floor -> 2ms visible
+    assert spans[1].segments()["dispatched->started"] == \
+        pytest.approx(0.030 - 0.001, abs=1e-6)
+    assert spans[1].deps == (0,)
+
+
+def test_out_of_order_timing_arrival():
+    """Timing frames drained after later tasks' finishes still attach
+    to the right spans (matched by tid, not position)."""
+    a = build_spans(_synthetic_stream(1000.0, shuffle_timing=True))
+    b = build_spans(_synthetic_stream(1000.0, shuffle_timing=False))
+    for sa, sb in zip(a, b):
+        assert sa.segments() == sb.segments()
+        assert sa.status == sb.status == "ok"
+
+
+def test_lost_worker_closes_span_as_lost():
+    """A task dispatched to a worker that dies before finishing closes
+    at the worker-lost timestamp with status='lost' and is excluded
+    from attribution/reconciliation sums."""
+    evs = _synthetic_stream(1000.0, lost=True)
+    spans = {s.tid: s for s in build_spans(evs)}
+    assert spans[0].status == "ok"
+    s1 = spans[1]
+    assert s1.status == "lost"
+    assert s1.t_observed == pytest.approx(0.070)
+    ta = TraceAnalysis.from_events(evs)
+    assert ta.n_lost == 1
+    assert ta.attribution()["n_ok"] == 1
+    assert not any(c["ok"] is False for c in ta.reconcile())
+    # a resubmission completing elsewhere supersedes the lost attempt
+    evs2 = evs + [
+        _ev(10, 0.080, "task-queued", tid=1, wid=1, deps=[0]),
+        _ev(11, 0.081, "task-dispatched", tid=1, wid=1),
+        _ev(12, 0.095, "task-finished", tid=1, wid=1),
+    ]
+    s1b = {s.tid: s for s in build_spans(evs2)}[1]
+    assert s1b.status == "ok" and s1b.wid == 1
+
+
+def test_span_tolerates_partial_stream():
+    """Boundaries missing from a truncated stream yield partial (never
+    negative, never crashing) segment tables."""
+    evs = _synthetic_stream(1000.0)[4:]      # lost the epoch + task 0 queue
+    spans = build_spans(evs)
+    for s in spans:
+        assert all(v >= 0 for v in s.segments().values())
+    assert TraceAnalysis.from_events([]).attribution()["n_spans"] == 0
+    assert build_spans([]) == []
+
+
+# ---------------------------------------------------------------------------
+# export + report
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_shape(tmp_path):
+    """One lane per worker plus a server lane; execution slices within
+    a lane never overlap (single-threaded workers); epoch slices ride
+    the server lane; the file is plain JSON."""
+    r, ta = _trace(tmp_path, "thread", {})
+    ct = ta.to_chrome_trace()
+    names = {e["args"]["name"] for e in ct["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "server" in names
+    assert {n for n in names if n.startswith("worker ")}
+    by_lane: dict = {}
+    for e in ct["traceEvents"]:
+        if e["ph"] == "X" and e.get("cat") == "exec":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+            by_lane.setdefault(e["tid"], []).append((e["ts"], e["dur"]))
+    assert by_lane, "no execution slices exported"
+    for slices in by_lane.values():
+        slices.sort()
+        for (t0, d0), (t1, _) in zip(slices, slices[1:]):
+            assert t0 + d0 <= t1 + 1.0       # 1us alignment slack
+    assert any(e.get("cat") == "epoch" for e in ct["traceEvents"])
+    out = os.path.join(str(tmp_path), "out.trace.json")
+    ta.write_chrome_trace(out)
+    with open(out, encoding="utf-8") as fh:
+        assert json.load(fh)["traceEvents"]
+
+
+def test_attribution_report_format(tmp_path):
+    r, ta = _trace(tmp_path, "thread", {})
+    text = format_attribution(ta)
+    for name in SEGMENTS:
+        assert name in text
+    assert "critical path" in text
+    rep = format_reconciliation(ta.reconcile(r.stats,
+                                             makespan=r.makespan))
+    assert "0 failed" in rep
+
+
+def test_task_span_defaults():
+    s = TaskSpan(tid=7)
+    assert s.segments() == {}
+    assert s.exec_s == 0.0 and s.end_to_end is None
